@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: XLA reference path wall time on CPU (the
+Pallas kernels target TPU; interpret=True timings are not meaningful perf
+numbers and are reported only as correctness artifacts)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _time_us(fn, reps=5) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernels() -> List[Row]:
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+
+    from repro.kernels.gauss5x5 import gauss5x5
+    f = jnp.asarray(rng.uniform(0, 255, (240, 320)), jnp.float32)
+    us = _time_us(lambda: jax.block_until_ready(gauss5x5(f, impl="xla")))
+    rows.append(("kernel_gauss5x5_qvga", us, f"{240*320/us:.0f} px/us"))
+
+    from repro.kernels.motion_post import motion_post
+    g = jnp.asarray(rng.uniform(0, 255, (240, 320)), jnp.float32)
+    us = _time_us(lambda: jax.block_until_ready(motion_post(f, g, impl="xla")))
+    rows.append(("kernel_motion_post_qvga", us, f"{240*320/us:.0f} px/us"))
+
+    from repro.kernels.dyn_fir import dpd_branch
+    L = 32768
+    xr = jnp.asarray(rng.normal(size=L + 9), jnp.float32)
+    xi = jnp.asarray(rng.normal(size=L + 9), jnp.float32)
+    h = jnp.asarray(rng.normal(size=10), jnp.float32)
+    us = _time_us(lambda: jax.block_until_ready(
+        dpd_branch(xr, xi, h, h, order=5, impl="xla")))
+    rows.append(("kernel_dpd_branch_32k", us, f"{L/us:.0f} samples/us"))
+
+    from repro.kernels.flash_attention import flash_attention
+    q = jnp.asarray(rng.normal(size=(1, 512, 8, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.bfloat16)
+    us = _time_us(lambda: jax.block_until_ready(
+        flash_attention(q, k, k, impl="xla")))
+    rows.append(("kernel_flash_attn_512_ref", us, "GQA 8q/2kv hd64"))
+
+    from repro.kernels.ssd import ssd
+    x = jnp.asarray(rng.normal(size=(1, 512, 8, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (1, 512, 8)), jnp.float32)
+    A = -jnp.ones((8,), jnp.float32)
+    B_ = jnp.asarray(rng.normal(size=(1, 512, 64)), jnp.float32)
+    us = _time_us(lambda: jax.block_until_ready(
+        ssd(x, dt, A, B_, B_, chunk=128, impl="xla")[0]))
+    rows.append(("kernel_ssd_512_ref", us, "chunked jnp path"))
+
+    from repro.kernels.rglru import rglru
+    la = jnp.asarray(-rng.uniform(0.01, 2.0, (1, 512, 256)), jnp.float32)
+    gx = jnp.asarray(rng.normal(size=(1, 512, 256)), jnp.float32)
+    us = _time_us(lambda: jax.block_until_ready(rglru(la, gx, impl="xla")[0]))
+    rows.append(("kernel_rglru_512_ref", us, "associative-scan path"))
+    return rows

@@ -1,0 +1,145 @@
+"""Benchmarks reproducing the paper's tables (CPU analogues).
+
+Mapping of the paper's hardware columns onto this container (DESIGN.md §2):
+  * "MC" (multicore GPP, per-actor threads)  -> interpreted executor
+    (one jitted dispatch per actor firing, no cross-actor fusion);
+  * "Heterog." (GPU-accelerated)             -> compiled executor
+    (whole network fused into one XLA program, token rate raised to 4 for
+    MD exactly as the paper does).
+The *ratios* are the reproduction target; absolute fps are CPU numbers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (collect_sink, compile_static, run_interpreted)
+from repro.graphs.dpd import BLOCK_L, build_dpd
+from repro.graphs.motion_detection import build_motion_detection
+
+Row = Tuple[str, float, str]
+
+
+def _time(fn: Callable[[], None], reps: int = 3) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+# --------------------------------------------------------------------------- #
+# Paper Table 1: communication-buffer memory.
+# --------------------------------------------------------------------------- #
+def bench_buffers() -> List[Row]:
+    rows = []
+    md_mc = build_motion_detection(8, rate=1).buffer_bytes() / 1e6
+    md_het = build_motion_detection(8, rate=4).buffer_bytes() / 1e6
+    dpd = build_dpd(4).buffer_bytes() / 1e6
+    rows.append(("table1_md_mc_MB", 0.0, f"{md_mc:.3f} (paper prop.: 0.85)"))
+    rows.append(("table1_md_heterog_MB", 0.0, f"{md_het:.3f} (paper prop.: 3.46)"))
+    rows.append(("table1_dpd_MB", 0.0, f"{dpd:.3f} (paper prop.: 11.5)"))
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Paper Table 3: Motion Detection throughput (fps).
+# --------------------------------------------------------------------------- #
+def bench_motion_detection(n_frames: int = 24) -> List[Row]:
+    rng = np.random.default_rng(0)
+    video = rng.uniform(0, 255, (n_frames, 240, 320)).astype(np.float32)
+    rows: List[Row] = []
+
+    # "MC": interpreted per-actor execution, rate 1 (paper: GPP rate 1).
+    net1 = build_motion_detection(n_frames, rate=1, video=jnp.asarray(video))
+    st1 = net1.init_state()
+    dt = _time(lambda: jax.block_until_ready(
+        run_interpreted(net1, st1, n_frames)["actors"]["sink"][0]), reps=1)
+    fps_mc = n_frames / dt
+    rows.append(("table3_md_interpreted_mc_fps", dt / n_frames * 1e6,
+                 f"{fps_mc:.0f} fps (paper MC: 485-1138)"))
+
+    # "Heterog": whole network compiled, rate 4 (paper's GPU token rate).
+    net4 = build_motion_detection(n_frames, rate=4, video=jnp.asarray(video))
+    run4 = compile_static(net4, n_frames // 4)
+    st4 = net4.init_state()
+    dt = _time(lambda: jax.block_until_ready(run4(st4)["actors"]["sink"][0]))
+    fps_het = n_frames / dt
+    rows.append(("table3_md_compiled_heterog_fps", dt / n_frames * 1e6,
+                 f"{fps_het:.0f} fps (paper heterog: 4614-6063)"))
+    rows.append(("table3_md_speedup", 0.0,
+                 f"{fps_het / fps_mc:.1f}x compiled/interpreted "
+                 f"(paper: 9.5x GPU/MC)"))
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Paper Table 4 + the 5x claim: DPD throughput (Msamples/s).
+# --------------------------------------------------------------------------- #
+def bench_dpd(n_firings: int = 8, block_l: int = BLOCK_L) -> List[Row]:
+    rng = np.random.default_rng(1)
+    sig = rng.normal(size=(2, n_firings * block_l)).astype(np.float32)
+    samples = n_firings * block_l
+    rows: List[Row] = []
+
+    def throughput(net, compiled=True) -> float:
+        if compiled:
+            run = compile_static(net, n_firings)
+            st = net.init_state()
+            dt = _time(lambda: jax.block_until_ready(run(st)["actors"]["sink"][0]))
+        else:
+            st = net.init_state()
+            dt = _time(lambda: jax.block_until_ready(
+                run_interpreted(net, st, n_firings)["actors"]["sink"][0]), reps=1)
+        return samples / dt / 1e6
+
+    # MC analogue: interpreted dynamic graph (avg ~6 filters active).
+    mixed = np.array([2, 10, 5, 7, 3, 9, 2, 10][:n_firings], np.int32)
+    net_mc = build_dpd(n_firings, active_schedule=mixed, block_l=block_l,
+                       signal=jnp.asarray(sig))
+    ms_mc = throughput(net_mc, compiled=False)
+    rows.append(("table4_dpd_interpreted_mc_Msps", 0.0,
+                 f"{ms_mc:.1f} Msamples/s (paper MC: 7-33)"))
+
+    # DAL-GPU analogue is impossible for dynamic rates (paper: n/a): the
+    # static rewrite (all 10 branches always on) is what DAL would need.
+    net_static = build_dpd(n_firings, block_l=block_l, signal=jnp.asarray(sig),
+                           static_all_active=True)
+    ms_static = throughput(net_static)
+    rows.append(("table4_dpd_compiled_static_all10_Msps", 0.0,
+                 f"{ms_static:.1f} Msamples/s (DAL-style: every branch computed)"))
+
+    # Proposed: dynamic rates on the accelerated path.
+    for label, sched in [("min_active2", np.full(n_firings, 2, np.int32)),
+                         ("mixed", mixed),
+                         ("all10", np.full(n_firings, 10, np.int32))]:
+        net = build_dpd(n_firings, active_schedule=sched, block_l=block_l,
+                        signal=jnp.asarray(sig))
+        ms = throughput(net)
+        rows.append((f"table4_dpd_compiled_dynamic_{label}_Msps", 0.0,
+                     f"{ms:.1f} Msamples/s"))
+        if label == "min_active2":
+            rows.append(("table4_dpd_dynamic_speedup_vs_static", 0.0,
+                         f"{ms / ms_static:.1f}x at n_active=2 wall-clock "
+                         f"(paper claim: up to 5x; see flops row)"))
+        if label == "mixed":
+            rows.append(("table4_dpd_compiled_vs_interpreted", 0.0,
+                         f"{ms / ms_mc:.1f}x (paper GPU/MC: 2.6-5.4x)"))
+
+    # Upper bound of the dynamic win on this host: structurally-2-branch
+    # vs structurally-10-branch static graphs (no dynamic machinery at
+    # all).  The gap between this ratio and the dynamic n_active=2 ratio
+    # above is the cost of XLA's *functional* conds still moving rate-r
+    # windows for disabled ports — analysis in EXPERIMENTS.md §Perf.
+    net2 = build_dpd(n_firings, block_l=block_l, n_branches=2,
+                     signal=jnp.asarray(sig), static_all_active=True)
+    ms2 = throughput(net2)
+    rows.append(("table4_dpd_structural_2branch_Msps", 0.0,
+                 f"{ms2:.1f} Msamples/s -> {ms2 / ms_static:.1f}x vs 10-branch "
+                 f"(compute-skip upper bound on this CPU; paper: 5x on "
+                 f"compute-bound GPUs)"))
+    return rows

@@ -1,0 +1,114 @@
+"""Roofline report generator: reads results/dryrun.json, emits the
+per-(arch x shape) table + per-cell dominant-term analysis used in
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def load(path: str = RESULTS):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def _advice(r) -> str:
+    """One sentence: what would move the dominant term down."""
+    b = r["bottleneck"]
+    shape = r["shape"]
+    coll = r.get("collective_bytes_per_device", {})
+    top_coll = max((k for k in coll if k != "total"),
+                   key=lambda k: coll[k], default=None)
+    if b == "collective_s":
+        if r["arch"].find("moe") >= 0 or r["arch"].find("olmoe") >= 0:
+            return ("local (per-data-shard) dispatch keeps the rank-cumsum "
+                    "and scatter on-shard — only the expert einsum "
+                    "communicates (§Perf: 39x compute / collective wins)")
+        return (f"dominant collective is {top_coll}; overlap it with the "
+                f"next microbatch's compute or re-shard to remove it")
+    if b == "memory_s":
+        if shape in ("decode_32k", "long_500k"):
+            return ("decode reads the whole KV ring per token: int8 KV "
+                    "(2.8x) + sequence-sharding the ring over the idle "
+                    "model axis (3.8x total, §Perf)")
+        if shape == "train_4k":
+            return ("activation traffic dominates (CPU cost model overstates "
+                    "absolute bytes): microbatching cuts peak temp ~2.7x "
+                    "(§Perf); on TPU, fused remat brings the term toward the "
+                    "compute roof")
+        return ("prefill activation traffic: larger attention blocks / "
+                "Pallas flash kernel keep the working set in VMEM")
+    return ("compute-bound — at the roof for this sharding; next levers are "
+            "kernel-level (Pallas attention/SSD) and per-chip batch size")
+
+
+def fmt_table(records, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| MODEL/HLO | step bound s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    notes = []
+    for r in records:
+        if r.get("mesh") != mesh or r.get("variant", "base") != "base":
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
+            f"{r['bottleneck'].replace('_s', '')} | "
+            f"{r['useful_flops_frac']:.2f} | {r['step_time_bound_s']:.3g} |")
+        notes.append(f"* **{r['arch']} × {r['shape']}** — {_advice(r)}")
+    return "\n".join(lines) + "\n\n" + "\n".join(notes)
+
+
+def bench_roofline() -> List[Row]:
+    records = load()
+    rows: List[Row] = []
+    ok = [r for r in records if r["status"] == "ok" and r["mesh"] == "16x16"]
+    for r in ok:
+        t = r["roofline"]
+        rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                     f"bottleneck={r['bottleneck'].replace('_s','')} "
+                     f"bound={r['step_time_bound_s']:.3g}s "
+                     f"useful={r['useful_flops_frac']:.2f}"))
+    n_multi = sum(1 for r in records
+                  if r["mesh"] == "2x16x16" and r["status"] == "ok")
+    n_skip = sum(1 for r in records
+                 if r["mesh"] == "16x16" and r["status"] == "skipped")
+    rows.append(("dryrun_cells_ok_single", 0.0, str(len(ok))))
+    rows.append(("dryrun_cells_skipped_single", 0.0,
+                 f"{n_skip} (documented long_500k exclusions)"))
+    rows.append(("dryrun_cells_ok_multi", 0.0, str(n_multi)))
+    # Hillclimb summary rows if present.
+    hc = os.path.join(os.path.dirname(RESULTS), "hillclimb.json")
+    if os.path.exists(hc):
+        with open(hc) as f:
+            hrs = [r for r in json.load(f) if r.get("status") == "ok"]
+        for r in hrs:
+            t = r["roofline"]
+            rows.append((f"hillclimb_{r['arch']}_{r['shape']}_{r['variant']}",
+                         0.0,
+                         f"compute={t['compute_s']:.3g}s "
+                         f"memory={t['memory_s']:.3g}s "
+                         f"collective={t['collective_s']:.3g}s"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(fmt_table(load()))

@@ -1,0 +1,35 @@
+"""Benchmark harness: one section per paper table + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows = []
+    from benchmarks.bench_paper_tables import (bench_buffers, bench_dpd,
+                                               bench_motion_detection)
+    from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.roofline import bench_roofline
+
+    sections = [
+        ("Table 1 (buffer memory)", bench_buffers),
+        ("Table 3 (Motion Detection)", bench_motion_detection),
+        ("Table 4 (DPD + 5x claim)", bench_dpd),
+        ("Kernels", bench_kernels),
+        ("Roofline (from dry-run)", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    for title, fn in sections:
+        print(f"# --- {title} ---", file=sys.stderr)
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{title}_ERROR,0,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Dynamic Predistortion demo (paper §4.2, Fig. 5): the Configuration
+actor reconfigures the active filter set at run time; dynamic data rates
+let the compiled path skip disabled Poly branches — the paper's headline
+up-to-5x win, measured here directly.
+
+    PYTHONPATH=src python examples/dpd_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compile_static
+from repro.graphs.dpd import build_dpd
+
+
+def throughput(net, n_firings, block_l):
+    run = compile_static(net, n_firings)
+    state = run(net.init_state())                    # warmup
+    t0 = time.perf_counter()
+    state = run(net.init_state())
+    jax.block_until_ready(state["actors"]["sink"][0])
+    dt = time.perf_counter() - t0
+    return n_firings * block_l / dt / 1e6
+
+
+def main():
+    n_firings, L = 8, 32768
+    rng = np.random.default_rng(0)
+    sig = jnp.asarray(rng.normal(size=(2, n_firings * L)), jnp.float32)
+
+    static_net = build_dpd(n_firings, block_l=L, signal=sig,
+                           static_all_active=True)
+    ms_static = throughput(static_net, n_firings, L)
+    print(f"static (all 10 branches, DAL-style): {ms_static:7.1f} Msamples/s")
+
+    for n_active in (2, 5, 10):
+        sched = np.full(n_firings, n_active, np.int32)
+        net = build_dpd(n_firings, active_schedule=sched, block_l=L, signal=sig)
+        ms = throughput(net, n_firings, L)
+        print(f"dynamic rates, {n_active:2d} active branches:   "
+              f"{ms:7.1f} Msamples/s  ({ms/ms_static:4.1f}x vs static)")
+    print("paper claim: dynamic data rates on the accelerator -> up to 5x.")
+
+
+if __name__ == "__main__":
+    main()

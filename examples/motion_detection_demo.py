@@ -1,0 +1,50 @@
+"""Motion Detection demo (paper §4.1, Fig. 4): synthesizes a moving-square
+video, runs the 5-actor network (compiled, token rate 4), reports fps and
+the detected motion statistics.
+
+    PYTHONPATH=src python examples/motion_detection_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import collect_sink, compile_static
+from repro.graphs.motion_detection import build_motion_detection
+
+
+def moving_square_video(n=32, h=240, w=320, size=30):
+    rng = np.random.default_rng(0)
+    base = rng.uniform(90, 110, (h, w)).astype(np.float32)
+    frames = []
+    for t in range(n):
+        f = base.copy()
+        x = 20 + 7 * t
+        f[80:80 + size, x:x + size] = 250.0
+        frames.append(f)
+    return np.stack(frames)
+
+
+def main():
+    video = moving_square_video()
+    n = len(video)
+    net = build_motion_detection(n, rate=4, video=jnp.asarray(video))
+    print(f"network: {list(net.actors)}  buffers: "
+          f"{net.buffer_bytes()/1e6:.2f} MB (paper Table 1: 3.46)")
+    run = compile_static(net, n // 4)
+    state = run(net.init_state())                    # warmup+compile
+    t0 = time.perf_counter()
+    state = run(net.init_state())
+    jax.block_until_ready(state["actors"]["sink"][0])
+    dt = time.perf_counter() - t0
+    motion = np.asarray(collect_sink(net, state, "sink"))
+    frac = (motion > 0).mean(axis=(1, 2))
+    print(f"throughput: {n/dt:.0f} fps (compiled, rate 4)")
+    print(f"motion fraction per frame (first 8): {np.round(frac[:8], 4)}")
+    assert frac[1:].max() > 0.001, "moving square must be detected"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Quickstart: the paper's MoC in ~60 lines.
+
+Builds a tiny dynamic-data-rate network — a control actor gates an
+amplifier actor (token rate 0 or r per firing) — compiles it into one XLA
+program, and shows the rate-0 firings genuinely skipping work.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Edge, FifoSpec, Network, collect_sink,
+                        compile_dynamic, dynamic_actor, map_fire,
+                        static_actor)
+
+N_FIRINGS, RATE, TOK = 8, 2, (4,)
+
+
+def main():
+    # Source: emits windows of RATE tokens from a staged array.
+    def src_fire(state, inputs, rates):
+        data, idx = state
+        win = jax.lax.dynamic_slice_in_dim(data, idx * RATE, RATE, axis=0)
+        return (data, idx + 1), {"out": win}
+
+    n_enabled = (N_FIRINGS + 1) // 2
+    source = static_actor(
+        "source", (), ("out",), src_fire,
+        init=lambda: (jnp.arange(N_FIRINGS * RATE * 4, dtype=jnp.float32)
+                      .reshape(N_FIRINGS * RATE, 4), jnp.int32(0)),
+        ready=lambda st: st[1] < n_enabled)
+
+    # Control actor: enables the amplifier on every second firing.
+    def ctl_fire(state, inputs, rates):
+        return state + 1, {"out": (state % 2 == 0).astype(jnp.int32).reshape(1)}
+
+    control = static_actor("control", (), ("out",), ctl_fire,
+                           init=lambda: jnp.int32(0),
+                           ready=lambda st: st < N_FIRINGS)
+
+    # Dynamic actor: the control token pins its ports to rate 0 or RATE.
+    amp = dynamic_actor(
+        "amp", "c", lambda tok: {"in": tok[0] > 0, "out": tok[0] > 0},
+        ("in",), ("out",), map_fire(lambda w: 10.0 * w, "in", "out"))
+
+    def sink_fire(state, inputs, rates):
+        data, idx = state
+        return (jax.lax.dynamic_update_slice_in_dim(
+            data, inputs["in"], idx * RATE, axis=0), idx + 1), {}
+
+    sink = static_actor(
+        "sink", ("in",), (), sink_fire,
+        init=lambda: (jnp.zeros((N_FIRINGS * RATE, 4), jnp.float32),
+                      jnp.int32(0)),
+        finish=lambda st: st[0])
+
+    net = Network(
+        [source, control, amp, sink],
+        [FifoSpec("f_c", 1, (1,), jnp.int32, is_control=True),
+         FifoSpec("f_in", RATE, TOK),        # Eq. 1: capacity 2r (double buffer)
+         FifoSpec("f_out", RATE, TOK)],
+        [Edge("f_c", "control", "out", "amp", "c"),
+         Edge("f_in", "source", "out", "amp", "in"),
+         Edge("f_out", "amp", "out", "sink", "in")])
+
+    print("channel capacities (Eq. 1):",
+          {f.name: f.capacity_tokens for f in net.fifos.values()})
+    run = compile_dynamic(net)                     # one XLA program
+    state, counts = run(net.init_state())
+    out = np.asarray(collect_sink(net, state, "sink"))
+    print("firings:", {k: int(v) for k, v in counts.items()})
+    print("first enabled window (x10):", out[0:RATE, 0])
+    assert np.allclose(out[0:RATE], 10.0 * np.arange(RATE * 4).reshape(RATE, 4))
+    print("OK — dynamic data rates on the compiled path.")
+
+
+if __name__ == "__main__":
+    main()

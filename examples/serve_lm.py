@@ -1,0 +1,41 @@
+"""Batched serving demo: prefill + greedy decode over request batches
+through the serving engine (ring KV caches = the paper's delay-token
+feedback FIFOs).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import Engine, Request, ServeConfig
+
+
+def main():
+    cfg = smoke_config("granite-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(batch_size=4, max_prompt=32, max_new=16)
+    engine = Engine(cfg, params, scfg)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                max_new=16)
+        for n in [5, 12, 31, 8, 20, 3, 17]
+    ]
+    t0 = time.perf_counter()
+    results = engine.generate(requests)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.tokens) for r in results)
+    print(f"served {len(requests)} requests in {len(requests)//scfg.batch_size+1} "
+          f"batches: {n_tok} tokens in {dt:.2f}s ({n_tok/dt:.0f} tok/s incl. compile)")
+    for i, r in enumerate(results[:3]):
+        print(f"req {i} (prompt {r.prompt_len} toks) ->", r.tokens[:8], "...")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

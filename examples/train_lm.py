@@ -1,0 +1,75 @@
+"""End-to-end LM training driver: data pipeline -> sharded train step ->
+fault-tolerant trainer with checkpointing.
+
+Presets:
+  --preset tiny   (default in this CPU container: ~3M params, 200 steps,
+                   finishes in minutes; loss visibly drops)
+  --preset 100m   (the deliverable config: ~110M-param llama-style model,
+                   300 steps — sized for a real accelerator; runs here too,
+                   just slowly)
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train import (Trainer, TrainerConfig, TrainOptions, make_train_step)
+
+PRESETS = {
+    "tiny": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
+                 vocab=2048, seq=128, batch=8, steps=200, lr=1e-3),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab=32000, seq=1024, batch=32, steps=300,
+                 lr=3e-4),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = ArchConfig(name=f"lm-{args.preset}", family="dense",
+                     n_layers=p["n_layers"], d_model=p["d_model"],
+                     n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
+                     d_ff=p["d_ff"], vocab=p["vocab"],
+                     head_dim=p["d_model"] // p["n_heads"])
+    print(f"model: {cfg.param_count()/1e6:.1f} M params")
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=p["seq"],
+                                  global_batch=p["batch"]))
+    opt_cfg = AdamWConfig(lr=p["lr"], warmup_steps=20,
+                          total_steps=p["steps"])
+    step = jax.jit(make_train_step(cfg, opt_cfg, TrainOptions()),
+                   donate_argnums=(0, 1))
+
+    key = jax.random.PRNGKey(0)
+
+    def init_state():
+        params = init_params(key, cfg)
+        return {"params": params, "opt": init_opt_state(params)}
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=p["steps"], checkpoint_every=50,
+                      checkpoint_dir=args.ckpt_dir, log_every=20),
+        step, data, init_state,
+        to_device=lambda b: {k: jnp.asarray(v) for k, v in b.items()})
+    trainer.run()
+    hist = trainer.metrics_history
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"over {p['steps']} steps")
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss must decrease"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

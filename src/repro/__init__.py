@@ -1,0 +1,5 @@
+"""repro — dynamic data rate actor networks on TPU pods.
+
+Reproduction + extension of Boutellier & Hautala (2016); see README.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,191 @@
+"""Sharded, topology-independent checkpointing with async save.
+
+Layout (orbax-lite, one directory per step):
+
+    ckpt_dir/step_000123/
+        manifest.json        # tree structure, global shapes/dtypes
+        leaf_0000/shard_0_of_K.npy ...   # per-addressable-shard chunks
+        leaf_0001/...
+
+Design points for the 1000-node posture:
+  * each host writes only its *addressable* shards (no gather);
+  * the manifest is keyed by global shape + per-shard index maps, so a
+    restore onto a DIFFERENT mesh (elastic downsize/upsize) reshapes via
+    ``jax.make_array_from_callback`` — shard files are read per need;
+  * saves run on a background thread (training continues; ``wait()``
+    joins), and a ``step_XXXX.tmp`` -> rename commit makes saves atomic —
+    a crash mid-save never corrupts the latest good checkpoint;
+  * retention keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve dtype names incl. ml_dtypes extensions (bfloat16...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _save_arr(path: str, data: np.ndarray) -> None:
+    """np.save with a lossless f32 detour for non-native dtypes (bf16):
+    np.save stores ml_dtypes arrays as raw void records that np.load
+    cannot cast back."""
+    if data.dtype.kind == "V" or data.dtype.name not in np.sctypeDict:
+        np.save(path, np.asarray(data, np.float32))
+    else:
+        np.save(path, data)
+
+
+def _load_arr(path: str, dtype: np.dtype) -> np.ndarray:
+    return np.load(path).astype(dtype)
+
+
+def _leaf_dirname(i: int) -> str:
+    return f"leaf_{i:04d}"
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree: PyTree, blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously, write asynchronously."""
+        self.wait()
+        leaves, treedef = jax.tree.flatten(tree)
+        # Materialize addressable shards NOW (cheap device->host copies) so
+        # training can mutate buffers while the writer thread runs.
+        snaps: List[Tuple[Dict, List[Tuple[Tuple, np.ndarray]]]] = []
+        for leaf in leaves:
+            arr = jax.device_put(leaf) if not hasattr(leaf, "addressable_shards") else leaf
+            shards = []
+            for sh in arr.addressable_shards:
+                idx = tuple((s.start or 0, s.stop if s.stop is not None else dim)
+                            for s, dim in zip(sh.index, arr.shape)) \
+                    if arr.ndim else ()
+                shards.append((idx, np.asarray(sh.data)))
+            meta = {"shape": list(arr.shape), "dtype": str(np.dtype(arr.dtype))}
+            snaps.append((meta, shards))
+        manifest = {
+            "step": step,
+            "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+            "n_leaves": len(leaves),
+            "leaves": [m for m, _ in snaps],
+        }
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for i, (_, shards) in enumerate(snaps):
+                d = os.path.join(tmp, _leaf_dirname(i))
+                os.makedirs(d)
+                for j, (idx, data) in enumerate(shards):
+                    _save_arr(os.path.join(d, f"shard_{j}.npy"), data)
+                    with open(os.path.join(d, f"shard_{j}.idx.json"), "w") as f:
+                        json.dump({"index": [list(t) for t in idx]}, f)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------ #
+    def restore(self, step: int, target: PyTree,
+                shardings: Optional[PyTree] = None) -> PyTree:
+        """Restore into the structure of ``target`` (arrays or
+        ShapeDtypeStructs), placing shards per ``shardings`` (defaults to
+        the target's own shardings / fully replicated).
+
+        Elastic: the stored shard partition need not match the new mesh —
+        each requested output shard is assembled from the covering stored
+        chunks.
+        """
+        root = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(root, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree.flatten(target)
+        if manifest["n_leaves"] != len(leaves):
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, target has "
+                f"{len(leaves)} — structure mismatch")
+        shard_list = jax.tree.leaves(shardings) if shardings is not None else \
+            [getattr(l, "sharding", None) for l in leaves]
+
+        out_leaves = []
+        for i, (leaf, meta) in enumerate(zip(leaves, manifest["leaves"])):
+            d = os.path.join(root, _leaf_dirname(i))
+            shape = tuple(meta["shape"])
+            dtype = _np_dtype(meta["dtype"])
+            if tuple(leaf.shape) != shape:
+                raise ValueError(f"leaf {i}: stored {shape} != target {leaf.shape}")
+            # Load and assemble the global array from chunks.
+            full = np.empty(shape, dtype)
+            j = 0
+            while os.path.exists(os.path.join(d, f"shard_{j}.npy")):
+                data = _load_arr(os.path.join(d, f"shard_{j}.npy"), dtype)
+                with open(os.path.join(d, f"shard_{j}.idx.json")) as f:
+                    idx = json.load(f)["index"]
+                sl = tuple(slice(a, b) for a, b in idx)
+                full[sl] = data
+                j += 1
+            sharding = shard_list[i]
+            if sharding is not None:
+                arr = jax.make_array_from_callback(
+                    shape, sharding, lambda sl, _full=full: _full[sl])
+            else:
+                arr = jax.device_put(full.astype(dtype))
+            out_leaves.append(arr)
+        return treedef.unflatten(out_leaves)

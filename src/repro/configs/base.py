@@ -1,0 +1,214 @@
+"""Architecture config system.
+
+Every assigned architecture is a declarative :class:`ArchConfig`; the model
+builders in ``repro.models`` consume it, the launcher selects one with
+``--arch <id>``, and ``input_specs`` produces ShapeDtypeStruct stand-ins
+for each of the four assigned input shapes (no allocation — dry-run safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------- #
+# The four assigned LM shapes (seq_len, global_batch).
+# ---------------------------------------------------------------------- #
+SHAPES: Dict[str, Tuple[int, int]] = {
+    "train_4k": (4096, 256),        # training
+    "prefill_32k": (32768, 32),     # inference prefill
+    "decode_32k": (32768, 128),     # one new token, 32k KV cache
+    "long_500k": (524288, 1),       # long-context decode (sub-quadratic only)
+}
+DECODE_SHAPES = ("decode_32k", "long_500k")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    local_groups: int = 0          # >0: per-data-shard dispatch (§Perf)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma recurrent block (RG-LRU + conv)."""
+    lru_width: Optional[int] = None   # defaults to d_model
+    conv_width: int = 4
+    # layer pattern entry codes: 0 = recurrent block, 1 = local attention
+    pattern: Tuple[int, ...] = (0, 0, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Audio/vision frontend stub: precomputed embeddings enter here."""
+    n_layers: int
+    n_ctx: int               # frames / patches
+    d_model: int
+    n_heads: int
+    d_ff: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str              # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # Sliding-window attention: window size, and the cyclic layer pattern
+    # (1 = global/full attention, 0 = local/SWA).  Uniform-SWA models use
+    # pattern (0,); uniform-full models use (1,).
+    swa_window: Optional[int] = None
+    attn_pattern: Tuple[int, ...] = (1,)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encoder: Optional[EncoderConfig] = None   # whisper / vlm frontend
+    n_vision_tokens: int = 0                  # vlm: patch embeddings prepended
+    kv_quant_int8: bool = False               # §Perf: int8 KV cache
+    act_seq_shard: bool = False               # §Perf: Megatron-SP activations
+    # Which assigned shapes run (long_500k only for sub-quadratic archs;
+    # skips recorded in the dry-run table + DESIGN.md §6).
+    skip_shapes: Tuple[str, ...] = ()
+    notes: str = ""
+
+    # ------------------------------------------------------------------ #
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 256 (Megatron-style padding) so
+        the embedding/unembedding shard cleanly over the model axis — an
+        unpadded 50280 vocab measured 13 GB/device of replicated f32 logits
+        traffic in the dry-run (EXPERIMENTS.md §Dry-run)."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def param_count(self) -> int:
+        """Total parameter count N (for 6·N·D roofline accounting)."""
+        d, L = self.d_model, self.n_layers
+        n = self.vocab * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab * d
+        if self.family == "ssm":
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            conv_dim = di + 2 * s.state_dim
+            per = (d * (2 * di + 2 * s.state_dim + nh)   # in_proj
+                   + conv_dim * s.conv_width              # conv1d
+                   + nh                                   # dt bias
+                   + nh + nh                              # A_log, D
+                   + di                                   # gate norm
+                   + di * d                               # out_proj
+                   + d)                                   # pre-norm
+            return n + L * per
+        # attention sublayer
+        attn = d * self.n_heads * self.hd + d * 2 * self.n_kv_heads * self.hd \
+            + self.n_heads * self.hd * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * self.hd
+        # mlp sublayer (SwiGLU: 3 mats) or MoE experts
+        if self.moe is not None:
+            mlp = self.moe.n_experts * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        else:
+            mlp = 3 * d * self.d_ff
+        per = attn + mlp + 2 * d  # two norms
+        total = n + L * per + d   # final norm
+        if self.rglru is not None:
+            # recurrent layers replace attention with RG-LRU machinery;
+            # close enough for roofline purposes (exact count in DESIGN.md)
+            pass
+        if self.encoder is not None:
+            e = self.encoder
+            enc_per = (4 * e.d_model * e.d_model + 2 * e.d_model * e.d_ff + 2 * e.d_model)
+            total += e.n_layers * enc_per + e.n_ctx * e.d_model
+            if self.family == "audio":
+                # decoder cross-attention adds 4 more projections per layer
+                total += L * 4 * d * d
+        return total
+
+    def active_param_count(self) -> int:
+        """N_active for MoE (6·N_active·D)."""
+        if self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        all_experts = L * self.moe.n_experts * 3 * d * self.moe.d_ff_expert
+        active = L * self.moe.top_k * 3 * d * self.moe.d_ff_expert
+        return full - all_experts + active
+
+    def shapes(self) -> Dict[str, Tuple[int, int]]:
+        return {k: v for k, v in SHAPES.items() if k not in self.skip_shapes}
+
+
+# ---------------------------------------------------------------------- #
+# Input specs (ShapeDtypeStruct stand-ins) per (arch, shape, step kind).
+# ---------------------------------------------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model *data* inputs for the given assigned shape.
+
+    train/prefill shapes feed token ids (plus frontend-stub embeddings for
+    audio/vlm); decode shapes feed one token per sequence (the KV/SSM cache
+    is part of the serve state, built by ``repro.serve.state_specs``).
+    """
+    if shape_name in cfg.skip_shapes:
+        raise ValueError(f"{cfg.name}: shape {shape_name} is skipped "
+                         f"(see DESIGN.md §6): {cfg.notes}")
+    seq, batch = SHAPES[shape_name]
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape_name in DECODE_SHAPES:
+        specs["tokens"] = _sds((batch, 1), jnp.int32)
+        specs["pos"] = _sds((batch,), jnp.int32)
+    else:
+        n_txt = seq
+        if cfg.family == "vlm":
+            n_txt = seq - cfg.n_vision_tokens
+            specs["vision_embeds"] = _sds(
+                (batch, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        specs["tokens"] = _sds((batch, n_txt), jnp.int32)
+        if shape_name == "train_4k":
+            specs["labels"] = _sds((batch, n_txt), jnp.int32)
+    if cfg.family == "audio":
+        # Conv frontend stub: precomputed frame embeddings (paper-assigned
+        # backbone only; see DESIGN.md).
+        e = cfg.encoder
+        specs["frames"] = _sds((batch, e.n_ctx, e.d_model), jnp.bfloat16)
+    return specs

@@ -1,0 +1,19 @@
+"""qwen2-72b [dense] — GQA with QKV bias. [arXiv:2407.10671; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    attn_pattern=(1,),            # uniform full attention
+    skip_shapes=("long_500k",),   # pure full attention (DESIGN.md §6)
+    notes="pure full attention -> long_500k skipped per assignment rules",
+)

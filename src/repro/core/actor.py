@@ -1,0 +1,148 @@
+"""Dataflow actors — paper §2.2 and §3.1.
+
+An actor consists of the mandatory ``fire`` function and optional ``init``,
+``control`` and ``finish`` functions (paper §3.1 — the same formulation as
+DAL, plus the ``control`` function that is this paper's addition).
+
+*Static* actors consume/produce exactly the FIFO rate ``r`` on every port
+on every firing.  *Dynamic* actors have one **control port** (token rate 1)
+whose consumed token value pins every regular port to rate 0 or r for the
+duration of that firing.
+
+TPU adaptation: an actor is a pure JAX function; the executor threads a
+state pytree through firings.  The ``control`` function maps the (traced)
+control token to a dict of 0/1 enables; rate-0 ports freeze their FIFO
+cursor and the actor body can be skipped entirely via ``lax.cond`` — this
+is how the paper's "5x from running only the active filters" materializes
+inside a single compiled XLA program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# fire(state, inputs: {port: (r, *tok_shape)}, rates: {port: 0/1 i32}) ->
+#     (new_state, outputs: {port: (r, *tok_shape)})
+FireFn = Callable[[Any, Mapping[str, jax.Array], Mapping[str, jax.Array]],
+                  Tuple[Any, Dict[str, jax.Array]]]
+# control(token) -> {port: 0/1 enable} for every regular port.
+ControlFn = Callable[[jax.Array], Dict[str, jax.Array]]
+InitFn = Callable[[], Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ActorSpec:
+    """Static description of one actor.
+
+    Attributes:
+      name:          unique actor name.
+      in_ports:      regular input port names, P_a^- (excludes control port).
+      out_ports:     regular output port names, P_a^+.
+      fire:          the firing function (mandatory, paper §3.1).
+      control_port:  name of the control input port; None for static actors.
+      control:       maps one control token -> per-port 0/1 enables.  Must
+                     cover every regular port; required iff ``control_port``.
+      init:          optional state constructor, run once at app init.
+      finish:        optional, run once at termination (host-side; used by
+                     sinks to hand results back).
+      placement:     optional device/mesh tag — the actor-to-core mapping of
+                     paper §3.3. ``None`` = "free mapping" (let the compiler
+                     place it).
+      ready:         optional ``state -> bool`` predicate consulted by the
+                     token-driven scheduler *in addition to* FIFO blocking
+                     (sources use it to signal input exhaustion — the
+                     analogue of the paper's ``finish`` driven teardown).
+      cost_flops:    optional static per-firing FLOP estimate (roofline).
+    """
+
+    name: str
+    in_ports: Tuple[str, ...]
+    out_ports: Tuple[str, ...]
+    fire: FireFn
+    control_port: Optional[str] = None
+    control: Optional[ControlFn] = None
+    init: Optional[InitFn] = None
+    finish: Optional[Callable[[Any], Any]] = None
+    placement: Optional[str] = None
+    ready: Optional[Callable[[Any], jax.Array]] = None
+    cost_flops: int = 0
+
+    def __post_init__(self) -> None:
+        if self.control_port is not None and self.control is None:
+            raise ValueError(f"actor {self.name}: dynamic actor needs a control function")
+        if self.control_port is None and self.control is not None:
+            raise ValueError(f"actor {self.name}: control function without control port")
+        if self.control_port in self.in_ports:
+            raise ValueError(
+                f"actor {self.name}: control port {self.control_port!r} must not "
+                f"be listed among regular in_ports"
+            )
+        names = list(self.in_ports) + list(self.out_ports)
+        if len(set(names)) != len(names):
+            raise ValueError(f"actor {self.name}: duplicate port names {names}")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def is_dynamic(self) -> bool:
+        return self.control_port is not None
+
+    @property
+    def is_source(self) -> bool:
+        """Zero input ports (paper §2.2). Control port does not count."""
+        return not self.in_ports and self.control_port is None
+
+    @property
+    def is_sink(self) -> bool:
+        return not self.out_ports
+
+    def all_in_ports(self) -> Tuple[str, ...]:
+        if self.control_port is not None:
+            return (self.control_port,) + tuple(self.in_ports)
+        return tuple(self.in_ports)
+
+    def rates_for(self, ctrl_token: Optional[jax.Array]) -> Dict[str, jax.Array]:
+        """Evaluate the control function -> {port: 0/1 enable} (i32).
+
+        Static actors enable every port unconditionally.
+        """
+        one = jnp.int32(1)
+        if not self.is_dynamic:
+            return {p: one for p in (*self.in_ports, *self.out_ports)}
+        assert ctrl_token is not None
+        rates = {k: jnp.asarray(v, jnp.int32) for k, v in self.control(ctrl_token).items()}
+        missing = (set(self.in_ports) | set(self.out_ports)) - set(rates)
+        if missing:
+            raise ValueError(
+                f"actor {self.name}: control() must set a rate for every regular "
+                f"port; missing {sorted(missing)}"
+            )
+        return rates
+
+    def init_state(self) -> Any:
+        return self.init() if self.init is not None else ()
+
+
+def static_actor(name: str, in_ports, out_ports, fire: FireFn, **kw) -> ActorSpec:
+    """Convenience constructor for static-rate actors."""
+    return ActorSpec(name=name, in_ports=tuple(in_ports), out_ports=tuple(out_ports),
+                     fire=fire, **kw)
+
+
+def dynamic_actor(name: str, control_port: str, control: ControlFn,
+                  in_ports, out_ports, fire: FireFn, **kw) -> ActorSpec:
+    """Convenience constructor for dynamic-rate actors (paper's contribution)."""
+    return ActorSpec(name=name, in_ports=tuple(in_ports), out_ports=tuple(out_ports),
+                     fire=fire, control_port=control_port, control=control, **kw)
+
+
+def map_fire(fn: Callable[[jax.Array], jax.Array], in_port: str, out_port: str) -> FireFn:
+    """Lift a per-window function into a FireFn for 1-in/1-out actors."""
+
+    def fire(state, inputs, rates):
+        del rates
+        return state, {out_port: fn(inputs[in_port])}
+
+    return fire

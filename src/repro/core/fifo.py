@@ -1,0 +1,284 @@
+"""FIFO communication channels — paper §3.2.
+
+Implements the paper's exact channel-capacity law (Eq. 1):
+
+    C_f = S_f * (3r + 1)   if f carries a delay (initial) token
+    C_f = S_f * (2r)       otherwise
+
+where ``r`` is the token rate of the channel and ``S_f`` the size of one
+token.  The non-delay channel is a double buffer; the delay channel is the
+paper's Fig. 2 triple buffer with an explicit copy-back (slot ``3r`` ->
+slot ``0``) so that every read and write window stays **contiguous** — the
+property the paper chose so accelerator kernels always see contiguous I/O
+arrays.  On TPU that property matters even more: Pallas BlockSpec windows
+and DMA transfers want contiguous slabs, so the scheme transfers verbatim.
+
+Timing note (safe generalization of Fig. 2): the paper performs the
+copy-back "after the third write reaches slot 3r".  If the writer is a full
+capacity ahead of the reader, copying at that instant would clobber the
+still-unread slot 0.  We therefore defer the copy to the *start of the next
+wrapped write* (write phase 0), at which point the blocking condition
+``occ + r <= 3r + 1`` guarantees the reader has consumed slot 0.  For every
+interleaving legal under blocking semantics the observable FIFO behaviour
+is identical to the paper's description (property-tested against a Python
+queue oracle in ``tests/test_core_properties.py``).
+
+State is purely functional: a :class:`FifoState` pytree is threaded through
+the compiled executors (``lax.scan`` / ``lax.while_loop``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FifoState:
+    """Functional state of one FIFO channel.
+
+    Attributes:
+      buf:   ``(capacity_tokens, *token_shape)`` backing array.
+      rd:    read phase counter   (int32, monotonically increasing).
+      wr:    write phase counter  (int32, monotonically increasing).
+      occ:   occupancy in tokens  (int32).
+    """
+
+    buf: jax.Array
+    rd: jax.Array
+    wr: jax.Array
+    occ: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FifoSpec:
+    """Static description of a FIFO channel (paper §2.2, §3.2).
+
+    ``rate`` is the single token rate ``r`` associated with the channel;
+    both the producing and the consuming port inherit it.  ``delay`` is the
+    number of initial tokens (0 or 1 — the paper allows at most one).
+    """
+
+    name: str
+    rate: int
+    token_shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    delay: int = 0
+    # Control channels must have rate 1 (paper §2.2). Marked so the network
+    # validator can enforce it.
+    is_control: bool = False
+
+    def __post_init__(self) -> None:
+        if self.rate < 1:
+            raise ValueError(f"fifo {self.name}: rate must be >= 1, got {self.rate}")
+        if self.delay not in (0, 1):
+            raise ValueError(
+                f"fifo {self.name}: the MoC allows 0 or 1 initial tokens, got {self.delay}"
+            )
+        if self.is_control and self.rate != 1:
+            raise ValueError(
+                f"fifo {self.name}: control channels must have token rate 1 "
+                f"(paper §2.2), got {self.rate}"
+            )
+        if self.is_control and self.delay:
+            raise ValueError(
+                f"fifo {self.name}: control channels cannot carry delay tokens"
+            )
+
+    # ------------------------------------------------------------------ #
+    # Capacity law — paper Eq. 1.                                          #
+    # ------------------------------------------------------------------ #
+    @property
+    def capacity_tokens(self) -> int:
+        """Channel capacity in tokens: ``3r + 1`` with delay, ``2r`` without."""
+        return 3 * self.rate + 1 if self.delay else 2 * self.rate
+
+    @property
+    def token_size_bytes(self) -> int:
+        """S_f — size of one token in bytes."""
+        return int(np.prod(self.token_shape, dtype=np.int64)) * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def capacity_bytes(self) -> int:
+        """C_f of Eq. 1, in bytes."""
+        return self.capacity_tokens * self.token_size_bytes
+
+    @property
+    def n_write_phases(self) -> int:
+        return 3 if self.delay else 2
+
+    # ------------------------------------------------------------------ #
+    # State construction.                                                  #
+    # ------------------------------------------------------------------ #
+    def init_state(self, initial_token: Optional[jax.Array] = None) -> FifoState:
+        """Allocate the channel at application initialization.
+
+        With ``delay=1`` the initial token (defaults to zeros) is placed in
+        slot 0, exactly as in paper Fig. 2, and occupancy starts at 1.
+        """
+        buf = jnp.zeros((self.capacity_tokens,) + tuple(self.token_shape), self.dtype)
+        if self.delay:
+            if initial_token is not None:
+                tok = jnp.asarray(initial_token, self.dtype)
+                if tok.shape != tuple(self.token_shape):
+                    raise ValueError(
+                        f"fifo {self.name}: initial token shape {tok.shape} != "
+                        f"token shape {self.token_shape}"
+                    )
+                buf = buf.at[0].set(tok)
+        elif initial_token is not None:
+            raise ValueError(f"fifo {self.name}: initial token on a delay-free channel")
+        # Note: distinct zero buffers — donated executors reject aliased args.
+        return FifoState(buf=buf, rd=jnp.int32(0), wr=jnp.int32(0),
+                         occ=jnp.int32(self.delay))
+
+    def abstract_state(self) -> FifoState:
+        """ShapeDtypeStruct stand-in (for lowering without allocation)."""
+        i32 = jax.ShapeDtypeStruct((), jnp.int32)
+        return FifoState(
+            buf=jax.ShapeDtypeStruct(
+                (self.capacity_tokens,) + tuple(self.token_shape), jnp.dtype(self.dtype)
+            ),
+            rd=i32,
+            wr=i32,
+            occ=i32,
+        )
+
+    # ------------------------------------------------------------------ #
+    # Cursor arithmetic.                                                   #
+    # ------------------------------------------------------------------ #
+    def _read_offset(self, rd_phase: jax.Array) -> jax.Array:
+        """Slot index where the window of read phase ``rd`` begins.
+
+        Non-delay double buffer: phases alternate 0, r.
+        Delay triple buffer (Fig. 2): phases cycle 0, r, 2r.
+        """
+        ph = rd_phase % self.n_write_phases
+        return ph * self.rate
+
+    def _write_offset(self, wr_phase: jax.Array) -> jax.Array:
+        """Slot index where the window of write phase ``wr`` begins.
+
+        Delay channels are offset by +1 because slot 0 belongs to the
+        (copied-back) delay token — paper Fig. 2: first write occupies
+        slots 1..r.
+        """
+        ph = wr_phase % self.n_write_phases
+        return ph * self.rate + (1 if self.delay else 0)
+
+    # ------------------------------------------------------------------ #
+    # Blocking predicates (used by the dynamic scheduler).                 #
+    # ------------------------------------------------------------------ #
+    @property
+    def writable_occupancy_bound(self) -> int:
+        """Maximum occupancy after a write.
+
+        Non-delay double buffer: the full ``2r`` capacity.
+        Delay triple buffer: ``2r + 1`` — *less* than the physical ``3r+1``
+        of Eq. 1.  The Fig. 2 phase pattern reuses a slot only when the
+        write cycle returns to it, so the writer may run at most one full
+        window ahead of the reader; but the unread span then straddles
+        *three* phase windows, which is exactly why Eq. 1 allocates 3r+1
+        physical slots for 2r+1 logical tokens (property-tested against a
+        queue oracle in tests/test_core_fifo.py).
+        """
+        return 2 * self.rate + 1 if self.delay else 2 * self.rate
+
+    def can_read(self, st: FifoState) -> jax.Array:
+        return st.occ >= self.rate
+
+    def can_write(self, st: FifoState) -> jax.Array:
+        return st.occ + self.rate <= self.writable_occupancy_bound
+
+    def can_peek(self, st: FifoState) -> jax.Array:
+        return st.occ >= 1
+
+    # ------------------------------------------------------------------ #
+    # Functional read / write / peek.                                      #
+    # ------------------------------------------------------------------ #
+    def write(self, st: FifoState, tokens: jax.Array) -> FifoState:
+        """Append one window of ``r`` tokens. Caller guarantees ``can_write``.
+
+        ``tokens`` has shape ``(r, *token_shape)``.  For delay channels the
+        Fig. 2 copy-back (slot 3r -> slot 0) runs **eagerly right after the
+        phase-2 write reaches the buffer end** — the paper's own timing
+        ("the third write ... followed by an explicit data copy").  It is
+        safe because the phase blocking bound (writer at most one window
+        ahead, see ``writable_occupancy_bound``) guarantees slot 0 was
+        consumed by the corresponding phase-0 read; and it must not be
+        deferred, because the *next* phase-0 read sources slot 0.
+        Both directions are pinned by the queue-oracle property test.
+        """
+        tokens = jnp.asarray(tokens, self.dtype)
+        off = self._write_offset(st.wr)
+        buf = jax.lax.dynamic_update_slice_in_dim(st.buf, tokens, off, axis=0)
+        if self.delay:
+            is_phase2 = (st.wr % self.n_write_phases) == 2
+
+            def do_copy(b):
+                return b.at[0].set(b[3 * self.rate])
+
+            buf = jax.lax.cond(is_phase2, do_copy, lambda b: b, buf)
+        return FifoState(buf=buf, rd=st.rd, wr=st.wr + 1, occ=st.occ + self.rate)
+
+    def read(self, st: FifoState) -> Tuple[jax.Array, FifoState]:
+        """Consume one window of ``r`` tokens. Caller guarantees ``can_read``."""
+        off = self._read_offset(st.rd)
+        window = jax.lax.dynamic_slice_in_dim(st.buf, off, self.rate, axis=0)
+        return window, FifoState(buf=st.buf, rd=st.rd + 1, wr=st.wr, occ=st.occ - self.rate)
+
+    def peek(self, st: FifoState) -> jax.Array:
+        """Return the *next single token* without consuming it.
+
+        Used by the scheduler to evaluate a dynamic actor's ``control``
+        function before committing to a firing (our shared-memory analogue
+        of the paper's blocking control-port read).
+        """
+        off = self._read_offset(st.rd)
+        return jax.lax.dynamic_slice_in_dim(st.buf, off, 1, axis=0)[0]
+
+    def read_masked(self, st: FifoState, enabled: jax.Array) -> Tuple[jax.Array, FifoState]:
+        """Rate-0/r read (paper §2.2 dynamic ports).
+
+        Always returns a static-shaped ``(r, *token_shape)`` window (XLA
+        needs static shapes) but only advances the cursor when ``enabled``.
+        When disabled the window content is unspecified-by-the-MoC; we
+        return the current slots (callers gate on ``enabled``).
+        """
+        off = self._read_offset(st.rd)
+        window = jax.lax.dynamic_slice_in_dim(st.buf, off, self.rate, axis=0)
+        e = enabled.astype(jnp.int32)
+        new = FifoState(buf=st.buf, rd=st.rd + e, wr=st.wr, occ=st.occ - e * self.rate)
+        return window, new
+
+    def write_masked(self, st: FifoState, tokens: jax.Array, enabled: jax.Array) -> FifoState:
+        """Rate-0/r write: commit the window only when ``enabled``.
+
+        Non-delay channels avoid ``lax.cond`` on the buffer: a cond whose
+        identity arm returns the buffer forces XLA to materialize a copy of
+        the *whole* channel every firing (measured: FIFO-copy-bound DPD,
+        EXPERIMENTS.md §Perf).  Instead the window slot is rewritten
+        unconditionally with either the new tokens or its current content —
+        an in-place dynamic-update-slice touching only r tokens.
+        """
+        if self.delay:
+            def do_write(s):
+                return self.write(s, tokens)
+
+            return jax.lax.cond(enabled, do_write, lambda s: s, st)
+        e = enabled.astype(jnp.int32)
+        off = self._write_offset(st.wr)
+        cur = jax.lax.dynamic_slice_in_dim(st.buf, off, self.rate, axis=0)
+        eff = jnp.where(enabled, jnp.asarray(tokens, self.dtype), cur)
+        buf = jax.lax.dynamic_update_slice_in_dim(st.buf, eff, off, axis=0)
+        return FifoState(buf=buf, rd=st.rd, wr=st.wr + e,
+                         occ=st.occ + e * self.rate)
+
+
+def total_buffer_bytes(specs) -> int:
+    """Sum of Eq. 1 capacities — reproduces the accounting of paper Table 1."""
+    return sum(s.capacity_bytes for s in specs)

@@ -1,0 +1,154 @@
+"""Actor-to-device mapping — paper §3.3 adapted to the mesh world.
+
+The paper maps each actor either to a GPP core (fixed or OS-chosen "free"
+mapping) or to the OpenCL/GPU device.  On a TPU pod the analogue is:
+
+  * ``heterogeneous_split``  — partition a network into a host-resident
+    part (sources/sinks doing I/O, kept interpreted) and an
+    accelerator-resident part compiled into a single XLA program.  Boundary
+    FIFO channels become explicit array arguments/results of the compiled
+    step, preserving Eq. 1 window semantics (contiguous windows in, out).
+
+  * ``Placement``           — pins an actor to a named mesh axis slice; the
+    compiled executors turn placements into sharding constraints so GSPMD
+    materializes cross-placement FIFO traffic as collectives.  ``None``
+    placement is the paper's *free mapping* (GSPMD decides).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.actor import ActorSpec, static_actor
+from repro.core.fifo import FifoSpec
+from repro.core.network import Edge, Network
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Actor placement: mesh axis name + index range (or None = free)."""
+
+    axis: Optional[str] = None
+    index: Optional[int] = None
+
+
+def partition_actors(network: Network, accelerated: List[str]) -> Tuple[List[str], List[str]]:
+    """Split actor names into (host, accelerated) sets, validating coverage."""
+    accel = set(accelerated)
+    unknown = accel - set(network.actors)
+    if unknown:
+        raise ValueError(f"unknown actors in accelerated set: {sorted(unknown)}")
+    host = [n for n in network.actors if n not in accel]
+    return host, list(accelerated)
+
+
+def boundary_fifos(network: Network, accelerated: List[str]) -> Tuple[List[str], List[str]]:
+    """FIFOs crossing the host/accelerator boundary.
+
+    Returns (into_accel, out_of_accel) fifo-name lists — the channels whose
+    windows become the compiled step's inputs/outputs (the paper's
+    host<->GPU transfer buffers; on a pod, the DMA'd feed/fetch arrays).
+    """
+    accel = set(accelerated)
+    into, out = [], []
+    for e in network.edges:
+        src_in = e.src_actor in accel
+        dst_in = e.dst_actor in accel
+        if not src_in and dst_in:
+            into.append(e.fifo)
+        elif src_in and not dst_in:
+            out.append(e.fifo)
+    return into, out
+
+
+def heterogeneous_split(network: Network, accelerated: List[str],
+                        n_iterations: int) -> Tuple[Network, List[str], List[str]]:
+    """Build the accelerator subnetwork with boundary source/sink actors.
+
+    Each inbound boundary FIFO gets a *feed* source actor that serves
+    pre-staged windows ``(n_iterations, r, *token_shape)`` from its state;
+    each outbound FIFO gets a *fetch* sink collecting windows likewise.
+    The result is a plain Network, so all executors/verifiers apply.
+    """
+    accel = set(accelerated)
+    into, out = boundary_fifos(network, accelerated)
+
+    actors: List[ActorSpec] = [network.actors[n] for n in accelerated]
+    fifos: List[FifoSpec] = []
+    edges: List[Edge] = []
+    initial = {}
+    for e in network.edges:
+        spec = network.fifos[e.fifo]
+        if e.src_actor in accel and e.dst_actor in accel:
+            fifos.append(spec)
+            edges.append(e)
+            if e.fifo in network.initial_tokens:
+                initial[e.fifo] = network.initial_tokens[e.fifo]
+
+    def make_feed(fifo_name: str) -> Tuple[ActorSpec, FifoSpec, Edge]:
+        spec = network.fifos[fifo_name]
+        e = network.edge_of(fifo_name)
+
+        def fire(state, inputs, rates):
+            del inputs, rates
+            data, idx = state
+            win = jax.lax.dynamic_index_in_dim(data, idx, axis=0, keepdims=False)
+            return (data, idx + 1), {"out": win}
+
+        def init():
+            data = jnp.zeros((n_iterations, spec.rate) + tuple(spec.token_shape), spec.dtype)
+            return (data, jnp.int32(0))
+
+        feed = static_actor(f"__feed_{fifo_name}", (), ("out",), fire, init=init,
+                            ready=lambda st: st[1] < n_iterations)
+        return feed, spec, Edge(fifo_name, feed.name, "out", e.dst_actor, e.dst_port)
+
+    def make_fetch(fifo_name: str) -> Tuple[ActorSpec, FifoSpec, Edge]:
+        spec = network.fifos[fifo_name]
+        e = network.edge_of(fifo_name)
+
+        def fire(state, inputs, rates):
+            del rates
+            data, idx = state
+            data = jax.lax.dynamic_update_index_in_dim(data, inputs["in"], idx, axis=0)
+            return (data, idx + 1), {}
+
+        def init():
+            data = jnp.zeros((n_iterations, spec.rate) + tuple(spec.token_shape), spec.dtype)
+            return (data, jnp.int32(0))
+
+        fetch = static_actor(f"__fetch_{fifo_name}", ("in",), (), fire, init=init,
+                             finish=lambda st: st[0])
+        return fetch, spec, Edge(fifo_name, e.src_actor, e.src_port, fetch.name, "in")
+
+    feed_names, fetch_names = [], []
+    for f in into:
+        a, spec, edge = make_feed(f)
+        actors.append(a)
+        fifos.append(spec)
+        edges.append(edge)
+        if f in network.initial_tokens:
+            initial[f] = network.initial_tokens[f]
+        feed_names.append(a.name)
+    for f in out:
+        a, spec, edge = make_fetch(f)
+        actors.append(a)
+        fifos.append(spec)
+        edges.append(edge)
+        fetch_names.append(a.name)
+
+    sub = Network(actors, fifos, edges, initial_tokens=initial)
+    return sub, feed_names, fetch_names
+
+
+def stage_feed(state: Dict[str, Any], feed_actor: str, data: jax.Array) -> Dict[str, Any]:
+    """Install pre-staged windows into a feed actor's state."""
+    st = dict(state)
+    actors = dict(st["actors"])
+    _, idx = actors[feed_actor]
+    actors[feed_actor] = (jnp.asarray(data), idx)
+    st["actors"] = actors
+    return st

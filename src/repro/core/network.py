@@ -1,0 +1,260 @@
+"""Actor networks ℵ = (A, F) — paper §2.2.
+
+A network is a set of actors interconnected by FIFO channels.  Each channel
+connects exactly one output port to exactly one input port (paper §3.2).
+Ports inherit the token rate of the channel they connect to.
+
+The builder validates the MoC's structural rules at construction time:
+  * single writer / single reader per channel;
+  * control channels have rate 1 and no delay token;
+  * every declared port is connected exactly once;
+  * dynamic actors have exactly one control port fed by a channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.actor import ActorSpec
+from repro.core.fifo import FifoSpec, FifoState, total_buffer_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    """One channel binding: (src actor, src port) --fifo--> (dst actor, dst port)."""
+
+    fifo: str
+    src_actor: str
+    src_port: str
+    dst_actor: str
+    dst_port: str
+
+
+class Network:
+    """Validated actor network (immutable after construction)."""
+
+    def __init__(self, actors: List[ActorSpec], fifos: List[FifoSpec], edges: List[Edge],
+                 initial_tokens: Optional[Mapping[str, Any]] = None):
+        self.actors: Dict[str, ActorSpec] = {a.name: a for a in actors}
+        self.fifos: Dict[str, FifoSpec] = {f.name: f for f in fifos}
+        self.edges: Tuple[Edge, ...] = tuple(edges)
+        self.initial_tokens: Dict[str, Any] = dict(initial_tokens or {})
+        if len(self.actors) != len(actors):
+            raise ValueError("duplicate actor names")
+        if len(self.fifos) != len(fifos):
+            raise ValueError("duplicate fifo names")
+        self._edge_by_fifo: Dict[str, Edge] = {}
+        for e in self.edges:
+            if e.fifo in self._edge_by_fifo:
+                raise ValueError(f"fifo {e.fifo} bound to more than one edge "
+                                 f"(channels connect exactly one output to one input)")
+            self._edge_by_fifo[e.fifo] = e
+        self._validate()
+        # Port -> fifo lookup tables used by the executors.
+        self.in_fifo: Dict[Tuple[str, str], str] = {
+            (e.dst_actor, e.dst_port): e.fifo for e in self.edges
+        }
+        self.out_fifo: Dict[Tuple[str, str], str] = {
+            (e.src_actor, e.src_port): e.fifo for e in self.edges
+        }
+
+    # ------------------------------------------------------------------ #
+    def _validate(self) -> None:
+        for e in self.edges:
+            if e.fifo not in self.fifos:
+                raise ValueError(f"edge references unknown fifo {e.fifo}")
+            if e.src_actor not in self.actors:
+                raise ValueError(f"edge references unknown actor {e.src_actor}")
+            if e.dst_actor not in self.actors:
+                raise ValueError(f"edge references unknown actor {e.dst_actor}")
+            src = self.actors[e.src_actor]
+            dst = self.actors[e.dst_actor]
+            if e.src_port not in src.out_ports:
+                raise ValueError(f"{e.src_actor} has no output port {e.src_port}")
+            if e.dst_port not in dst.all_in_ports():
+                raise ValueError(f"{e.dst_actor} has no input port {e.dst_port}")
+            if e.dst_port == dst.control_port and not self.fifos[e.fifo].is_control:
+                raise ValueError(
+                    f"fifo {e.fifo} feeds control port {e.dst_actor}.{e.dst_port} "
+                    f"but is not marked is_control (rate-1 rule, paper §2.2)"
+                )
+        # Exactly-once connectivity.
+        seen_src, seen_dst = set(), set()
+        for e in self.edges:
+            k_src, k_dst = (e.src_actor, e.src_port), (e.dst_actor, e.dst_port)
+            if k_src in seen_src:
+                raise ValueError(f"output port {k_src} connected twice")
+            if k_dst in seen_dst:
+                raise ValueError(f"input port {k_dst} connected twice")
+            seen_src.add(k_src)
+            seen_dst.add(k_dst)
+        for a in self.actors.values():
+            for p in a.all_in_ports():
+                if (a.name, p) not in seen_dst:
+                    raise ValueError(f"input port {a.name}.{p} not connected")
+            for p in a.out_ports:
+                if (a.name, p) not in seen_src:
+                    raise ValueError(f"output port {a.name}.{p} not connected")
+        for f in self.fifos.values():
+            if f.name not in self._edge_by_fifo:
+                raise ValueError(f"fifo {f.name} not bound to any edge")
+        for name, tok in self.initial_tokens.items():
+            if name not in self.fifos:
+                raise ValueError(f"initial token for unknown fifo {name}")
+            if not self.fifos[name].delay:
+                raise ValueError(f"initial token for delay-free fifo {name}")
+
+    # ------------------------------------------------------------------ #
+    def edge_of(self, fifo_name: str) -> Edge:
+        return self._edge_by_fifo[fifo_name]
+
+    def fifo_for_in_port(self, actor: str, port: str) -> FifoSpec:
+        return self.fifos[self.in_fifo[(actor, port)]]
+
+    def fifo_for_out_port(self, actor: str, port: str) -> FifoSpec:
+        return self.fifos[self.out_fifo[(actor, port)]]
+
+    def sources(self) -> List[str]:
+        return [a.name for a in self.actors.values() if a.is_source]
+
+    def sinks(self) -> List[str]:
+        return [a.name for a in self.actors.values() if a.is_sink]
+
+    def buffer_bytes(self) -> int:
+        """Total communication-buffer memory — paper Table 1 accounting."""
+        return total_buffer_bytes(self.fifos.values())
+
+    # ------------------------------------------------------------------ #
+    # State construction.                                                  #
+    # ------------------------------------------------------------------ #
+    def init_state(self) -> Dict[str, Any]:
+        fifo_states: Dict[str, FifoState] = {}
+        for name, spec in self.fifos.items():
+            fifo_states[name] = spec.init_state(self.initial_tokens.get(name))
+        actor_states = {name: a.init_state() for name, a in self.actors.items()}
+        return {"fifos": fifo_states, "actors": actor_states}
+
+    # ------------------------------------------------------------------ #
+    # Graph utilities for the scheduler.                                   #
+    # ------------------------------------------------------------------ #
+    def precedence_edges(self, ignore_delay: bool = True) -> List[Tuple[str, str]]:
+        """(producer, consumer) pairs for one-iteration scheduling.
+
+        A delay token breaks producer->consumer precedence only when the
+        initial tokens cover a whole read window, i.e. ``delay >= rate``.
+        With the MoC's single delay token and r > 1, the first read still
+        needs r-1 *fresh* tokens (paper Fig. 2: read 1 consumes slots
+        0..r-1 = D plus write 1's prefix), so the producer keeps firing
+        first and the delay merely shifts the data by one token.
+        """
+        out = []
+        for e in self.edges:
+            f = self.fifos[e.fifo]
+            if ignore_delay and f.delay >= f.rate:
+                continue
+            out.append((e.src_actor, e.dst_actor))
+        return out
+
+    def topological_order(self) -> List[str]:
+        """Topo sort with delay edges broken; raises on deadlock cycles.
+
+        In this MoC every channel has the same rate at both ends, so the SDF
+        repetition vector is all-ones and one *iteration* = one firing of
+        every actor.  A cycle with no delay token can never fire — the
+        classic dataflow deadlock — which we diagnose here at build time.
+        """
+        names = list(self.actors)
+        idx = {n: i for i, n in enumerate(names)}
+        n = len(names)
+        adj = [[] for _ in range(n)]
+        indeg = [0] * n
+        for u, v in self.precedence_edges(ignore_delay=True):
+            adj[idx[u]].append(idx[v])
+            indeg[idx[v]] += 1
+        order, stack = [], [i for i in range(n) if indeg[i] == 0]
+        while stack:
+            u = stack.pop()
+            order.append(u)
+            for v in adj[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    stack.append(v)
+        if len(order) != n:
+            stuck = [names[i] for i in range(n) if indeg[i] > 0]
+            raise ValueError(
+                "network deadlock: cycle without an initial (delay) token "
+                f"through actors {stuck} — paper §2.2 requires a delay token "
+                "on feedback loops (IIR example)"
+            )
+        return [names[i] for i in order]
+
+    def check_schedule_feasible(self) -> None:
+        """Simulate one iteration of the single-appearance schedule with
+        occupancy counters and verify Eq. 1 capacities are never exceeded
+        and no read underflows (trace-time analogue of blocking semantics).
+        """
+        occ = {name: spec.delay for name, spec in self.fifos.items()}
+        for actor in self.topological_order():
+            a = self.actors[actor]
+            for p in a.all_in_ports():
+                f = self.fifo_for_in_port(actor, p)
+                need = 1 if p == a.control_port else f.rate
+                if occ[f.name] < need:
+                    raise ValueError(
+                        f"schedule infeasible: {actor}.{p} reads {need} from "
+                        f"{f.name} holding {occ[f.name]}"
+                    )
+                occ[f.name] -= need
+            for p in a.out_ports:
+                f = self.fifo_for_out_port(actor, p)
+                if occ[f.name] + f.rate > f.writable_occupancy_bound:
+                    raise ValueError(
+                        f"schedule infeasible: {actor}.{p} writes {f.rate} to "
+                        f"{f.name} at {occ[f.name]}/{f.writable_occupancy_bound} "
+                        f"— blocking bound violated (Eq. 1 phase pattern)"
+                    )
+                occ[f.name] += f.rate
+        for name, spec in self.fifos.items():
+            if occ[name] != spec.delay:
+                raise ValueError(
+                    f"unbalanced iteration: fifo {name} ends at occupancy "
+                    f"{occ[name]} != initial {spec.delay}; single-appearance "
+                    "schedule would grow without bound"
+                )
+
+
+def repetition_vector(network: Network) -> Dict[str, int]:
+    """SDF balance equations (Lee & Messerschmitt) for this MoC.
+
+    Both ports of a channel inherit the same rate r, so production ==
+    consumption on every edge and the minimal repetition vector is all-ones
+    for any *connected* network.  Disconnected components are independently
+    all-ones too; we solve it generally anyway so the function stays honest
+    if the MoC is ever relaxed (paper §5 names rate relaxation as the main
+    future-work direction).
+    """
+    names = list(network.actors)
+    idx = {n: i for i, n in enumerate(names)}
+    n = len(names)
+    # Union-find over equal-rate constraints q_src * r == q_dst * r  ->  q_src == q_dst.
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for e in network.edges:
+        a, b = find(idx[e.src_actor]), find(idx[e.dst_actor])
+        if a != b:
+            parent[a] = b
+    return {name: 1 for name in names}
+
+
+def iteration_token_flops(network: Network) -> int:
+    """Static per-iteration FLOP estimate from actor annotations (roofline)."""
+    return int(sum(a.cost_flops for a in network.actors.values()))

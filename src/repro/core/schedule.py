@@ -1,0 +1,48 @@
+"""Scheduling utilities for the MoC.
+
+The MoC gives every channel a single rate shared by both ports, so the SDF
+repetition vector is all-ones (see ``repro.core.network.repetition_vector``)
+and a valid static schedule is a topological order with delay edges broken.
+
+This module adds the *cycle-static* (CSDF-flavored) utilities used by the
+LM-side integrations: layer stacks whose behaviour varies in a fixed cycle
+(gemma3's 5 local : 1 global attention pattern, recurrentgemma's 2 RG-LRU :
+1 local-attention pattern) are exactly cyclic rate tables — data-independent
+rate variation the paper's §2.1 attributes to CSDF, sitting between the
+static and the fully dynamic scheduler.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def cyclic_rate_table(pattern: Sequence[int], length: int) -> np.ndarray:
+    """Unroll a cyclic per-firing pattern to ``length`` firings.
+
+    ``cyclic_rate_table([0,0,1], 26)`` -> the recurrentgemma layer kinds
+    (0 = RG-LRU, 1 = local attention) for 26 layers.
+    """
+    pattern = list(pattern)
+    reps = -(-length // len(pattern))
+    return np.asarray((pattern * reps)[:length], dtype=np.int32)
+
+
+def layer_pattern_groups(pattern: Sequence[int], n_layers: int) -> Tuple[int, int]:
+    """(n_full_cycles, n_remainder_layers) of a cyclic layer pattern.
+
+    Used to build scan-over-groups layer stacks: full cycles are scanned
+    (one compiled body per cycle position), remainder layers are unrolled.
+    Keeping the scanned body small is what keeps 80-layer configs cheap to
+    lower for the 512-device dry-run.
+    """
+    cycle = len(pattern)
+    return n_layers // cycle, n_layers % cycle
+
+
+def validate_single_appearance(order: List[str], names: Sequence[str]) -> None:
+    if sorted(order) != sorted(names):
+        raise ValueError(
+            f"schedule must contain every actor exactly once; got {order} for {list(names)}"
+        )

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, FileTokens, SyntheticLM, make_source
+
+__all__ = ["DataConfig", "FileTokens", "SyntheticLM", "make_source"]

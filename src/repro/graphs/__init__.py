@@ -1,0 +1,6 @@
+"""Paper application graphs (§4): video Motion Detection and Dynamic
+Predistortion, expressed as repro.core actor networks."""
+from repro.graphs.motion_detection import build_motion_detection
+from repro.graphs.dpd import build_dpd
+
+__all__ = ["build_motion_detection", "build_dpd"]

@@ -1,0 +1,212 @@
+"""The Dynamic Predistortion application — paper §4.2, Fig. 5.
+
+Configuration (C) actor periodically reconfigures which of the 10 parallel
+Poly (P) branches (nonlinear basis + 10-tap complex FIR) are active; the
+Adder (A) sums the active branches.  The number of active filters changes
+arbitrarily between 2 and 10 at run time — dynamic data rates that CSDF
+cannot model (paper §4.2) and that DAL cannot put on the accelerator.
+
+Wiring (22 complex data channels + 11 control channels):
+
+    source --f_in--> fork --b_k--> poly_k --y_k--> adder --f_out--> sink
+    config --c_fork--> fork, --c_k--> poly_k, --c_add--> adder
+
+Complex samples are carried as (2, L) f32 tokens (re/im planes) instead of
+the paper's separate re/im channel pairs — identical bytes, half the graph
+clutter (DESIGN.md §8).  Token = 32 768 complex samples (256 KB) so that
+Eq. 1 over the 22 data channels reproduces Table 1's 11.5 MB, and the
+reconfiguration period of 65 536 samples = a new control value every 2
+firings (paper §4.2).
+
+The token rate of the dynamic part is 1 — the paper's own restriction
+(§5: ports have at most two rates {0, r}; arbitrary run-time data paths
+need r=1 to avoid deadlock).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Edge, FifoSpec, Network, dynamic_actor, static_actor
+from repro.kernels.dyn_fir import N_BRANCHES, N_TAPS, branch_ref
+from repro.kernels.dyn_fir.ops import dpd_branch
+
+BLOCK_L = 32768                 # complex samples per token (256 KB)
+RECONF_PERIOD_SAMPLES = 65536   # paper §4.2
+RECONF_PERIOD_FIRINGS = RECONF_PERIOD_SAMPLES // BLOCK_L
+
+
+def default_active_schedule(n_firings: int, seed: int = 0,
+                            lo: int = 2, hi: int = N_BRANCHES) -> np.ndarray:
+    """Number of active filters per firing: changes every RECONF period,
+    arbitrary in [lo, hi] (paper: 2..10, externally defined)."""
+    rng = np.random.default_rng(seed)
+    n_periods = -(-n_firings // RECONF_PERIOD_FIRINGS)
+    per = rng.integers(lo, hi + 1, n_periods)
+    return np.repeat(per, RECONF_PERIOD_FIRINGS)[:n_firings].astype(np.int32)
+
+
+def build_dpd(n_firings: int,
+              active_schedule: Optional[np.ndarray] = None,
+              block_l: int = BLOCK_L,
+              n_branches: int = N_BRANCHES,
+              signal: Optional[jax.Array] = None,
+              fir_impl: str = "xla",
+              static_all_active: bool = False) -> Network:
+    """Build the DPD network.
+
+    ``static_all_active=True`` builds the *static* variant (every branch
+    always on, no control ports) — the DAL-compatible baseline used for
+    the Table 4 comparison and the 5x measurement.
+    """
+    L = block_l
+    tok = (2, L)
+    if active_schedule is None:
+        active_schedule = default_active_schedule(n_firings)
+    sched = jnp.asarray(active_schedule, jnp.int32)
+    branch_names = [f"poly{k}" for k in range(n_branches)]
+
+    # ---------------------------------------------------------------- #
+    # Source / sink.
+    # ---------------------------------------------------------------- #
+    def src_fire(state, inputs, rates):
+        data, idx = state
+        win = jax.lax.dynamic_slice_in_dim(data, idx * L, L, axis=1)
+        return (data, idx + 1), {"out": win[None]}
+
+    def src_init():
+        data = (signal if signal is not None
+                else jnp.zeros((2, n_firings * L), jnp.float32))
+        return (jnp.asarray(data, jnp.float32), jnp.int32(0))
+
+    source = static_actor("source", (), ("out",), src_fire, init=src_init,
+                          ready=lambda st: st[1] < n_firings)
+
+    def sink_fire(state, inputs, rates):
+        data, idx = state
+        data = jax.lax.dynamic_update_slice_in_dim(
+            data, inputs["in"][0], idx * L, axis=1)
+        return (data, idx + 1), {}
+
+    sink = static_actor("sink", ("in",), (), sink_fire,
+                        init=lambda: (jnp.zeros((2, n_firings * L), jnp.float32),
+                                      jnp.int32(0)),
+                        finish=lambda st: st[0])
+
+    # ---------------------------------------------------------------- #
+    # Configuration actor: emits the active-count token to 12 controls.
+    # ---------------------------------------------------------------- #
+    ctrl_ports = ["c_fork", "c_add"] + [f"c{k}" for k in range(n_branches)]
+
+    def config_fire(state, inputs, rates):
+        idx = state
+        n_active = sched[jnp.clip(idx, 0, sched.shape[0] - 1)]
+        tok_out = n_active.reshape(1, 1)
+        return idx + 1, {p: tok_out for p in ctrl_ports}
+
+    config = static_actor("config", (), tuple(ctrl_ports), config_fire,
+                          init=lambda: jnp.int32(0),
+                          ready=lambda st: st < n_firings)
+
+    # ---------------------------------------------------------------- #
+    # Fork: broadcast the input window to enabled branches only.
+    # ---------------------------------------------------------------- #
+    fork_outs = tuple(f"b{k}" for k in range(n_branches))
+
+    def fork_control(tok):
+        n = tok[0]
+        d = {"in": jnp.int32(1)}
+        for k in range(n_branches):
+            d[f"b{k}"] = (k < n).astype(jnp.int32)
+        return d
+
+    def fork_fire(state, inputs, rates):
+        return state, {p: inputs["in"] for p in fork_outs}
+
+    if static_all_active:
+        fork = static_actor("fork", ("in",), fork_outs, fork_fire)
+    else:
+        fork = dynamic_actor("fork", "c", fork_control, ("in",), fork_outs,
+                             fork_fire)
+
+    # ---------------------------------------------------------------- #
+    # Poly branches: basis + 10-tap complex FIR, 9-sample history state.
+    # ---------------------------------------------------------------- #
+    def make_poly(k: int):
+        order = k + 1
+
+        def init():
+            hist = jnp.zeros((2, N_TAPS - 1), jnp.float32)
+            # Deterministic per-branch taps (benchmark/repro friendly).
+            rng = np.random.default_rng(100 + k)
+            taps = jnp.asarray(rng.normal(scale=0.3, size=(2, N_TAPS)), jnp.float32)
+            return (hist, taps)
+
+        def fire(state, inputs, rates):
+            hist, taps = state
+            win = inputs["in"][0]                      # (2, L)
+            x = jnp.concatenate([hist, win], axis=1)   # (2, L + T - 1)
+            yr, yi = dpd_branch(x[0], x[1], taps[0], taps[1], order=order,
+                                impl=fir_impl)
+            new_hist = x[:, -(N_TAPS - 1):]
+            return (new_hist, taps), {"out": jnp.stack([yr, yi])[None]}
+
+        def control(tok):
+            on = (jnp.int32(k) < tok[0]).astype(jnp.int32)
+            return {"in": on, "out": on}
+
+        flops = 2 * L * (4 * N_TAPS + 2 * order)  # complex MACs + basis
+        if static_all_active:
+            return static_actor(f"poly{k}", ("in",), ("out",), fire, init=init,
+                                cost_flops=flops)
+        return dynamic_actor(f"poly{k}", "c", control, ("in",), ("out",), fire,
+                             init=init, cost_flops=flops)
+
+    polys = [make_poly(k) for k in range(n_branches)]
+
+    # ---------------------------------------------------------------- #
+    # Adder: sum of enabled branch outputs.
+    # ---------------------------------------------------------------- #
+    add_ins = tuple(f"y{k}" for k in range(n_branches))
+
+    def adder_fire(state, inputs, rates):
+        acc = jnp.zeros((1, 2, L), jnp.float32)
+        for k in range(n_branches):
+            # Disabled windows hold stale data — gate by the rate flag.
+            acc = acc + rates[f"y{k}"].astype(jnp.float32) * inputs[f"y{k}"]
+        return state, {"out": acc}
+
+    def adder_control(tok):
+        n = tok[0]
+        d = {"out": jnp.int32(1)}
+        for k in range(n_branches):
+            d[f"y{k}"] = (k < n).astype(jnp.int32)
+        return d
+
+    if static_all_active:
+        adder = static_actor("adder", add_ins, ("out",), adder_fire)
+    else:
+        adder = dynamic_actor("adder", "c", adder_control, add_ins, ("out",),
+                              adder_fire)
+
+    # ---------------------------------------------------------------- #
+    # Channels (Eq. 1 capacities) and wiring.
+    # ---------------------------------------------------------------- #
+    fifos = [FifoSpec("f_in", 1, tok), FifoSpec("f_out", 1, tok)]
+    edges = [Edge("f_in", "source", "out", "fork", "in"),
+             Edge("f_out", "adder", "out", "sink", "in")]
+    for k in range(n_branches):
+        fifos += [FifoSpec(f"f_b{k}", 1, tok), FifoSpec(f"f_y{k}", 1, tok)]
+        edges += [Edge(f"f_b{k}", "fork", f"b{k}", f"poly{k}", "in"),
+                  Edge(f"f_y{k}", f"poly{k}", "out", "adder", f"y{k}")]
+    actors = [source, fork, *polys, adder, sink]
+    if not static_all_active:
+        for p, dst, port in ([("c_fork", "fork", "c"), ("c_add", "adder", "c")] +
+                             [(f"c{k}", f"poly{k}", "c") for k in range(n_branches)]):
+            fifos.append(FifoSpec(f"f_{p}", 1, (1,), jnp.int32, is_control=True))
+            edges.append(Edge(f"f_{p}", "config", p, dst, port))
+        actors.insert(0, config)
+    return Network(actors, fifos, edges)

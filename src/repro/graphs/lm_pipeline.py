@@ -1,0 +1,90 @@
+"""LM blocks as pipeline stages over a mesh axis — the paper's
+heterogeneous actor-to-processor mapping applied to a transformer.
+
+Each pipeline *stage* is a run of LM blocks (an actor in the paper's
+sense); stage-to-stage activations are rate-r FIFO channels realized as
+the double-buffered `ppermute` of ``repro.core.pipeline_spmd`` (Eq. 1's
+2r capacity == the send/recv pair).  This is the third distribution mode
+of the framework next to pjit DP/TP and the dataflow executors, and the
+building block for PP × DP × TP meshes at >2 pods.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.pipeline import pipeline_reference, pipeline_spmd
+from repro.models import lm as lm_mod
+from repro.models.lm import _block_apply, layer_plan
+
+PyTree = Any
+
+
+def stack_stage_params(params: PyTree, cfg: ArchConfig, n_stages: int) -> PyTree:
+    """Regroup the scan-stacked layer groups into ``n_stages`` pipeline
+    stages: leaves (n_groups, ...) -> (n_stages, groups_per_stage, ...)."""
+    cycle, n_groups, rest = layer_plan(cfg)
+    if rest:
+        raise ValueError("pipeline stages need rest-free layer plans")
+    if n_groups % n_stages:
+        raise ValueError(f"{n_groups} groups not divisible into {n_stages} stages")
+    per = n_groups // n_stages
+    return jax.tree.map(
+        lambda l: l.reshape((n_stages, per) + l.shape[1:]), params["groups"])
+
+
+def make_stage_fn(cfg: ArchConfig):
+    """(stage_params, x) -> x: apply this stage's layer groups."""
+    cycle, _, _ = layer_plan(cfg)
+
+    def stage_fn(stage_params, x):
+        per = jax.tree.leaves(stage_params)[0].shape[0]
+
+        def group_body(x, gp):
+            for i, kind in enumerate(cycle):
+                x, _, _ = _block_apply(cfg, kind, gp[f"c{i}"], x[None],
+                                       mode="train")
+                x = x[0]
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, stage_params)
+        return x
+
+    return stage_fn
+
+
+def pipeline_forward(params: PyTree, cfg: ArchConfig, tokens: jax.Array,
+                     mesh, n_stages: int, axis: str = "stage") -> jax.Array:
+    """Full forward with the block stack distributed as pipeline stages.
+
+    tokens: (n_micro, S) — one sequence per microbatch (the GPipe schedule
+    streams them through the stages; B + S - 1 ticks).
+    Embedding/unembedding run replicated outside the pipeline (they are
+    the source/sink actors of the network).
+    """
+    from repro.models.layers import embed_lookup, rmsnorm, DTYPE
+    x = embed_lookup(params["embed"]["w"], tokens).astype(DTYPE)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(DTYPE)
+    stage_params = stack_stage_params(params, cfg, n_stages)
+    y = pipeline_spmd(make_stage_fn(cfg), stage_params, x, mesh, axis=axis)
+    y = rmsnorm(params["final_norm"], y, cfg.rms_eps)
+    head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    return lm_mod._unembed_masked(y, head, cfg)
+
+
+def pipeline_forward_reference(params: PyTree, cfg: ArchConfig,
+                               tokens: jax.Array, n_stages: int) -> jax.Array:
+    """Oracle: same computation, sequential stages, no mesh."""
+    from repro.models.layers import embed_lookup, rmsnorm, DTYPE
+    x = embed_lookup(params["embed"]["w"], tokens).astype(DTYPE)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(DTYPE)
+    stage_params = stack_stage_params(params, cfg, n_stages)
+    y = pipeline_reference(make_stage_fn(cfg), stage_params, x)
+    y = rmsnorm(params["final_norm"], y, cfg.rms_eps)
+    head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    return lm_mod._unembed_masked(y, head, cfg)

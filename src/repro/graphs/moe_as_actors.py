@@ -1,0 +1,211 @@
+"""The MoE layer expressed literally as a dynamic-data-rate actor network.
+
+This is the bridge between the paper's MoC and the LM substrate
+(DESIGN.md §3): one *router* (control) actor and E *expert* (dynamic)
+actors.  Per firing (= one token batch):
+
+  router:   consumes the token window, emits (a) one control token per
+            expert carrying that expert's per-firing token count
+            (0..capacity — the paper's rate-{0, r} restriction realized as
+            a masked fixed-capacity window), and (b) the dispatched token
+            slabs on its data ports;
+  expert_e: dynamic actor — control token disables the firing entirely
+            when no tokens routed (lax.cond skips the FFN, the paper's 5x
+            mechanism); otherwise consumes its (capacity, D) slab, applies
+            its FFN, and emits the processed slab;
+  combine:  consumes all expert slabs + the routing metadata and
+            reconstitutes the (N, D) output with combine weights.
+
+``moe_actor_network`` is semantically equivalent to
+``repro.models.moe.moe_layer`` (tested in tests/test_moe_actors.py) —
+the einsum/scatter implementation is the *fused accelerated* form of this
+network, exactly like the paper's OpenCL kernels are the accelerated form
+of its C actors.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Edge, FifoSpec, Network, dynamic_actor, static_actor
+from repro.models.layers import F32
+from repro.models.moe import capacity_for
+
+
+def build_moe_network(params: Dict[str, jax.Array], n_tokens: int, d_model: int,
+                      top_k: int, capacity_factor: float,
+                      n_firings: int, token_stream: jax.Array) -> Network:
+    """Actor network for one MoE layer processing ``n_firings`` windows of
+    ``n_tokens`` tokens each.  ``token_stream``: (n_firings*n_tokens, D)."""
+    E = params["router"].shape[1]
+    C = capacity_for(n_tokens, E, top_k, capacity_factor)
+    N = n_tokens
+
+    # ------------------------------------------------------------------ #
+    def src_fire(state, inputs, rates):
+        data, idx = state
+        win = jax.lax.dynamic_slice_in_dim(data, idx * N, N, axis=0)
+        return (data, idx + 1), {"out": win[None]}
+
+    source = static_actor(
+        "source", (), ("out",), src_fire,
+        init=lambda: (jnp.asarray(token_stream), jnp.int32(0)),
+        ready=lambda st: st[1] < n_firings)
+
+    # ------------------------------------------------------------------ #
+    # Router: control actor. Emits per-expert counts (control tokens),
+    # dispatched slabs, and combine metadata.
+    # ------------------------------------------------------------------ #
+    def route(xt):
+        logits = (xt @ params["router"]).astype(F32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_e = jax.lax.top_k(probs, top_k)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+        onehot = jax.nn.one_hot(gate_e, E, dtype=jnp.int32)
+        flat = onehot.reshape(N * top_k, E)
+        ranks = (jnp.cumsum(flat, axis=0) - flat).reshape(N, top_k, E)
+        rank = jnp.sum(ranks * onehot, axis=-1)
+        keep = rank < C
+        slot = jnp.where(keep, gate_e * C + rank, E * C)
+        dispatch = jnp.zeros((E * C + 1, xt.shape[1]), xt.dtype)
+        dispatch = dispatch.at[slot.reshape(-1)].add(
+            jnp.repeat(xt, top_k, axis=0).reshape(N * top_k, -1))
+        slabs = dispatch[:-1].reshape(E, C, -1)
+        counts = jnp.sum(jax.nn.one_hot(gate_e, E, dtype=jnp.int32)
+                         * keep[..., None], axis=(0, 1))
+        w = (gate_w * keep.astype(F32))
+        return slabs, counts, slot, w
+
+    rt_outs = tuple(f"x{e}" for e in range(E)) + tuple(f"c{e}" for e in range(E)) \
+        + ("slot", "w")
+
+    def router_fire(state, inputs, rates):
+        xt = inputs["in"][0]
+        slabs, counts, slot, w = route(xt)
+        outs = {f"x{e}": slabs[e][None] for e in range(E)}
+        outs.update({f"c{e}": counts[e].reshape(1, 1) for e in range(E)})
+        outs["slot"] = slot[None].astype(jnp.int32)
+        outs["w"] = w[None]
+        return state, outs
+
+    router = static_actor("router", ("in",), rt_outs, router_fire)
+
+    # ------------------------------------------------------------------ #
+    # Experts: dynamic actors — control token = routed count (rate 0 or r).
+    # ------------------------------------------------------------------ #
+    def make_expert(e: int):
+        def control(tok):
+            on = (tok[0] > 0).astype(jnp.int32)
+            return {"in": on, "out": on}
+
+        def fire(state, inputs, rates):
+            slab = inputs["in"][0]                      # (C, D)
+            g = jax.nn.silu((slab @ params["we_gate"][e]).astype(F32)).astype(slab.dtype)
+            u = slab @ params["we_up"][e]
+            y = (g * u) @ params["we_down"][e]
+            return state, {"out": y[None]}
+
+        return dynamic_actor(f"expert{e}", "c", control, ("in",), ("out",), fire)
+
+    experts = [make_expert(e) for e in range(E)]
+
+    # ------------------------------------------------------------------ #
+    # Combine: rates of expert inputs mirror the expert enables, so the
+    # combine actor is dynamic too (same mask derived from its own control
+    # stream — the router broadcasts counts to it as a packed token).
+    # ------------------------------------------------------------------ #
+    def comb_control(tok):
+        d = {f"y{e}": (tok[e] > 0).astype(jnp.int32) for e in range(E)}
+        d.update({"slot": jnp.int32(1), "w": jnp.int32(1), "out": jnp.int32(1)})
+        return d
+
+    def comb_fire(state, inputs, rates):
+        y_flat = jnp.zeros((E * C + 1, d_model), token_stream.dtype)
+        for e in range(E):
+            gated = rates[f"y{e}"].astype(token_stream.dtype) * inputs[f"y{e}"][0]
+            y_flat = jax.lax.dynamic_update_slice_in_dim(y_flat, gated, e * C, axis=0)
+        slot = inputs["slot"][0]
+        w = inputs["w"][0]
+        per_k = y_flat[slot.reshape(-1)].reshape(N, top_k, d_model)
+        y = jnp.einsum("nkd,nk->nd", per_k, w.astype(token_stream.dtype))
+        return state, {"out": y[None]}
+
+    comb_ins = tuple(f"y{e}" for e in range(E)) + ("slot", "w")
+    combine = dynamic_actor("combine", "cc", comb_control, comb_ins, ("out",),
+                            comb_fire)
+
+    def ctl_fire(state, inputs, rates):
+        # pack all counts into one control token for the combine actor
+        return state, {"out": inputs["in"]}
+
+    # router emits per-expert counts; we need a packed (E,) control token
+    # for combine — add a small static packer actor.
+    def pack_fire(state, inputs, rates):
+        vec = jnp.concatenate([inputs[f"c{e}"][0] for e in range(E)])
+        return state, {"out": vec[None]}
+
+    packer = static_actor("packer", tuple(f"c{e}" for e in range(E)), ("out",),
+                          pack_fire)
+
+    def sink_fire(state, inputs, rates):
+        data, idx = state
+        data = jax.lax.dynamic_update_slice_in_dim(
+            data, inputs["in"][0], idx * N, axis=0)
+        return (data, idx + 1), {}
+
+    sink = static_actor(
+        "sink", ("in",), (), sink_fire,
+        init=lambda: (jnp.zeros((n_firings * N, d_model), token_stream.dtype),
+                      jnp.int32(0)),
+        finish=lambda st: st[0])
+
+    # ------------------------------------------------------------------ #
+    D = d_model
+    fifos = [FifoSpec("f_in", 1, (N, D)), FifoSpec("f_out", 1, (N, D)),
+             FifoSpec("f_slot", 1, (N, top_k), jnp.int32),
+             FifoSpec("f_w", 1, (N, top_k), jnp.float32),
+             FifoSpec("f_cpack", 1, (2 * E,), jnp.int32, is_control=True)]
+    edges = [Edge("f_in", "source", "out", "router", "in"),
+             Edge("f_slot", "router", "slot", "combine", "slot"),
+             Edge("f_w", "router", "w", "combine", "w"),
+             Edge("f_cpack", "packer", "out", "combine", "cc"),
+             Edge("f_out", "combine", "out", "sink", "in")]
+    # control fifo token must be rate-1 of shape (E,)... packed as (2E,) to
+    # satisfy is_control token-shape freedom; combine reads tok[e].
+    fifos[-1] = FifoSpec("f_cpack", 1, (2 * E,), jnp.int32, is_control=True)
+    for e in range(E):
+        fifos += [FifoSpec(f"f_x{e}", 1, (C, D)),
+                  FifoSpec(f"f_y{e}", 1, (C, D)),
+                  FifoSpec(f"f_ce{e}", 1, (1,), jnp.int32, is_control=True),
+                  FifoSpec(f"f_cp{e}", 1, (1,), jnp.int32)]
+        edges += [Edge(f"f_x{e}", "router", f"x{e}", f"expert{e}", "in"),
+                  Edge(f"f_y{e}", f"expert{e}", "out", "combine", f"y{e}"),
+                  Edge(f"f_ce{e}", "router", f"c{e}", f"expert{e}", "c"),
+                  Edge(f"f_cp{e}", "router", f"c{e}_p", "packer", f"c{e}")]
+
+    # router needs separate out ports for packer copies of counts
+    rt_outs2 = rt_outs + tuple(f"c{e}_p" for e in range(E))
+
+    def router_fire2(state, inputs, rates):
+        xt = inputs["in"][0]
+        slabs, counts, slot, w = route(xt)
+        outs = {f"x{e}": slabs[e][None] for e in range(E)}
+        outs.update({f"c{e}": counts[e].reshape(1, 1) for e in range(E)})
+        outs.update({f"c{e}_p": counts[e].reshape(1, 1) for e in range(E)})
+        outs["slot"] = slot[None].astype(jnp.int32)
+        outs["w"] = w[None]
+        return state, outs
+
+    router = static_actor("router", ("in",), rt_outs2, router_fire2)
+
+    def pack_fire2(state, inputs, rates):
+        vec = jnp.concatenate([inputs[f"c{e}"][0] for e in range(E)] * 2)[:2 * E]
+        return state, {"out": vec[None]}
+
+    packer = static_actor("packer", tuple(f"c{e}" for e in range(E)), ("out",),
+                          pack_fire2)
+
+    return Network([source, router, packer, *experts, combine, sink],
+                   fifos, edges)

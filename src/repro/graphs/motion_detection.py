@@ -1,0 +1,115 @@
+"""The Motion Detection application — paper §4.1, Fig. 4.
+
+Five actors: Source -> Gauss -> Thres -> Med -> Sink.  Gauss feeds Thres
+through *two* channels, one of which carries an initial (delay) token: the
+one-frame delay that enables consecutive-frame subtraction (the dotted
+channel in Fig. 4).
+
+Frame size 320x240, 8-bit grayscale: FIFO tokens are uint8 frames of
+76 800 bytes exactly as in the paper (so Eq. 1 reproduces Table 1's buffer
+memory); arithmetic inside actors runs in f32 and is rounded back to u8 at
+every port — the 8-bit inter-actor contract of the original.  Token rate
+r=1 for GPP-style execution, r=4 for the accelerated configuration
+(paper §4.3).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Edge, FifoSpec, Network, static_actor
+from repro.kernels.gauss5x5 import gauss5x5
+from repro.kernels.motion_post import DEFAULT_THRESHOLD, med_ref, thres_ref
+
+FRAME_H, FRAME_W = 240, 320
+
+
+def build_motion_detection(n_frames: int, rate: int = 1,
+                           frame_hw: Tuple[int, int] = (FRAME_H, FRAME_W),
+                           threshold: float = DEFAULT_THRESHOLD,
+                           video: Optional[jax.Array] = None,
+                           gauss_impl: str = "xla") -> Network:
+    """Build the 5-actor MD network for ``n_frames`` total frames.
+
+    ``n_frames`` must be divisible by ``rate`` (windows of ``rate`` frames
+    per firing).  ``video``: optional (n_frames, H, W) f32 array staged
+    into the source actor; defaults to zeros (benchmarks stage real data
+    via the source state).
+    """
+    H, W = frame_hw
+    if n_frames % rate:
+        raise ValueError(f"n_frames={n_frames} not divisible by rate={rate}")
+    n_iter = n_frames // rate
+    tok = (H, W)
+
+    def to_u8(x):
+        return jnp.clip(jnp.round(x), 0, 255).astype(jnp.uint8)
+
+    def src_fire(state, inputs, rates):
+        data, idx = state
+        win = jax.lax.dynamic_slice_in_dim(data, idx * rate, rate, axis=0)
+        return (data, idx + 1), {"out": win}
+
+    def src_init():
+        data = video if video is not None else jnp.zeros((n_frames, H, W), jnp.uint8)
+        return (to_u8(jnp.asarray(data)), jnp.int32(0))
+
+    source = static_actor("source", (), ("out",), src_fire, init=src_init,
+                          ready=lambda st: st[1] < n_iter)
+
+    def gauss_fire(state, inputs, rates):
+        del rates
+        out = jax.vmap(lambda f: gauss5x5(f, impl=gauss_impl))(
+            inputs["in"].astype(jnp.float32))
+        out = to_u8(out)
+        # One filtered stream feeds two channels (direct + delayed).
+        return state, {"out": out, "out_d": out}
+
+    gauss = static_actor("gauss", ("in",), ("out", "out_d"), gauss_fire,
+                         cost_flops=rate * H * W * 10 * 2)  # separable 5+5 MACs
+
+    def thres_fire(state, inputs, rates):
+        del rates
+        out = jax.vmap(lambda c, p: thres_ref(c, p, threshold))(
+            inputs["cur"].astype(jnp.float32), inputs["prev"].astype(jnp.float32))
+        return state, {"out": to_u8(out)}
+
+    thres = static_actor("thres", ("cur", "prev"), ("out",), thres_fire,
+                         cost_flops=rate * H * W * 3)
+
+    def med_fire(state, inputs, rates):
+        del rates
+        out = jax.vmap(med_ref)(inputs["in"].astype(jnp.float32))
+        return state, {"out": to_u8(out)}
+
+    med = static_actor("med", ("in",), ("out",), med_fire,
+                       cost_flops=rate * H * W * 12)
+
+    def sink_fire(state, inputs, rates):
+        del rates
+        data, idx = state
+        data = jax.lax.dynamic_update_slice_in_dim(data, inputs["in"], idx * rate, axis=0)
+        return (data, idx + 1), {}
+
+    sink = static_actor("sink", ("in",), (), sink_fire,
+                        init=lambda: (jnp.zeros((n_frames, H, W), jnp.uint8), jnp.int32(0)),
+                        finish=lambda st: st[0])
+
+    u8 = jnp.uint8
+    fifos = [
+        FifoSpec("f_src_gauss", rate, tok, u8),
+        FifoSpec("f_gauss_thres", rate, tok, u8),
+        FifoSpec("f_gauss_thres_d", rate, tok, u8, delay=1),  # the dotted channel
+        FifoSpec("f_thres_med", rate, tok, u8),
+        FifoSpec("f_med_sink", rate, tok, u8),
+    ]
+    edges = [
+        Edge("f_src_gauss", "source", "out", "gauss", "in"),
+        Edge("f_gauss_thres", "gauss", "out", "thres", "cur"),
+        Edge("f_gauss_thres_d", "gauss", "out_d", "thres", "prev"),
+        Edge("f_thres_med", "thres", "out", "med", "in"),
+        Edge("f_med_sink", "med", "out", "sink", "in"),
+    ]
+    return Network([source, gauss, thres, med, sink], fifos, edges)

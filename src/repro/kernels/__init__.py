@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (target: pl.pallas_call + BlockSpec VMEM tiling;
+validated via interpret=True on CPU). Each subpackage: kernel.py (pallas),
+ops.py (jitted dispatch), ref.py (pure-jnp oracle)."""

@@ -1,0 +1,6 @@
+from repro.kernels.dyn_fir.ops import dpd_branch
+from repro.kernels.dyn_fir.ref import (N_BRANCHES, N_TAPS, basis_ref,
+                                       branch_ref, dpd_bank_ref, fir_ref)
+
+__all__ = ["dpd_branch", "branch_ref", "basis_ref", "fir_ref",
+           "dpd_bank_ref", "N_TAPS", "N_BRANCHES"]

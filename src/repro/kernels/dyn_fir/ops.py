@@ -1,0 +1,22 @@
+"""Jitted entry points for the DPD branch kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dyn_fir.kernel import dpd_branch_pallas
+from repro.kernels.dyn_fir.ref import (N_BRANCHES, N_TAPS, basis_ref,
+                                       branch_ref, dpd_bank_ref, fir_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("order", "impl", "block", "interpret"))
+def dpd_branch(x_re: jax.Array, x_im: jax.Array, h_re: jax.Array,
+               h_im: jax.Array, *, order: int, impl: str = "xla",
+               block: int = 1024, interpret: bool = True):
+    """One Poly actor's computation (basis + complex FIR)."""
+    if impl == "pallas":
+        return dpd_branch_pallas(x_re, x_im, h_re, h_im, order=order,
+                                 block=block, interpret=interpret)
+    return branch_ref(x_re, x_im, h_re, h_im, order)

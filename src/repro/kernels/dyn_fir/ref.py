@@ -1,0 +1,67 @@
+"""Oracle for the Dynamic Predistortion FIR branches (paper §4.2).
+
+A memory-polynomial DPD branch of order k computes the nonlinear basis
+``phi_k(x) = x * |x|^(2(k-1))`` followed by a 10-tap complex FIR.  The
+Adder sums the branches the Configuration actor enabled (2..10 active at
+any time — the paper's dynamic data rates).
+
+Complex samples are carried as (re, im) float32 pairs — the paper does the
+same ("a pair of single precision floats"), doubling the FIFO channel
+count inside the GPU box (46 channels total).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+N_TAPS = 10
+N_BRANCHES = 10
+
+
+def basis_ref(x_re: jnp.ndarray, x_im: jnp.ndarray, order: int
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """phi_k(x) = x * |x|^(2(k-1)); order k >= 1."""
+    mag2 = x_re * x_re + x_im * x_im
+    scale = mag2 ** (order - 1)
+    return x_re * scale, x_im * scale
+
+
+def fir_ref(x_re: jnp.ndarray, x_im: jnp.ndarray,
+            h_re: jnp.ndarray, h_im: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Causal complex FIR. x: (..., L + N_TAPS - 1) with history prefix;
+    h: (N_TAPS,). Returns (..., L): y[n] = sum_t h[t] * x[n + T-1 - t]."""
+    L = x_re.shape[-1] - (N_TAPS - 1)
+    y_re = jnp.zeros(x_re.shape[:-1] + (L,), jnp.float32)
+    y_im = jnp.zeros_like(y_re)
+    for t in range(N_TAPS):
+        xr = x_re[..., N_TAPS - 1 - t: N_TAPS - 1 - t + L]
+        xi = x_im[..., N_TAPS - 1 - t: N_TAPS - 1 - t + L]
+        y_re = y_re + h_re[t] * xr - h_im[t] * xi
+        y_im = y_im + h_re[t] * xi + h_im[t] * xr
+    return y_re, y_im
+
+
+def branch_ref(x_re, x_im, h_re, h_im, order: int):
+    """One Poly actor: basis then FIR."""
+    b_re, b_im = basis_ref(x_re, x_im, order)
+    return fir_ref(b_re, b_im, h_re, h_im)
+
+
+def dpd_bank_ref(x_re, x_im, taps_re, taps_im, active):
+    """Full bank: sum over branches k of active[k] * branch_k(x).
+
+    x: (..., L + T - 1); taps: (K, T); active: (K,) 0/1 float mask.
+    This is the *static* (DAL-style) semantics: every branch computed, the
+    mask only gates the sum — the baseline the dynamic runtime beats.
+    """
+    K = taps_re.shape[0]
+    L = x_re.shape[-1] - (N_TAPS - 1)
+    y_re = jnp.zeros(x_re.shape[:-1] + (L,), jnp.float32)
+    y_im = jnp.zeros_like(y_re)
+    for k in range(K):
+        br, bi = branch_ref(x_re, x_im, taps_re[k], taps_im[k], k + 1)
+        y_re = y_re + active[k] * br
+        y_im = y_im + active[k] * bi
+    return y_re, y_im

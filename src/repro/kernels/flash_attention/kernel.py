@@ -1,0 +1,127 @@
+"""Pallas TPU flash-attention forward (GQA + causal + sliding window).
+
+Classic blocked online-softmax: grid (B, H, nq, nk) with the K loop as the
+innermost (fastest) grid dimension so the output block and the running
+(m, l) statistics are *revisited* across K steps — they live in VMEM for
+the whole row of K blocks, which is exactly the contiguous-accumulator
+discipline the MXU wants (one (bq, hd) f32 accumulator resident while
+(bq, bk) score tiles stream through).
+
+GQA is handled in the BlockSpec index maps: the K/V block for query head
+``h`` is head ``h // G`` — no materialized head repetition.
+
+Block-level early exit: fully-masked (q-block, k-block) pairs (above the
+causal diagonal, or beyond the SWA window) are skipped with ``pl.when``,
+so SWA costs O(S * window) — the sub-quadratic property long_500k relies
+on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, scale: float, causal: bool,
+                  window: Optional[int], nk: int):
+    i = pl.program_id(2)   # q block
+    j = pl.program_id(3)   # k block
+
+    # ---- block-level masking predicate (static shapes, dynamic ids) ----
+    q_lo = i * bq                      # first q row of this block
+    q_hi = q_lo + bq - 1
+    k_lo = j * bk
+    k_hi = k_lo + bk - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi           # some key not in the future
+    if window is not None:
+        live &= k_hi > q_lo - window   # some key inside the window
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)      # (bk, hd)
+        s = (q @ k.T) * scale                          # (bq, bk)
+
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0, 0, 0, :]                     # (bq,)
+        l_prev = l_ref[0, 0, 0, :]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        o_prev = o_ref[0, :, 0, :].astype(jnp.float32)
+        o_new = o_prev * alpha[:, None] + p @ v
+        m_ref[0, 0, 0, :] = m_new
+        l_ref[0, 0, 0, :] = l_new
+        o_ref[0, :, 0, :] = o_new.astype(o_ref.dtype)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[0, 0, 0, :]
+        o = o_ref[0, :, 0, :].astype(jnp.float32)
+        o_ref[0, :, 0, :] = (o / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q: (B, S, H, hd); k/v: (B, S, Hkv, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    bq = min(bq, S)
+    bk = min(bk, S)
+    if S % bq or S % bk:
+        raise ValueError(f"S={S} must divide block sizes ({bq}, {bk})")
+    nq, nk = S // bq, S // bk
+    grid = (B, H, nq, nk)
+    scale = float(1.0 / (hd ** 0.5))
+
+    kern = functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
+                             causal=causal, window=window, nk=nk)
+    # f32 accumulation in the revisited output block; cast at the end.
+    out, _, _ = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, 1, 1, bq), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, 1, bq), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, nq, bq), jnp.float32),  # running max
+            jax.ShapeDtypeStruct((B, H, nq, bq), jnp.float32),  # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out.astype(q.dtype)

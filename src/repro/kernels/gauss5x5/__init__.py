@@ -1,0 +1,4 @@
+from repro.kernels.gauss5x5.ops import gauss5x5
+from repro.kernels.gauss5x5.ref import gauss5x5_ref
+
+__all__ = ["gauss5x5", "gauss5x5_ref"]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the 5x5 Gaussian actor (paper §4.1).
+
+Direct 25-tap convolution with the binomial kernel [1,4,6,4,1]^T[1,4,6,4,1]
+/ 256.  Matching the paper's boundary rule: "the Gauss actor skips
+filtering for two pixel rows in the frame top and frame bottom" — we skip
+the 2-pixel border (rows *and* columns; the paper names rows only, columns
+are unspecified — documented in DESIGN.md §8) and pass the original pixels
+through.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+KERNEL_1D = np.array([1.0, 4.0, 6.0, 4.0, 1.0]) / 16.0
+KERNEL_2D = np.outer(KERNEL_1D, KERNEL_1D)  # sums to 1
+
+
+def gauss5x5_ref(frame: jnp.ndarray) -> jnp.ndarray:
+    """frame: (H, W) float32 in [0, 255]. Returns filtered frame, borders kept."""
+    H, W = frame.shape
+    pad = jnp.pad(frame, 2, mode="edge")
+    acc = jnp.zeros_like(frame)
+    for dy in range(5):
+        for dx in range(5):
+            acc = acc + KERNEL_2D[dy, dx] * pad[dy:dy + H, dx:dx + W]
+    border = jnp.zeros((H, W), bool)
+    border = border.at[:2, :].set(True).at[-2:, :].set(True)
+    border = border.at[:, :2].set(True).at[:, -2:].set(True)
+    return jnp.where(border, frame, acc)

@@ -1,0 +1,4 @@
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rglru.ref import rglru_naive, rglru_ref, rglru_scan
+
+__all__ = ["rglru", "rglru_ref", "rglru_naive", "rglru_scan"]

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel for the RG-LRU diagonal linear recurrence.
+
+TPU adaptation: the GPU original (recurrentgemma) launches a scan kernel
+with per-thread state in registers; on TPU the analogue is one program per
+batch element walking sequence chunks (innermost grid dim) with the (W,)
+state held in a revisited f32 VMEM block for the whole sequence.  Within a
+chunk the recurrence h_t = a_t h_{t-1} + b_t is a short ``fori_loop`` over
+rows of a VMEM-resident (c, W) slab — each step is one (W,)-wide VPU FMA,
+and the state never touches HBM between steps (the XLA associative_scan
+lowering round-trips log2(L) intermediates).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rglru_kernel(la_ref, gx_ref, h_seq_ref, h_ref, *, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    la = la_ref[0].astype(jnp.float32)     # (c, W) log decay
+    gx = gx_ref[0].astype(jnp.float32)     # (c, W) gated input
+    a = jnp.exp(la)
+
+    def step(t, carry):
+        h = carry
+        h = a[t] * h + gx[t]
+        h_seq_ref[0, t, :] = h.astype(h_seq_ref.dtype)
+        return h
+
+    h0 = h_ref[0].astype(jnp.float32)      # (W,)
+    hT = jax.lax.fori_loop(0, chunk, step, h0)
+    h_ref[0] = hT
+
+
+def rglru_pallas(log_a, gx, *, chunk: int = 128, interpret: bool = False):
+    """log_a, gx: (B, L, W) f32. Returns (h_seq (B, L, W), hT (B, W))."""
+    B, L, W = gx.shape
+    L0 = L
+    if L % chunk:
+        pad = chunk - L % chunk
+        # log_a = 0 -> decay 1; gx = 0 -> state unchanged on padded steps.
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        gx = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+        L += pad
+    nc = L // chunk
+
+    kern = functools.partial(_rglru_kernel, chunk=chunk)
+    h_seq, hT = pl.pallas_call(
+        kern,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, W), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, W), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, W), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, W), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(log_a, gx)
+    return h_seq[:, :L0], hT

@@ -1,0 +1,6 @@
+"""Oracle for the RG-LRU kernel: the naive lax.scan recurrence."""
+from repro.models.rglru import rglru_naive, rglru_scan  # noqa: F401
+
+rglru_ref = rglru_naive
+
+__all__ = ["rglru_ref", "rglru_naive", "rglru_scan"]

@@ -1,0 +1,4 @@
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_chunked, ssd_naive, ssd_ref
+
+__all__ = ["ssd", "ssd_ref", "ssd_naive", "ssd_chunked"]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+TPU adaptation of the paper-pool's SSD algorithm (arXiv:2405.21060, GPU
+Triton original): one program per (batch, head) walks the chunk axis
+(innermost grid dim); the (P x N) state lives in a revisited f32 output
+block in VMEM for the whole sequence — zero HBM state traffic between
+chunks (the GPU version re-materializes through shared memory per block).
+Intra-chunk work is two MXU matmuls ((c,c) score-like decay matrix and the
+(c,N)x(N,P) contractions), so chunk length is chosen MXU-aligned (128/256).
+
+Grid: (B, H, n_chunks), chunk innermost.  Inputs are pre-chunked
+(B, nc, c, ...) by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int, nc: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)     # (c, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)      # (c,)
+    A = a_ref[0, 0]                                  # scalar (f32)
+    B_ = b_ref[0, 0, :, :].astype(jnp.float32)       # (c, N)
+    C_ = c_ref[0, 0, :, :].astype(jnp.float32)       # (c, N)
+    h = h_ref[0, 0].astype(jnp.float32)              # (P, N)
+
+    dA = dt * A                                      # (c,)
+    cum = jnp.cumsum(dA)                             # (c,)
+    # Segment decay matrix L[t, s] = exp(sum_{s<u<=t} dA_u), causal.
+    seg = cum[:, None] - cum[None, :]
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(s_ids <= t_ids, jnp.exp(seg), 0.0)
+
+    # Intra-chunk: Y1 = (C B^T ⊙ L) @ (dt ⊙ x)
+    G = (C_ @ B_.T) * L                              # (c, c)
+    Y1 = G @ (dt[:, None] * x)                       # (c, P)
+
+    # Inter-chunk: Y2[t] = exp(cum_t) * C_t @ h^T
+    decay_in = jnp.exp(cum)                          # (c,)
+    Y2 = decay_in[:, None] * (C_ @ h.T)              # (c, P)
+
+    y_ref[0, 0, :, 0, :] = (Y1 + Y2).astype(y_ref.dtype)
+
+    # State update: h' = exp(total) h + sum_s exp(total - cum_s) dt_s x_s B_s
+    total = cum[-1]
+    w = jnp.exp(total - cum) * dt                    # (c,)
+    h_new = jnp.exp(total) * h + (w[:, None] * x).T @ B_   # (P, N)
+    h_ref[0, 0] = h_new
+
+
+def ssd_pallas(x, dt, A, B_, C_, *, chunk: int = 256, interpret: bool = False):
+    """x: (B, L, H, P); dt: (B, L, H); A: (H,); B_/C_: (B, L, N).
+
+    Returns (y (B, L, H, P), hT (B, H, P, N)).  L padded to chunk multiple
+    with dt=0 (no-op steps), as in the jnp chunked path.
+    """
+    Bsz, L, H, P = x.shape
+    N = B_.shape[-1]
+    L0 = L
+    if L % chunk:
+        pad = chunk - L % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        L = L + pad
+    nc = L // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = B_.reshape(Bsz, nc, chunk, N)
+    Cc = C_.reshape(Bsz, nc, chunk, N)
+    A2 = jnp.broadcast_to(A.astype(jnp.float32)[None, :], (Bsz, H))
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk, nc=nc)
+    y, hT = pl.pallas_call(
+        kern,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, P), lambda b, h, j: (b, j, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, j: (b, j, 0, h)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, h)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, j: (b, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, P), lambda b, h, j: (b, j, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, nc, chunk, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dtc, A2, Bc, Cc)
+    return y.reshape(Bsz, L, H, P)[:, :L0], hT

@@ -1,0 +1,18 @@
+"""Jitted entry point for the SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ref import ssd_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd(x, dt, A, B_, C_, *, chunk: int = 256, impl: str = "pallas",
+        interpret: bool = True):
+    """Chunked SSD scan. Returns (y, final_state)."""
+    if impl == "pallas":
+        return ssd_pallas(x, dt, A, B_, C_, chunk=chunk, interpret=interpret)
+    return ssd_chunked(x, dt, A, B_, C_, chunk=chunk)

@@ -1,0 +1,7 @@
+"""Oracle for the SSD kernel: re-exports the naive recurrence from
+repro.models.ssm (single source of truth for the math)."""
+from repro.models.ssm import ssd_chunked, ssd_naive  # noqa: F401
+
+ssd_ref = ssd_naive
+
+__all__ = ["ssd_ref", "ssd_naive", "ssd_chunked"]

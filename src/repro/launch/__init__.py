@@ -1,0 +1,2 @@
+# NOTE: deliberately does NOT import submodules — dryrun must set XLA_FLAGS
+# before anything touches jax device state.

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the whole step),
+  * it fits memory (``compiled.memory_analysis()``),
+  * and it yields the roofline terms.
+
+Methodology notes (see EXPERIMENTS.md §Dry-run):
+
+  * XLA's cost analysis counts a while/scan body ONCE, not x trip-count.
+    Layer stacks are scanned, so per-cell FLOPs/bytes/collectives are
+    derived from two cheap *depth probes* — the same step compiled with
+    ``n_layers = cycle+rest`` and ``2*cycle+rest`` layers, **unrolled** —
+    giving the exact per-cycle slope B and intercept G; the full-depth
+    value is G + n_groups * B.  (Verified exact for everything outside
+    inner per-layer scans.)
+  * The blocked-attention inner scan is still counted once inside each
+    probe layer; its true cost is added analytically (einsum flops are
+    exact: 4*B*S*S_kv*H*hd per layer per forward pass) — the one
+    documented analytic term, <=2% double-count.
+  * Collective bytes are parsed from the compiled per-device HLO (result
+    shapes of all-gather/all-reduce/reduce-scatter/all-to-all/
+    collective-permute, including async -start forms).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import REGISTRY, get_config, input_specs
+from repro.configs.base import SHAPES, DECODE_SHAPES, ArchConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm as lm_mod
+from repro.models.lm import layer_plan
+from repro.optim.adamw import AdamWConfig, abstract_opt_state
+from repro.train import sharding as shd
+from repro.train.train_step import TrainOptions, make_train_step
+
+# TPU v5e hardware constants (roofline).
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective in the per-device HLO.
+
+    Post-optimization HLO has untyped operands, so the result type is the
+    reliable size source (== operand size for all-reduce / permute;
+    gathered size for all-gather; scattered size for reduce-scatter — a
+    consistent 'data surface' metric, noted in EXPERIMENTS.md).
+    Async pairs are counted once (-start yes, -done no).
+    """
+    out = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find("= ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 2:]
+        for cname in _COLLECTIVES:
+            m = re.search(r"\b" + re.escape(cname) + r"(-start)?\(", rhs)
+            if not m or f"{cname}-done(" in rhs:
+                continue
+            result_part = rhs[:m.start()]
+            for dt, dims in _SHAPE_RE.findall(result_part):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                out[cname] += n * _DTYPE_BYTES[dt]
+            break
+    out["total"] = sum(out.values())
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Analytic attention correction (the flash-scan inner loop is a lax.scan —
+# counted once by XLA cost analysis even in the unrolled probes).
+# --------------------------------------------------------------------------- #
+def attn_scan_flops(cfg: ArchConfig, shape_name: str) -> float:
+    if shape_name in DECODE_SHAPES or cfg.family == "ssm":
+        return 0.0
+    seq, batch = SHAPES[shape_name]
+    from repro.models.attention import FLASH_SCAN_THRESHOLD
+    if seq <= FLASH_SCAN_THRESHOLD:
+        return 0.0  # dense path, fully counted by the probes
+    cycle, n_groups, rest = layer_plan(cfg)
+    kinds = cycle * n_groups + rest
+    bq = 512
+    passes = 4.0 if shape_name == "train_4k" else 1.0  # fwd+remat+bwd(2x)
+    total = 0.0
+    for kind in kinds:
+        if not kind.startswith("attn") and kind != "xdec":
+            continue
+        if kind == "attn_local" and cfg.swa_window is not None:
+            s_kv = min(cfg.swa_window + bq, seq)
+        else:
+            s_kv = seq
+        total += 4.0 * batch * seq * s_kv * cfg.n_heads * cfg.hd * passes
+    return total
+
+
+# --------------------------------------------------------------------------- #
+# Step builders.
+# --------------------------------------------------------------------------- #
+def apply_variant(cfg: ArchConfig, variant: str) -> ArchConfig:
+    """§Perf hillclimb variants (composable with '+'):
+      moe_local16  — per-data-shard MoE dispatch (local_groups=16)
+      kv_int8      — int8 ring KV caches
+      cf1          — MoE capacity factor 1.0 (was 1.25)
+    """
+    for v in variant.split("+"):
+        if v in ("", "base"):
+            continue
+        elif v == "moe_local16":
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, local_groups=16))
+        elif v == "kv_int8":
+            cfg = dataclasses.replace(cfg, kv_quant_int8=True)
+        elif v == "actseq":
+            cfg = dataclasses.replace(cfg, act_seq_shard=True)
+        elif v == "cf1":
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+        elif v in ("seqshard", "mb4", "mb8", "noremat", "f32grads"):
+            pass  # handled in build_cell
+        else:
+            raise ValueError(f"unknown variant {v}")
+    return cfg
+
+
+def build_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+               unroll: bool = False, opts: Optional[TrainOptions] = None,
+               variant: str = "base"):
+    """Returns (fn, args, in_shardings, dropped)."""
+    cfg = apply_variant(cfg, variant)
+    vset = set(variant.split("+"))
+    seq, batch = SHAPES[shape_name]
+    params_abs = lm_mod.abstract_params(cfg)
+    p_specs, dropped = shd.param_specs(params_abs, mesh)
+    data_specs = input_specs(cfg, shape_name)
+    b_specs = shd.batch_specs(data_specs, mesh)
+
+    if shape_name == "train_4k":
+        opts = opts or TrainOptions(
+            microbatches=4 if "mb4" in vset else 8 if "mb8" in vset else 1,
+            remat="noremat" not in vset,
+            grad_dtype="f32" if "f32grads" in vset else "bf16",
+            zero1=True, unroll=unroll)
+        opts = dataclasses.replace(opts, unroll=unroll)
+        opt_cfg = AdamWConfig(total_steps=10000)
+        step = make_train_step(cfg, opt_cfg, opts)
+        opt_abs = abstract_opt_state(params_abs)
+        p_train = shd.shard_over_data(p_specs, params_abs, mesh)
+        o_specs = {"m": shd.shard_over_data(jax.tree.map(lambda s: s, p_specs),
+                                            params_abs, mesh),
+                   "v": shd.shard_over_data(jax.tree.map(lambda s: s, p_specs),
+                                            params_abs, mesh),
+                   "count": P()}
+        args = (params_abs, opt_abs, data_specs)
+        shardings = (p_train, o_specs, b_specs)
+        return step, args, shardings, dropped
+
+    if shape_name == "prefill_32k":
+        def fn(params, batch):
+            return lm_mod.prefill(params, cfg, batch, max_cache_len=seq,
+                                  unroll=unroll)
+        return fn, (params_abs, data_specs), (p_specs, b_specs), dropped
+
+    caches_abs = lm_mod.serve_state(cfg, batch, seq, abstract=True)
+    c_specs = shd.cache_specs(caches_abs, mesh,
+                              seq_axes=("model",) if "seqshard" in vset else ())
+
+    def fn(params, tokens, pos, caches):
+        return lm_mod.decode_step(params, cfg, tokens, pos, caches,
+                                  unroll=unroll)
+
+    io_specs = shd.batch_specs(
+        {"tokens": data_specs["tokens"], "pos": data_specs["pos"]}, mesh)
+    args = (params_abs, data_specs["tokens"], data_specs["pos"], caches_abs)
+    shardings = (p_specs, io_specs["tokens"], io_specs["pos"], c_specs)
+    return fn, args, shardings, dropped
+
+
+def _compile_and_measure(cfg, shape_name, mesh, unroll, variant="base"):
+    fn, args, shardings, dropped = build_cell(cfg, shape_name, mesh, unroll,
+                                              variant=variant)
+    with mesh:
+        in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), shardings,
+                             is_leaf=lambda x: isinstance(x, P))
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        coll = parse_collective_bytes(compiled.as_text())
+        mem = compiled.memory_analysis()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+        "mem": mem,
+        "dropped": dropped,
+    }
+
+
+def _probe_cfg(cfg: ArchConfig, n_cycles: int) -> ArchConfig:
+    cycle, n_groups, rest = layer_plan(cfg)
+    return dataclasses.replace(
+        cfg, n_layers=n_cycles * len(cycle) + len(rest))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             probes: bool = True, variant: str = "base") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+    }
+    if shape_name in cfg.skip_shapes:
+        rec["status"] = "skipped"
+        rec["reason"] = cfg.notes
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    try:
+        cycle, n_groups, rest = layer_plan(cfg)
+        # 1. Full-depth compile (scan) — the runnability + memory artifact.
+        full = _compile_and_measure(cfg, shape_name, mesh, unroll=False,
+                                    variant=variant)
+        mem = full["mem"]
+        rec_mem = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        # 2. Depth probes (unrolled) -> exact per-cycle slopes.
+        if probes:
+            a = _compile_and_measure(_probe_cfg(cfg, 1), shape_name, mesh, True,
+                                     variant=variant)
+            b = _compile_and_measure(_probe_cfg(cfg, 2), shape_name, mesh, True,
+                                     variant=variant)
+            slope_f = b["flops"] - a["flops"]
+            slope_b = b["bytes"] - a["bytes"]
+            flops_pd = a["flops"] + slope_f * (n_groups - 1)
+            bytes_pd = a["bytes"] + slope_b * (n_groups - 1)
+            coll = {}
+            for k in list(a["coll"]):
+                slope = b["coll"][k] - a["coll"][k]
+                coll[k] = a["coll"][k] + slope * (n_groups - 1)
+            rec["probe"] = {
+                "cycle_len": len(cycle), "n_groups": n_groups,
+                "rest": len(rest),
+                "flops_1c": a["flops"], "flops_2c": b["flops"],
+                "full_scan_flops": full["flops"],
+            }
+        else:
+            flops_pd, bytes_pd, coll = full["flops"], full["bytes"], full["coll"]
+
+        # 3. Analytic attention inner-scan correction (global -> per device).
+        attn_corr = attn_scan_flops(cfg, shape_name) / n_chips
+        flops_pd_corr = flops_pd + attn_corr
+
+        seq, batch = SHAPES[shape_name]
+        n_param = cfg.param_count()
+        n_active = cfg.active_param_count()
+        d_tokens = batch * (1 if shape_name in DECODE_SHAPES else seq)
+        mult = 6 if shape_name == "train_4k" else 2
+        model_flops = mult * n_active * d_tokens
+
+        rec.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "compile_s": round(time.time() - t0, 1),
+            "dropped_shardings": full["dropped"],
+            "memory": rec_mem,
+            "flops_per_device": flops_pd_corr,
+            "flops_per_device_hlo": flops_pd,
+            "attn_scan_correction_pd": attn_corr,
+            "hbm_bytes_per_device": bytes_pd,
+            "collective_bytes_per_device": coll,
+            "model_flops_global": model_flops,
+            "params": n_param,
+            "active_params": n_active,
+            "roofline": {
+                "compute_s": flops_pd_corr / PEAK_FLOPS,
+                "memory_s": bytes_pd / HBM_BW,
+                "collective_s": coll["total"] / ICI_BW,
+            },
+        })
+        terms = rec["roofline"]
+        rec["bottleneck"] = max(terms, key=terms.get)
+        rec["useful_flops_frac"] = (model_flops / (flops_pd_corr * n_chips)
+                                    if flops_pd_corr else None)
+        rec["step_time_bound_s"] = max(terms.values())
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--no-probes", action="store_true",
+                    help="compile-only pass (multi-pod runnability check)")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = list(REGISTRY) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    # Retry errored cells on resume; keep ok/skipped.
+    results = [r for r in results if r["status"] != "error"]
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "2x16x16" if mp else "16x16")
+                if key in done:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                # Roofline probes on the single-pod mesh only (the table is
+                # single-pod; multi-pod proves the pod axis shards).
+                rec = run_cell(arch, shape, mp,
+                               probes=(not mp) and (not args.no_probes))
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec["status"]
+                extra = (f" bottleneck={rec.get('bottleneck')}"
+                         f" compile={rec.get('compile_s')}s"
+                         if status == "ok" else f" {rec.get('error', '')[:160]}")
+                print(f"[dryrun] {key} -> {status}{extra}", flush=True)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+"""Model substrate: composable blocks + unified LM assembly."""
+from repro.models.lm import (abstract_params, decode_step, forward,
+                             init_params, layer_plan, prefill, serve_state,
+                             train_loss)
+
+__all__ = ["abstract_params", "decode_step", "forward", "init_params",
+           "layer_plan", "prefill", "serve_state", "train_loss"]

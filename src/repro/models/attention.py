@@ -1,0 +1,342 @@
+"""GQA attention with RoPE, causal + sliding-window masking, KV caches.
+
+Cache discipline: every layer's KV cache is a **ring buffer** of
+``cache_len`` slots — full-attention layers size it to the max context,
+sliding-window layers to the window.  Slot = ``pos % cache_len``; a
+parallel ``pos`` plane records the absolute position held by each slot
+(-1 = empty).  This is the paper's Fig. 2 contiguous-window buffer
+discipline applied to serving state: contiguous slabs, cursor arithmetic,
+no reallocation (DESIGN.md §3).
+
+Keys are stored *RoPE'd at their absolute position*, so ring wraparound
+never needs re-rotation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPE, F32, apply_rope, dense_init, split
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------- #
+# Params.
+# ---------------------------------------------------------------------- #
+def attn_init(rng, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              qkv_bias: bool = False) -> Dict[str, jax.Array]:
+    r1, r2, r3, r4 = split(rng, 4)
+    p = {
+        "wq": dense_init(r1, d_model, n_heads * head_dim),
+        "wk": dense_init(r2, d_model, n_kv_heads * head_dim),
+        "wv": dense_init(r3, d_model, n_kv_heads * head_dim),
+        "wo": dense_init(r4, n_heads * head_dim, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), DTYPE)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), DTYPE)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), DTYPE)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, S, n_kv_heads, head_dim),
+            v.reshape(B, S, n_kv_heads, head_dim))
+
+
+# ---------------------------------------------------------------------- #
+# Full-sequence attention (train / prefill).
+# ---------------------------------------------------------------------- #
+# Above this many query positions the dense S^2 score tensor is replaced
+# by the chunked online-softmax scan (memory O(S * block)) — mandatory for
+# the 32k/512k shapes (32k dense would be ~4 GB *per head pair* in f32).
+FLASH_SCAN_THRESHOLD = 2048
+
+
+def _flash_scan(q, k, v, *, causal: bool, window: Optional[int],
+                bq: int = 512, bk: int = 512) -> jax.Array:
+    """Pure-jnp blocked flash attention (GQA): scan over q blocks; SWA
+    layers slice only the in-window KV span, making them O(S*W) in both
+    memory AND flops — the property long_500k banks on."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    bq = min(bq, S)
+    if S % bq:
+        bq = next(b for b in range(bq, 0, -1) if S % b == 0)
+    nq = S // bq
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qb = q.reshape(B, nq, bq, Hkv, G, hd).astype(F32)
+
+    if window is not None:
+        # KV span for q block i: [i*bq + bq - 1 - (window-1) - pad, i*bq + bq)
+        span = window + bq
+        span = min(span, S)
+        kp = jnp.pad(k.astype(F32), ((0, 0), (span, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v.astype(F32), ((0, 0), (span, 0), (0, 0), (0, 0)))
+
+        def blk(i):
+            qi = qb[:, i]                               # (B,bq,Hkv,G,hd)
+            start = i * bq + bq - span + span           # offset in padded
+            ks = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+            rows = i * bq + jnp.arange(bq)[:, None]
+            cols = (i * bq + bq - span) + jnp.arange(span)[None, :]
+            mask = (cols >= 0) & (cols <= rows) & (rows - cols < window)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qi, ks) * scale
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bkgqt,btkh->bqkgh", p, vs)
+
+        out = jax.lax.map(blk, jnp.arange(nq))          # (nq,B,bq,Hkv,G,hd)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+        return out.astype(q.dtype)
+
+    bk = min(bk, S)
+    if S % bk:
+        bk = next(b for b in range(bk, 0, -1) if S % b == 0)
+    nk = S // bk
+    kb = k.reshape(B, nk, bk, Hkv, hd).astype(F32)
+    vb = v.reshape(B, nk, bk, Hkv, hd).astype(F32)
+
+    def q_block(i):
+        qi = qb[:, i]                                   # (B,bq,Hkv,G,hd)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            ks, vs = kb[:, j], vb[:, j]
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qi, ks) * scale
+            rows = i * bq + jnp.arange(bq)[:, None]
+            cols = j * bk + jnp.arange(bk)[None, :]
+            if causal:
+                s = jnp.where((cols <= rows)[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqt,btkh->bkgqh", p, vs)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, F32)
+        l0 = jnp.zeros((B, Hkv, G, bq), F32)
+        a0 = jnp.zeros((B, Hkv, G, bq, hd), F32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l, 1e-20)[..., None]      # (B,Hkv,G,bq,hd)
+        return jnp.moveaxis(o, 3, 1)                    # (B,bq,Hkv,G,hd)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention(params: Dict[str, jax.Array], x: jax.Array, *,
+              n_heads: int, n_kv_heads: int, head_dim: int,
+              rope_theta: float, causal: bool = True,
+              window: Optional[int] = None, pos0: int = 0,
+              kernel_impl: str = "xla") -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). ``window``: SWA size (None = full)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    pos = pos0 + jnp.arange(S, dtype=jnp.int32)[None, :]
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+
+    if kernel_impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(q, k, v, causal=causal, window=window)
+    elif S > FLASH_SCAN_THRESHOLD or kernel_impl == "flash_scan":
+        o = _flash_scan(q, k, v, causal=causal, window=window)
+    else:
+        G = n_heads // n_kv_heads
+        qg = q.reshape(B, S, n_kv_heads, G, head_dim)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(F32), k.astype(F32))
+        scores = scores / jnp.sqrt(jnp.float32(head_dim))
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        mask = jnp.ones((S, S), bool)
+        if causal:
+            mask &= j <= i
+        if window is not None:
+            mask &= (i - j) < window
+        scores = jnp.where(mask, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        og = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+        o = og.reshape(B, S, n_heads, head_dim)
+    return o.reshape(B, S, n_heads * head_dim) @ params["wo"]
+
+
+# ---------------------------------------------------------------------- #
+# Ring KV cache.  Optional int8 quantization (§Perf hillclimb): K/V stored
+# as int8 with one f32 absmax scale per (slot, kv head) — halves the
+# decode memory term; dequantization fuses into the score einsum.
+# ---------------------------------------------------------------------- #
+def cache_init(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
+               dtype=DTYPE, quant: bool = False) -> Dict[str, jax.Array]:
+    kv_dtype = jnp.int8 if quant else dtype
+    c = {
+        "k": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), kv_dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), kv_dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+    if quant:
+        c["k_scale"] = jnp.zeros((batch, cache_len, n_kv_heads), F32)
+        c["v_scale"] = jnp.zeros((batch, cache_len, n_kv_heads), F32)
+    return c
+
+
+def cache_spec(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
+               dtype=DTYPE, quant: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
+    kv_dtype = jnp.int8 if quant else dtype
+    c = {
+        "k": jax.ShapeDtypeStruct((batch, cache_len, n_kv_heads, head_dim),
+                                  jnp.dtype(kv_dtype)),
+        "v": jax.ShapeDtypeStruct((batch, cache_len, n_kv_heads, head_dim),
+                                  jnp.dtype(kv_dtype)),
+        "pos": jax.ShapeDtypeStruct((batch, cache_len), jnp.int32),
+    }
+    if quant:
+        c["k_scale"] = jax.ShapeDtypeStruct((batch, cache_len, n_kv_heads), F32)
+        c["v_scale"] = jax.ShapeDtypeStruct((batch, cache_len, n_kv_heads), F32)
+    return c
+
+
+def _quantize(x):
+    """x: (..., hd) -> (int8 values, f32 absmax scale over hd)."""
+    scale = jnp.max(jnp.abs(x.astype(F32)), axis=-1) / 127.0
+    q = jnp.round(x.astype(F32) / jnp.maximum(scale, 1e-9)[..., None])
+    return q.astype(jnp.int8), scale
+
+
+def _deq_k(cache):
+    if "k_scale" in cache:
+        return cache["k"].astype(F32) * cache["k_scale"][..., None]
+    return cache["k"].astype(F32)
+
+
+def _deq_v(cache):
+    if "v_scale" in cache:
+        return (cache["v"].astype(F32) * cache["v_scale"][..., None]).astype(DTYPE)
+    return cache["v"]
+
+
+def cache_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+                  cache_len: int, quant: bool = False) -> Dict[str, jax.Array]:
+    """Build a ring cache from a full prefill pass (keeps the last
+    ``cache_len`` tokens; slots = abs_pos % cache_len)."""
+    B, S, _ = x.shape
+    _, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    k = apply_rope(k, pos, rope_theta)
+    keep = min(S, cache_len)
+    k_keep = k[:, S - keep:]
+    v_keep = v[:, S - keep:]
+    p_keep = jnp.broadcast_to(pos[:, S - keep:], (B, keep))
+    slots = (jnp.arange(S - keep, S, dtype=jnp.int32) % cache_len)
+    cache = cache_init(B, cache_len, n_kv_heads, head_dim, k.dtype, quant=quant)
+    if quant:
+        kq, ks = _quantize(k_keep)
+        vq, vs = _quantize(v_keep)
+        return {
+            "k": cache["k"].at[:, slots].set(kq),
+            "v": cache["v"].at[:, slots].set(vq),
+            "k_scale": cache["k_scale"].at[:, slots].set(ks),
+            "v_scale": cache["v_scale"].at[:, slots].set(vs),
+            "pos": cache["pos"].at[:, slots].set(p_keep),
+        }
+    return {
+        "k": cache["k"].at[:, slots].set(k_keep),
+        "v": cache["v"].at[:, slots].set(v_keep),
+        "pos": cache["pos"].at[:, slots].set(p_keep),
+    }
+
+
+def attention_decode(params, x, cache, pos, *, n_heads, n_kv_heads, head_dim,
+                     rope_theta, window: Optional[int] = None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode step.
+
+    x: (B, 1, D); pos: (B,) absolute position of the new token.
+    Returns (out (B,1,D), updated cache).
+    """
+    B, _, D = x.shape
+    cache_len = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, pos[:, None], rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], rope_theta)
+
+    slot = (pos % cache_len).astype(jnp.int32)       # (B,)
+    bidx = jnp.arange(B)
+    if "k_scale" in cache:
+        kq, ks = _quantize(k_new[:, 0])
+        vq, vs = _quantize(v_new[:, 0])
+        cache = {
+            "k": cache["k"].at[bidx, slot].set(kq),
+            "v": cache["v"].at[bidx, slot].set(vq),
+            "k_scale": cache["k_scale"].at[bidx, slot].set(ks),
+            "v_scale": cache["v_scale"].at[bidx, slot].set(vs),
+            "pos": cache["pos"].at[bidx, slot].set(pos),
+        }
+    else:
+        cache = {
+            "k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
+            "v": cache["v"].at[bidx, slot].set(v_new[:, 0]),
+            "pos": cache["pos"].at[bidx, slot].set(pos),
+        }
+
+    G = n_heads // n_kv_heads
+    qg = q.reshape(B, n_kv_heads, G, head_dim)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg.astype(F32),
+                        _deq_k(cache)) / jnp.sqrt(jnp.float32(head_dim))
+    valid = (cache["pos"] >= 0) & (cache["pos"] <= pos[:, None])
+    if window is not None:
+        valid &= cache["pos"] > (pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    vv = _deq_v(cache)
+    og = jnp.einsum("bkgt,btkh->bkgh", p.astype(vv.dtype), vv)
+    o = og.reshape(B, 1, n_heads * head_dim)
+    return o @ params["wo"], cache
+
+
+# ---------------------------------------------------------------------- #
+# Cross attention (whisper decoder). Encoder K/V precomputed at prefill.
+# ---------------------------------------------------------------------- #
+def xattn_init(rng, d_model: int, n_heads: int, head_dim: int):
+    r1, r2, r3, r4 = split(rng, 4)
+    return {
+        "wq": dense_init(r1, d_model, n_heads * head_dim),
+        "wk": dense_init(r2, d_model, n_heads * head_dim),
+        "wv": dense_init(r3, d_model, n_heads * head_dim),
+        "wo": dense_init(r4, n_heads * head_dim, d_model),
+    }
+
+
+def cross_attention(params, x, enc_kv, *, n_heads, head_dim) -> jax.Array:
+    """x: (B, S, D); enc_kv: dict k/v (B, T, H, hd) precomputed."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(F32),
+                        enc_kv["k"].astype(F32)) / jnp.sqrt(jnp.float32(head_dim))
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p.astype(enc_kv["v"].dtype), enc_kv["v"])
+    return o.reshape(B, S, n_heads * head_dim) @ params["wo"]
+
+
+def cross_kv(params, enc_out, *, n_heads, head_dim):
+    B, T, _ = enc_out.shape
+    return {
+        "k": (enc_out @ params["wk"]).reshape(B, T, n_heads, head_dim),
+        "v": (enc_out @ params["wv"]).reshape(B, T, n_heads, head_dim),
+    }

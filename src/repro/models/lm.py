@@ -1,0 +1,468 @@
+"""Unified LM assembly for all assigned architectures.
+
+A model is a stack of *blocks* arranged in a cyclic layer pattern (the
+CSDF rate table of DESIGN.md §3): uniform models have cycle length 1,
+gemma3 has (local x5, global), recurrentgemma has (rec, rec, local).
+Full cycles are scanned (``lax.scan`` over stacked group params — keeps
+the HLO small enough that the 512-device dry-run of an 80-layer model
+lowers in seconds); remainder layers are unrolled.
+
+Three entry points per model, matching the assigned shapes:
+  * ``train_loss``    — full-seq causal LM loss (train_4k),
+  * ``prefill``       — full-seq forward building serve state (prefill_32k),
+  * ``decode_step``   — one token against ring caches (decode_32k/long_500k).
+
+Block kinds: ``attn_local`` / ``attn_global`` (dense or MoE MLP),
+``rec`` (RG-LRU), ``ssd`` (mamba2), ``xdec`` (whisper decoder w/ cross
+attention), ``enc`` (whisper encoder, bidirectional).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (BATCH_AXES, DTYPE, F32, cross_entropy,
+                                 embed_init, embed_lookup, gelu_mlp,
+                                 gelu_mlp_init, maybe_constrain, rmsnorm,
+                                 rmsnorm_init, split, swiglu, swiglu_init,
+                                 unembed)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------- #
+# Layer plan.
+# ---------------------------------------------------------------------- #
+def layer_plan(cfg: ArchConfig) -> Tuple[List[str], int, List[str]]:
+    """(cycle kinds, n_groups, remainder kinds)."""
+    if cfg.family == "ssm":
+        cycle = ["ssd"]
+    elif cfg.rglru is not None:
+        cycle = ["rec" if p == 0 else "attn_local" for p in cfg.rglru.pattern]
+    elif cfg.family == "audio":
+        cycle = ["xdec"]
+    else:
+        cycle = ["attn_global" if p == 1 else "attn_local"
+                 for p in cfg.attn_pattern]
+    n_groups, rest = divmod(cfg.n_layers, len(cycle))
+    return cycle, n_groups, cycle[:rest]
+
+
+def _is_attn(kind: str) -> bool:
+    return kind.startswith("attn") or kind == "xdec"
+
+
+# ---------------------------------------------------------------------- #
+# Block init.
+# ---------------------------------------------------------------------- #
+def _block_init(rng, cfg: ArchConfig, kind: str) -> Dict[str, PyTree]:
+    d = cfg.d_model
+    r = split(rng, 4)
+    p: Dict[str, PyTree] = {}
+    if kind == "ssd":
+        p["norm"] = rmsnorm_init(d)
+        p["mixer"] = ssm_mod.mamba2_init(r[0], d, cfg.ssm)
+        return p
+    p["norm1"] = rmsnorm_init(d)
+    if kind == "rec":
+        p["mixer"] = rg_mod.rglru_block_init(r[0], d, cfg.rglru)
+    else:
+        p["attn"] = att.attn_init(r[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                  cfg.qkv_bias)
+    if kind == "xdec":
+        p["normx"] = rmsnorm_init(d)
+        p["xattn"] = att.xattn_init(r[1], d, cfg.n_heads, cfg.hd)
+    p["norm2"] = rmsnorm_init(d)
+    if cfg.moe is not None and kind != "xdec":
+        p["mlp"] = moe_mod.moe_init(r[2], d, cfg.moe.n_experts,
+                                    cfg.moe.d_ff_expert)
+    elif kind == "xdec":
+        p["mlp"] = gelu_mlp_init(r[2], d, cfg.d_ff)
+    else:
+        p["mlp"] = swiglu_init(r[2], d, cfg.d_ff)
+    return p
+
+
+def _enc_block_init(rng, cfg: ArchConfig) -> Dict[str, PyTree]:
+    e = cfg.encoder
+    r = split(rng, 2)
+    return {
+        "norm1": rmsnorm_init(e.d_model),
+        "attn": att.attn_init(r[0], e.d_model, e.n_heads, e.n_heads,
+                              e.d_model // e.n_heads),
+        "norm2": rmsnorm_init(e.d_model),
+        "mlp": gelu_mlp_init(r[1], e.d_model, e.d_ff),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# Block apply.
+# ---------------------------------------------------------------------- #
+def _attn_kw(cfg: ArchConfig, kind: str):
+    window = None
+    if kind == "attn_local":
+        window = cfg.swa_window
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.hd, rope_theta=cfg.rope_theta, window=window)
+
+
+def _block_apply(cfg: ArchConfig, kind: str, params, x, *, mode: str,
+                 cache=None, pos=None, enc_kv=None, kernel_impl="xla",
+                 max_cache_len=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if kind == "ssd":
+        h = rmsnorm(params["norm"], x, cfg.rms_eps)
+        y, new_cache = ssm_mod.mamba2_block(params["mixer"], h, cfg.ssm,
+                                            mode=mode, state=cache,
+                                            kernel_impl=kernel_impl)
+        return x + y, new_cache, aux
+
+    kw = _attn_kw(cfg, kind)
+    h = rmsnorm(params["norm1"], x, cfg.rms_eps)
+    if kind == "rec":
+        y, new_cache = rg_mod.rglru_block(params["mixer"], h, cfg.rglru,
+                                          mode=mode, state=cache,
+                                          kernel_impl=kernel_impl)
+    elif mode == "decode":
+        y, new_cache = att.attention_decode(
+            params["attn"], h, cache["kv"] if kind == "xdec" else cache,
+            pos, **{k: v for k, v in kw.items()})
+        if kind == "xdec":
+            new_cache = {"kv": new_cache, "cross": cache["cross"]}
+    else:
+        y = att.attention(params["attn"], h, causal=(cfg.family != "vlm_enc"),
+                          kernel_impl=kernel_impl, **kw)
+        new_cache = None
+        if mode == "prefill":
+            cache_len = _cache_len(cfg, kind, max_cache_len or x.shape[1])
+            new_cache = att.cache_prefill(
+                params["attn"], h, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                rope_theta=cfg.rope_theta, cache_len=cache_len,
+                quant=cfg.kv_quant_int8)
+    x = x + y
+
+    if kind == "xdec":
+        hx = rmsnorm(params["normx"], x, cfg.rms_eps)
+        if mode == "decode":
+            xkv = cache["cross"]
+        else:
+            xkv = att.cross_kv(params["xattn"], enc_kv, n_heads=cfg.n_heads,
+                               head_dim=cfg.hd)
+            if mode == "prefill":
+                new_cache = {"kv": new_cache, "cross": xkv}
+        x = x + att.cross_attention(params["xattn"], hx, xkv,
+                                    n_heads=cfg.n_heads, head_dim=cfg.hd)
+
+    h = rmsnorm(params["norm2"], x, cfg.rms_eps)
+    if cfg.moe is not None and kind != "xdec":
+        y, moe_aux = moe_mod.moe_layer(params["mlp"], h, top_k=cfg.moe.top_k,
+                                       capacity_factor=cfg.moe.capacity_factor,
+                                       local_groups=cfg.moe.local_groups)
+        aux = aux + moe_aux["load_balance_loss"]
+    elif kind == "xdec":
+        y = gelu_mlp(params["mlp"], h)
+    else:
+        y = swiglu(params["mlp"], h)
+    return x + y, new_cache, aux
+
+
+def _cache_len(cfg: ArchConfig, kind: str, max_seq: int) -> int:
+    if kind == "attn_local" and cfg.swa_window is not None:
+        return min(cfg.swa_window, max_seq)
+    return max_seq
+
+
+# ---------------------------------------------------------------------- #
+# Model: init.
+# ---------------------------------------------------------------------- #
+def init_params(rng, cfg: ArchConfig) -> PyTree:
+    cycle, n_groups, rest = layer_plan(cfg)
+    r = split(rng, 6)
+    params: Dict[str, PyTree] = {
+        # vocab_padded: clean model-axis sharding (see ArchConfig docstring)
+        "embed": {"w": embed_init(r[0], cfg.vocab_padded, cfg.d_model)},
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": embed_init(r[1], cfg.vocab_padded, cfg.d_model)}
+
+    def init_group(rng_g):
+        rr = split(rng_g, len(cycle))
+        return {f"c{i}": _block_init(rr[i], cfg, kind)
+                for i, kind in enumerate(cycle)}
+
+    params["groups"] = jax.vmap(init_group)(split(r[2], n_groups))
+    params["rest"] = tuple(_block_init(rk, cfg, kind)
+                           for rk, kind in zip(split(r[3], max(len(rest), 1)), rest))
+    if cfg.family == "audio":
+        e = cfg.encoder
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda rr: _enc_block_init(rr, cfg))(
+                split(r[4], e.n_layers)),
+            "norm": rmsnorm_init(e.d_model),
+        }
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> PyTree:
+    """ShapeDtypeStruct pytree — dry-run init without allocation."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------- #
+# Encoder (audio stub frontend -> transformer encoder).
+# ---------------------------------------------------------------------- #
+def encode(params, cfg: ArchConfig, frames: jax.Array,
+           kernel_impl="xla") -> jax.Array:
+    e = cfg.encoder
+    x = frames.astype(DTYPE)
+
+    def body(x, bp):
+        h = rmsnorm(bp["norm1"], x, cfg.rms_eps)
+        y = att.attention(bp["attn"], h, n_heads=e.n_heads, n_kv_heads=e.n_heads,
+                          head_dim=e.d_model // e.n_heads,
+                          rope_theta=cfg.rope_theta, causal=False,
+                          kernel_impl=kernel_impl)
+        x = x + y
+        h = rmsnorm(bp["norm2"], x, cfg.rms_eps)
+        return x + gelu_mlp(bp["mlp"], h), None
+
+    x, _ = jax.lax.scan(lambda c, bp: body(c, bp), x, params["encoder"]["blocks"])
+    return rmsnorm(params["encoder"]["norm"], x, cfg.rms_eps)
+
+
+def _unembed_masked(x, head_w, cfg: ArchConfig):
+    """Logits over the padded vocab with padding columns forced to -inf
+    (so softmax/argmax/CE never see them)."""
+    logits = unembed(x, head_w)
+    if cfg.vocab_padded != cfg.vocab:
+        col = jnp.arange(cfg.vocab_padded)
+        logits = jnp.where(col >= cfg.vocab, jnp.float32(-1e30), logits)
+    return logits
+
+
+# ---------------------------------------------------------------------- #
+# Full-sequence forward (train / prefill).
+# ---------------------------------------------------------------------- #
+def _embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    x = embed_lookup(params["embed"]["w"], batch["tokens"]).astype(DTYPE)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        x = jnp.concatenate([batch["vision_embeds"].astype(DTYPE), x], axis=1)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(DTYPE)  # gemma scaling
+    return x
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            mode: str = "train", kernel_impl: str = "xla",
+            remat: bool = True, max_cache_len: Optional[int] = None,
+            unroll: bool = False):
+    """Full-sequence forward. Returns (logits f32, caches|None, aux).
+
+    ``unroll=True`` replaces the lax.scan over layer groups with a Python
+    loop — used by the dry-run's depth-probe compiles, where XLA cost
+    analysis must see every layer (it counts a while body only once)."""
+    cycle, n_groups, rest = layer_plan(cfg)
+    x = _embed_inputs(params, cfg, batch)
+    act_spec = (BATCH_AXES, "model" if cfg.act_seq_shard else None, None)
+    x = maybe_constrain(x, act_spec)
+    enc_kv = None
+    if cfg.family == "audio":
+        enc_kv = encode(params, cfg, batch["frames"], kernel_impl)
+    S = x.shape[1]
+
+    def group_body(carry, gp):
+        x, aux = carry
+        caches = {}
+        for i, kind in enumerate(cycle):
+            x, c, a = _block_apply(cfg, kind, gp[f"c{i}"], x, mode=mode,
+                                   enc_kv=enc_kv, kernel_impl=kernel_impl,
+                                   max_cache_len=max_cache_len)
+            x = maybe_constrain(x, act_spec)
+            caches[f"c{i}"] = c
+            aux = aux + a
+        return (x, aux), caches
+
+    body = group_body
+    if remat and mode == "train":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    n_groups_actual = jax.tree.leaves(params["groups"])[0].shape[0] \
+        if jax.tree.leaves(params["groups"]) else 0
+    if unroll:
+        carry = (x, jnp.float32(0.0))
+        caches_list = []
+        for gi in range(n_groups_actual):
+            gp = jax.tree.map(lambda l: l[gi], params["groups"])
+            carry, gc = body(carry, gp)
+            caches_list.append(gc)
+        (x, aux) = carry
+        group_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *caches_list) \
+            if (caches_list and mode == "prefill") else None
+    else:
+        (x, aux), group_caches = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                              params["groups"])
+    rest_caches = []
+    for bp, kind in zip(params["rest"], rest):
+        x, c, a = _block_apply(cfg, kind, bp, x, mode=mode, enc_kv=enc_kv,
+                               kernel_impl=kernel_impl,
+                               max_cache_len=max_cache_len)
+        rest_caches.append(c)
+        aux = aux + a
+
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    head_w = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    if mode == "prefill":
+        # Serving only needs the last position's logits.
+        logits = _unembed_masked(x[:, -1:], head_w, cfg)
+    else:
+        logits = _unembed_masked(x, head_w, cfg)
+    logits = maybe_constrain(logits, (BATCH_AXES, None, "model"))
+    caches = None
+    if mode == "prefill":
+        caches = {"groups": group_caches, "rest": tuple(rest_caches)}
+    return logits, caches, aux
+
+
+def train_loss(params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+               kernel_impl: str = "xla", remat: bool = True,
+               aux_weight: float = 0.01,
+               unroll: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(params, cfg, batch, mode="train",
+                             kernel_impl=kernel_impl, remat=remat,
+                             unroll=unroll)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        logits = logits[:, cfg.n_vision_tokens:]
+    loss = cross_entropy(logits, labels)
+    total = loss + aux_weight * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------- #
+# Serving: prefill + decode.
+# ---------------------------------------------------------------------- #
+def prefill(params, cfg: ArchConfig, batch, *, kernel_impl="xla",
+            max_cache_len: Optional[int] = None, unroll: bool = False):
+    """``max_cache_len``: ring size for full-attention layers — must cover
+    prompt + planned decode budget (defaults to the prompt length, which
+    leaves NO room to decode; serving always passes a budget)."""
+    logits, caches, _ = forward(params, cfg, batch, mode="prefill",
+                                kernel_impl=kernel_impl, remat=False,
+                                max_cache_len=max_cache_len, unroll=unroll)
+    return logits[:, 0], caches
+
+
+def decode_step(params, cfg: ArchConfig, tokens, pos, caches, *,
+                kernel_impl: str = "xla", unroll: bool = False):
+    """tokens: (B, 1); pos: (B,). Returns (logits (B, V) f32, new caches)."""
+    cycle, n_groups, rest = layer_plan(cfg)
+    x = embed_lookup(params["embed"]["w"], tokens).astype(DTYPE)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(DTYPE)
+    x = maybe_constrain(x, (BATCH_AXES, None, None))
+
+    def group_body(carry, xs):
+        x = carry
+        gp, gc = xs
+        new_c = {}
+        for i, kind in enumerate(cycle):
+            x, c, _ = _block_apply(cfg, kind, gp[f"c{i}"], x, mode="decode",
+                                   cache=gc[f"c{i}"], pos=pos,
+                                   kernel_impl=kernel_impl)
+            x = maybe_constrain(x, (BATCH_AXES, None, None))
+            new_c[f"c{i}"] = c
+        return x, new_c
+
+    if unroll:
+        n_g = jax.tree.leaves(params["groups"])[0].shape[0] \
+            if jax.tree.leaves(params["groups"]) else 0
+        ncs = []
+        for gi in range(n_g):
+            gp = jax.tree.map(lambda l: l[gi], params["groups"])
+            gc = jax.tree.map(lambda l: l[gi], caches["groups"])
+            x, nc = group_body(x, (gp, gc))
+            ncs.append(nc)
+        new_group_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs) \
+            if ncs else caches["groups"]
+    else:
+        x, new_group_caches = jax.lax.scan(group_body, x,
+                                           (params["groups"], caches["groups"]))
+    new_rest = []
+    for bp, kind, c in zip(params["rest"], rest, caches["rest"]):
+        x, nc, _ = _block_apply(cfg, kind, bp, x, mode="decode", cache=c,
+                                pos=pos, kernel_impl=kernel_impl)
+        new_rest.append(nc)
+
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    head_w = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = _unembed_masked(x[:, 0], head_w, cfg)
+    return logits, {"groups": new_group_caches, "rest": tuple(new_rest)}
+
+
+# ---------------------------------------------------------------------- #
+# Serve-state construction (concrete + abstract).
+# ---------------------------------------------------------------------- #
+def _block_cache_spec(cfg: ArchConfig, kind: str, batch: int, max_seq: int,
+                      abstract: bool):
+    def mk_att(*a, **kw):
+        fn = att.cache_spec if abstract else att.cache_init
+        return fn(*a, quant=cfg.kv_quant_int8, **kw)
+    if kind == "ssd":
+        fn = ssm_mod.mamba2_state_spec if abstract else ssm_mod.mamba2_state_init
+        return fn(batch, cfg.d_model, cfg.ssm)
+    if kind == "rec":
+        fn = rg_mod.rglru_state_spec if abstract else rg_mod.rglru_state_init
+        return fn(batch, cfg.d_model, cfg.rglru)
+    cl = _cache_len(cfg, kind, max_seq)
+    c = mk_att(batch, cl, cfg.n_kv_heads, cfg.hd)
+    if kind == "xdec":
+        e = cfg.encoder
+        if abstract:
+            cross = {
+                "k": jax.ShapeDtypeStruct((batch, e.n_ctx, cfg.n_heads, cfg.hd), DTYPE),
+                "v": jax.ShapeDtypeStruct((batch, e.n_ctx, cfg.n_heads, cfg.hd), DTYPE),
+            }
+        else:
+            cross = {
+                "k": jnp.zeros((batch, e.n_ctx, cfg.n_heads, cfg.hd), DTYPE),
+                "v": jnp.zeros((batch, e.n_ctx, cfg.n_heads, cfg.hd), DTYPE),
+            }
+        return {"kv": c, "cross": cross}
+    return c
+
+
+def serve_state(cfg: ArchConfig, batch: int, max_seq: int,
+                abstract: bool = False) -> PyTree:
+    """Ring caches / recurrent states for every layer (grouped like params)."""
+    cycle, n_groups, rest = layer_plan(cfg)
+
+    def one_group():
+        return {f"c{i}": _block_cache_spec(cfg, kind, batch, max_seq, abstract)
+                for i, kind in enumerate(cycle)}
+
+    if abstract:
+        def stack(spec):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype),
+                spec)
+        groups = stack(one_group())
+    else:
+        groups = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape).copy()
+            if hasattr(x, "shape") else x,
+            one_group())
+    rest_caches = tuple(
+        _block_cache_spec(cfg, kind, batch, max_seq, abstract) for kind in rest)
+    return {"groups": groups, "rest": rest_caches}

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts layer — the LM-side incarnation of the paper's
+dynamic data rates.
+
+Mapping (DESIGN.md §3): the router is the *control actor* — its top-k
+decision is the control token; every expert is a *dynamic actor* whose
+per-firing token rate is 0..capacity.  Capacity-and-drop dispatch is
+exactly the paper's {0, r} two-rate restriction: an expert consumes at
+most ``capacity`` tokens per firing, overflow tokens take the rate-0 path
+(residual passthrough).  ``graphs/moe_as_actors.py`` expresses the same
+layer literally as a repro.core actor network and the equivalence is
+tested.
+
+Implementation is scatter/gather dispatch (TPU-friendly: contiguous
+(E, C, D) expert slabs — again the Eq. 1 contiguous-window discipline):
+  1. router logits -> top-k experts + normalized weights per token;
+  2. rank tokens per expert via cumsum; tokens over capacity are dropped;
+  3. scatter tokens to (E*C, D) slots, einsum the expert FFNs, gather back
+     with combine weights.
+Expert weights are sharded over the ``model`` mesh axis (expert
+parallelism); XLA SPMD materializes the token all-to-all.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPE, F32, dense_init, split
+
+
+def moe_init(rng, d_model: int, n_experts: int, d_ff: int) -> Dict[str, jax.Array]:
+    r1, r2, r3, r4 = split(rng, 4)
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "router": dense_init(r1, d_model, n_experts),
+        "we_gate": (jax.random.normal(r2, (n_experts, d_model, d_ff), F32)
+                   * scale_in).astype(DTYPE),
+        "we_up": (jax.random.normal(r3, (n_experts, d_model, d_ff), F32)
+                 * scale_in).astype(DTYPE),
+        "we_down": (jax.random.normal(r4, (n_experts, d_ff, d_model), F32)
+                   * scale_out).astype(DTYPE),
+    }
+
+
+def capacity_for(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = int(math.ceil(n_tokens * top_k * capacity_factor / n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _maybe_constrain(x, spec):
+    from repro.models.layers import maybe_constrain
+    return maybe_constrain(x, spec)
+
+
+def _dispatch_combine(params, xt, top_k, C, x_dtype):
+    """Shared scatter/einsum/gather core. xt: (N, D) -> (y (N, D), aux)."""
+    N, D = xt.shape
+    E = params["router"].shape[1]
+    logits = (xt @ params["router"]).astype(F32)            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, top_k)            # (N, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Rank of each (token, k) assignment within its expert (GShard-style).
+    onehot = jax.nn.one_hot(gate_e, E, dtype=jnp.int32)     # (N, k, E)
+    flat = onehot.reshape(N * top_k, E)
+    ranks = (jnp.cumsum(flat, axis=0) - flat).reshape(N, top_k, E)
+    rank = jnp.sum(ranks * onehot, axis=-1)                 # (N, k)
+    keep = rank < C
+
+    # Scatter to expert slabs: slot = e * C + rank (dropped -> dummy slot).
+    slot = jnp.where(keep, gate_e * C + rank, E * C)
+    dispatch = jnp.zeros((E * C + 1, D), x_dtype)
+    dispatch = dispatch.at[slot.reshape(-1)].add(
+        jnp.repeat(xt, top_k, axis=0).reshape(N * top_k, D))
+    slabs = dispatch[:-1].reshape(E, C, D)
+    # Expert slabs: experts over `model` (EP), capacity over `data` — keeps
+    # the (E, C, D) buffer at E*C*D/(16*16) bytes per chip on the big MoE
+    # train cells (43 GB global for olmoe train_4k without this).
+    slabs = _maybe_constrain(slabs, ("model", "data", None))
+
+    # Expert FFNs (SwiGLU), expert axis sharded over `model`.
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", slabs, params["we_gate"])
+                    .astype(F32)).astype(x_dtype)
+    u = jnp.einsum("ecd,edf->ecf", slabs, params["we_up"])
+    y_slabs = jnp.einsum("ecf,efd->ecd", g * u, params["we_down"])
+
+    # Gather back with combine weights.
+    y_flat = jnp.concatenate([y_slabs.reshape(E * C, D),
+                              jnp.zeros((1, D), x_dtype)], axis=0)
+    per_k = y_flat[slot.reshape(-1)].reshape(N, top_k, D)
+    w = (gate_w * keep.astype(F32)).astype(x_dtype)
+    y = jnp.einsum("nkd,nk->nd", per_k, w)
+
+    # Aux: switch-style load-balance loss + stats.
+    density = jnp.mean(jax.nn.one_hot(gate_e[:, 0], E, dtype=F32), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = {
+        "load_balance_loss": E * jnp.sum(density * router_prob),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(F32)),
+    }
+    return y, aux
+
+
+def moe_layer(params: Dict[str, jax.Array], x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25, local_groups: int = 0
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) -> (y, aux) with load-balance loss in aux.
+
+    Dropped (over-capacity) tokens contribute 0 — the residual connection
+    outside this layer carries them through (rate-0 path).
+
+    ``local_groups > 0`` enables **local dispatch** (§Perf hillclimb):
+    tokens are ranked/dropped within ``local_groups`` independent groups
+    aligned with the data shards (group capacity C/G), so the rank cumsum
+    and the scatter never cross data shards — only the expert einsum
+    communicates.  GShard per-group-capacity semantics; drop behaviour
+    differs marginally under imbalance (visible in aux.dropped_frac).
+    """
+    B, S, D = x.shape
+    N = B * S
+    C = capacity_for(N, top_k=top_k, n_experts=params["router"].shape[1],
+                     capacity_factor=capacity_factor)
+    xt = x.reshape(N, D)
+
+    if local_groups and N % local_groups == 0:
+        y, aux = _dispatch_combine_grouped(params, xt, top_k, C, x.dtype,
+                                           local_groups)
+        return y.reshape(B, S, D), aux
+
+    y, aux = _dispatch_combine(params, xt, top_k, C, x.dtype)
+    return y.reshape(B, S, D), aux
+
+
+def _dispatch_combine_grouped(params, xt, top_k, C, x_dtype, G):
+    """Local dispatch with explicit group-leading ops (no vmap) so the
+    sharding constraints bind to the *physical* (G, E, C, D) arrays —
+    under vmap they silently miss (measured: 64 GB f32 slab all-gathers,
+    EXPERIMENTS.md §Perf iteration on the MoE cell)."""
+    N, D = xt.shape
+    E = params["router"].shape[1]
+    Ng = N // G
+    Cg = max(8, -(-(C // G) // 8) * 8)
+    xg = _maybe_constrain(xt.reshape(G, Ng, D), ("data", None, None))
+
+    logits = (xg @ params["router"]).astype(F32)            # (G, Ng, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, top_k)            # (G, Ng, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Per-group expert ranks: cumsum stays inside the group (data shard).
+    onehot = jax.nn.one_hot(gate_e, E, dtype=jnp.int32)     # (G, Ng, k, E)
+    flat = onehot.reshape(G, Ng * top_k, E)
+    ranks = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Ng, top_k, E)
+    rank = jnp.sum(ranks * onehot, axis=-1)                 # (G, Ng, k)
+    keep = rank < Cg
+
+    # Scatter: one flat buffer, group-major slots -> (G, E, Cg, D) slabs.
+    stride = E * Cg + 1
+    gidx = jnp.arange(G, dtype=jnp.int32)[:, None, None]
+    slot = jnp.where(keep, gidx * stride + gate_e * Cg + rank,
+                     gidx * stride + E * Cg)
+    upd = jnp.repeat(xg.reshape(G * Ng, D), top_k, axis=0)
+    upd = _maybe_constrain(upd, ("data", None))
+    # The flat scatter buffer is G-major: rows shard over `data` exactly
+    # like the groups.  Left unconstrained, GSPMD's choice diverges with
+    # expert count (E=64 measured 8x the collectives of E=40 — §Perf).
+    dispatch = jnp.zeros((G * stride, D), x_dtype)
+    dispatch = _maybe_constrain(dispatch, ("data", None))
+    dispatch = dispatch.at[slot.reshape(-1)].add(upd)
+    dispatch = _maybe_constrain(dispatch, ("data", None))
+    slabs = dispatch.reshape(G, stride, D)[:, :E * Cg].reshape(G, E, Cg, D)
+    slabs = _maybe_constrain(slabs, ("data", "model", None, None))
+
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", slabs, params["we_gate"])
+                    .astype(F32)).astype(x_dtype)
+    u = jnp.einsum("gecd,edf->gecf", slabs, params["we_up"])
+    y_slabs = jnp.einsum("gecf,efd->gecd", g * u, params["we_down"])
+    y_slabs = _maybe_constrain(y_slabs, ("data", "model", None, None))
+
+    pad = jnp.zeros((G, 1, D), x_dtype)
+    y_flat = jnp.concatenate([y_slabs.reshape(G, E * Cg, D), pad],
+                             axis=1).reshape(G * stride, D)
+    y_flat = _maybe_constrain(y_flat, ("data", None))
+    per_k = y_flat[slot.reshape(-1)].reshape(G, Ng, top_k, D)
+    per_k = _maybe_constrain(per_k, ("data", None, None, None))
+    w = (gate_w * keep.astype(F32)).astype(x_dtype)
+    y = jnp.einsum("gnkd,gnk->gnd", per_k, w).reshape(N, D)
+
+    density = jnp.mean(jax.nn.one_hot(gate_e[..., 0], E, dtype=F32), axis=(0, 1))
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "load_balance_loss": E * jnp.sum(density * router_prob),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(F32)),
+    }
+    return y, aux

@@ -1,0 +1,142 @@
+"""RecurrentGemma RG-LRU recurrent block — arXiv:2402.19427.
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)           (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+An elementwise (diagonal) linear recurrence — the paper's delay-token IIR
+feedback loop, and a textbook associative-scan on TPU.  Three paths:
+  * ``rglru_naive`` — lax.scan oracle;
+  * ``rglru_scan``  — log-space associative scan (model default);
+  * ``repro.kernels.rglru`` — Pallas chunked kernel.
+
+The recurrent *block* wraps it recurrentgemma-style: two input linears
+(recurrent branch + gate branch), a short causal conv on the recurrent
+branch, the RG-LRU, and a gated output projection.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models.layers import DTYPE, F32, dense_init, split
+
+_C = 8.0
+
+
+def rglru_gates(params, x):
+    """x: (B, L, W) -> (log_a, gated_x) both (B, L, W) f32."""
+    r = jax.nn.sigmoid((x @ params["w_a"] + params["b_a"]).astype(F32))
+    i = jax.nn.sigmoid((x @ params["w_x"] + params["b_x"]).astype(F32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(F32)) * r
+    gx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x.astype(F32))
+    return log_a, gx
+
+
+def rglru_naive(log_a, gx, h0=None):
+    """Oracle recurrence. log_a, gx: (B, L, W) f32."""
+    B, L, W = gx.shape
+    h0 = h0 if h0 is not None else jnp.zeros((B, W), F32)
+
+    def step(h, inp):
+        la, g = inp
+        h = jnp.exp(la) * h + g
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (jnp.moveaxis(log_a, 1, 0),
+                                     jnp.moveaxis(gx, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hT
+
+
+def rglru_scan(log_a, gx, h0=None):
+    """Associative scan: compose (a, b) pairs of h -> a*h + b."""
+    B, L, W = gx.shape
+    if h0 is not None:
+        # Fold the carried state into the first step's offset.
+        gx = gx.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    la, b = jax.lax.associative_scan(combine, (log_a, gx), axis=1)
+    return b, b[:, -1]
+
+
+# ---------------------------------------------------------------------- #
+# Full recurrent block.
+# ---------------------------------------------------------------------- #
+def rglru_block_init(rng, d_model: int, cfg: RGLRUConfig) -> Dict[str, jax.Array]:
+    w = cfg.lru_width or d_model
+    r = split(rng, 5)
+    return {
+        "in_x": dense_init(r[0], d_model, w),
+        "in_gate": dense_init(r[1], d_model, w),
+        "conv_w": (jax.random.normal(r[2], (cfg.conv_width, w), F32)
+                   * (1.0 / math.sqrt(cfg.conv_width))).astype(DTYPE),
+        "conv_b": jnp.zeros((w,), DTYPE),
+        "w_a": dense_init(r[3], w, w),
+        "b_a": jnp.zeros((w,), DTYPE),
+        "w_x": dense_init(r[4], w, w),
+        "b_x": jnp.zeros((w,), DTYPE),
+        "lam": jnp.linspace(0.5, 4.0, w, dtype=F32),  # Lambda init
+        "out": dense_init(jax.random.fold_in(rng, 9), w, d_model),
+    }
+
+
+def _conv(x, w, b, state=None):
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    L = x.shape[1]
+    y = jnp.zeros_like(x, dtype=F32)
+    for t in range(K):
+        y = y + w[t].astype(F32) * xp[:, t:t + L].astype(F32)
+    return (y + b.astype(F32)).astype(x.dtype), xp[:, -(K - 1):]
+
+
+def rglru_block(params, x, cfg: RGLRUConfig, *, mode: str = "train",
+                state=None, kernel_impl: str = "xla"):
+    """x: (B, L, D). decode: L == 1 with state {'conv', 'h'}."""
+    gate = jax.nn.gelu((x @ params["in_gate"]).astype(F32)).astype(x.dtype)
+    u = x @ params["in_x"]
+    conv_state = state["conv"] if mode == "decode" else None
+    u, new_conv = _conv(u, params["conv_w"], params["conv_b"], conv_state)
+    log_a, gx = rglru_gates(params, u)
+
+    if mode == "decode":
+        h = jnp.exp(log_a[:, 0]) * state["h"] + gx[:, 0]
+        hs = h[:, None]
+        new_state = {"conv": new_conv, "h": h}
+    elif kernel_impl == "pallas":
+        from repro.kernels.rglru import rglru as rglru_kernel
+        hs, hT = rglru_kernel(log_a, gx)
+        new_state = {"conv": new_conv, "h": hT} if mode == "prefill" else None
+    else:
+        hs, hT = rglru_scan(log_a, gx)
+        new_state = {"conv": new_conv, "h": hT} if mode == "prefill" else None
+
+    y = hs.astype(x.dtype) * gate
+    return y @ params["out"], new_state
+
+
+def rglru_state_init(batch: int, d_model: int, cfg: RGLRUConfig):
+    w = cfg.lru_width or d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, w), DTYPE),
+            "h": jnp.zeros((batch, w), F32)}
+
+
+def rglru_state_spec(batch: int, d_model: int, cfg: RGLRUConfig):
+    w = cfg.lru_width or d_model
+    return {"conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w), DTYPE),
+            "h": jax.ShapeDtypeStruct((batch, w), F32)}

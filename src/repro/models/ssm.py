@@ -1,0 +1,232 @@
+"""Mamba2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Three implementations, in ascending performance order:
+  * ``ssd_naive``   — per-step recurrence via lax.scan (the oracle).
+  * ``ssd_chunked`` — the SSD chunked algorithm in pure jnp (model default:
+    MXU-shaped einsums within chunks, scan over chunk states).
+  * ``repro.kernels.ssd`` — Pallas TPU kernel of the chunked algorithm.
+
+State layout per head: h in R^{P x N} (P = head_dim, N = state_dim), with
+scalar-per-head decay A (mamba2 restriction).  The decode state FIFO is the
+paper's delay-token feedback channel (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import DTYPE, F32, dense_init, rmsnorm, rmsnorm_init, split
+
+
+# ---------------------------------------------------------------------- #
+# Core SSD math.  x: (B, L, H, P); dt: (B, L, H); B_, C_: (B, L, N).
+# ---------------------------------------------------------------------- #
+def ssd_naive(x, dt, A, B_, C_):
+    """Oracle: h_t = exp(A dt_t) h_{t-1} + dt_t * (B_t ⊗ x_t); y_t = C_t h_t."""
+    Bsz, L, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt.astype(F32) * A.astype(F32))       # (B,H)
+        upd = (dtt.astype(F32)[..., None, None]
+               * xt.astype(F32)[..., :, None] * bt.astype(F32)[:, None, None, :])
+        h = h * decay[..., None, None] + upd                    # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(F32))
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), F32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT
+
+
+def _segsum(a):
+    """Causal segment sums: out[i, j] = sum_{j < u <= i} a[u] (−inf above)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(L)[:, None]
+    j = jnp.arange(L)[None, :]
+    return jnp.where(j <= i, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD: intra-chunk attention-form + inter-chunk state scan.
+
+    L is padded up to a chunk multiple with dt=0 tokens (decay exp(0)=1,
+    zero update — state and outputs are unaffected)."""
+    Bsz, L, H, P = x.shape
+    N = B_.shape[-1]
+    L_orig = L
+    if L % chunk:
+        pad = chunk - L % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        L = L + pad
+    nc = L // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(F32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(F32)
+    Bc = B_.reshape(Bsz, nc, chunk, N).astype(F32)
+    Cc = C_.reshape(Bsz, nc, chunk, N).astype(F32)
+
+    dA = dtc * A.astype(F32)                                   # (B,nc,c,H)
+    dA = jnp.moveaxis(dA, -1, 2)                               # (B,nc,H,c)
+    seg = _segsum(dA)                                          # (B,nc,H,c,c)
+    Lmat = jnp.exp(seg)
+
+    # Intra-chunk (attention-like): Y1[t] = sum_s<=t C_t.B_s L[t,s] dt_s x_s
+    G = jnp.einsum("bztn,bzsn->bzts", Cc, Bc)                  # (B,nc,c,c)
+    M = G[:, :, None] * Lmat                                   # (B,nc,H,t,s)
+    Y1 = jnp.einsum("bzhts,bzsh,bzshp->bzthp", M, dtc, xc)
+
+    # Chunk-final states: S_z = sum_s exp(sum_{s<u} dA) B_s dt_s x_s
+    dA_cum = jnp.cumsum(dA, axis=-1)                           # (B,nc,H,c)
+    total = dA_cum[..., -1:]                                   # (B,nc,H,1)
+    decay_out = jnp.exp(total - dA_cum)                        # (B,nc,H,c)
+    S = jnp.einsum("bzhs,bzsh,bzshp,bzsn->bzhpn", decay_out, dtc, xc, Bc)
+
+    # Inter-chunk scan over states.
+    chunk_decay = jnp.exp(total[..., 0])                       # (B,nc,H)
+
+    def scan_fn(h, inp):
+        s_z, dec_z = inp                                       # (B,H,P,N), (B,H)
+        h_new = h * dec_z[..., None, None] + s_z
+        return h_new, h                                        # emit state *entering* chunk
+
+    init = h0.astype(F32) if h0 is not None else jnp.zeros((Bsz, H, P, N), F32)
+    hT, h_in = jax.lax.scan(scan_fn, init,
+                            (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                            # (B,nc,H,P,N)
+
+    # Inter-chunk contribution: Y2[t] = C_t exp(dA_cum_t) h_in
+    decay_in = jnp.exp(dA_cum)                                 # (B,nc,H,c)
+    Y2 = jnp.einsum("bztn,bzht,bzhpn->bzthp", Cc, decay_in, h_in)
+
+    y = (Y1 + Y2).reshape(Bsz, L, H, P)[:, :L_orig]
+    return y.astype(x.dtype), hT
+
+
+# ---------------------------------------------------------------------- #
+# Full Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj).
+# ---------------------------------------------------------------------- #
+def mamba2_init(rng, d_model: int, s: SSMConfig) -> Dict[str, jax.Array]:
+    di = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    conv_dim = di + 2 * s.state_dim
+    r = split(rng, 4)
+    return {
+        "in_proj": dense_init(r[0], d_model, 2 * di + 2 * s.state_dim + nh),
+        "conv_w": (jax.random.normal(r[1], (s.conv_width, conv_dim), F32)
+                   * (1.0 / math.sqrt(s.conv_width))).astype(DTYPE),
+        "conv_b": jnp.zeros((conv_dim,), DTYPE),
+        "dt_bias": jnp.zeros((nh,), F32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=F32)),
+        "D": jnp.ones((nh,), F32),
+        "gate_norm": rmsnorm_init(di),
+        "out_proj": dense_init(r[2], di, d_model),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, L, C); w: (K, C) depthwise. state: (B, K-1, C) history or None.
+    Returns (y (B,L,C), new_state (B, K-1, C))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x, dtype=F32)
+    L = x.shape[1]
+    for t in range(K):
+        y = y + w[t].astype(F32) * xp[:, t:t + L].astype(F32)
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return (jax.nn.silu(y + b.astype(F32))).astype(x.dtype), new_state
+
+
+def _split_proj(z, di, nstate, nh):
+    zx = z[..., :di]
+    gate = z[..., di:2 * di]
+    B_ = z[..., 2 * di:2 * di + nstate]
+    C_ = z[..., 2 * di + nstate:2 * di + 2 * nstate]
+    dt = z[..., 2 * di + 2 * nstate:]
+    return zx, gate, B_, C_, dt
+
+
+def mamba2_block(params, x, s: SSMConfig, *, mode: str = "train",
+                 state=None, kernel_impl: str = "xla"):
+    """x: (B, L, D). mode train/prefill: full seq (L % chunk == 0);
+    mode decode: L == 1 with state = {'conv': ..., 'ssm': ...}.
+
+    Returns (y, new_state) — new_state is None for train."""
+    B, L, D = x.shape
+    di = s.d_inner(D)
+    nh = s.n_heads(D)
+    N = s.state_dim
+
+    z = x @ params["in_proj"]
+    zx, gate, B_, C_, dtr = _split_proj(z, di, N, nh)
+    conv_in = jnp.concatenate([zx, B_, C_], axis=-1)
+
+    if mode == "decode":
+        conv_out, conv_state = _causal_conv(conv_in, params["conv_w"],
+                                            params["conv_b"], state["conv"])
+    else:
+        conv_out, conv_state = _causal_conv(conv_in, params["conv_w"],
+                                            params["conv_b"])
+    zx = conv_out[..., :di]
+    B_ = conv_out[..., di:di + N]
+    C_ = conv_out[..., di + N:]
+
+    dt = jax.nn.softplus(dtr.astype(F32) + params["dt_bias"])   # (B, L, nh)
+    A = -jnp.exp(params["A_log"])                               # (nh,)
+    xh = zx.reshape(B, L, nh, s.head_dim)
+
+    if mode == "decode":
+        # Single recurrence step with carried state (L == 1).
+        decay = jnp.exp(dt[:, 0].astype(F32) * A)               # (B, nh)
+        upd = (dt[:, 0].astype(F32)[..., None, None]
+               * xh[:, 0].astype(F32)[..., :, None]
+               * B_[:, 0].astype(F32)[:, None, None, :])
+        h_new = state["ssm"] * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_new, C_[:, 0].astype(F32))[:, None]
+        y = y.reshape(B, 1, nh, s.head_dim).astype(x.dtype)
+        new_state = {"conv": conv_state, "ssm": h_new}
+    elif kernel_impl == "pallas" and mode != "decode":
+        from repro.kernels.ssd import ssd as ssd_kernel
+        y, hT = ssd_kernel(xh, dt, A, B_, C_, chunk=s.chunk)
+        new_state = {"conv": conv_state, "ssm": hT} if mode == "prefill" else None
+    else:
+        y, hT = ssd_chunked(xh, dt, A, B_, C_, chunk=s.chunk)
+        new_state = {"conv": conv_state, "ssm": hT} if mode == "prefill" else None
+
+    y = y + params["D"].astype(F32)[None, None, :, None] * xh.astype(F32)
+    y = y.reshape(B, L, di).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(gate.astype(F32)).astype(x.dtype))
+    return y @ params["out_proj"], new_state
+
+
+def mamba2_state_init(batch: int, d_model: int, s: SSMConfig):
+    di = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    conv_dim = di + 2 * s.state_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), DTYPE),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.state_dim), F32),
+    }
+
+
+def mamba2_state_spec(batch: int, d_model: int, s: SSMConfig):
+    di = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    conv_dim = di + 2 * s.state_dim
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, conv_dim), DTYPE),
+        "ssm": jax.ShapeDtypeStruct((batch, nh, s.head_dim, s.state_dim), F32),
+    }

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, abstract_opt_state, adamw_update,
+                               global_norm, init_opt_state, schedule)
+
+__all__ = ["AdamWConfig", "abstract_opt_state", "adamw_update", "global_norm",
+           "init_opt_state", "schedule"]

@@ -1,0 +1,106 @@
+"""Batched serving engine: prefill + greedy decode over request batches.
+
+The serving loop is the paper's dataflow pattern made explicit: the KV/SSM
+caches are delay-token feedback FIFOs (state produced by firing t is
+consumed by firing t+1), and each decode step is one network iteration
+under the static schedule.  Requests are grouped into fixed-size batches
+(the serve_step is compiled once per (batch, cache_len) shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm as lm_mod
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 8
+    max_prompt: int = 64
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    kernel_impl: str = "xla"
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new: int
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: np.ndarray          # generated ids
+    prompt_len: int
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params: PyTree, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        cache_len = scfg.max_prompt + scfg.max_new
+
+        def _prefill(params, batch):
+            return lm_mod.prefill(params, cfg, batch,
+                                  kernel_impl=scfg.kernel_impl,
+                                  max_cache_len=cache_len)
+
+        def _decode(params, tokens, pos, caches):
+            return lm_mod.decode_step(params, cfg, tokens, pos, caches,
+                                      kernel_impl=scfg.kernel_impl)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    # ------------------------------------------------------------------ #
+    def _pad_batch(self, reqs: List[Request]) -> Dict[str, jax.Array]:
+        B = self.scfg.batch_size
+        P = self.scfg.max_prompt
+        toks = np.zeros((B, P), np.int32)
+        for i, r in enumerate(reqs):
+            p = r.prompt[-P:]
+            toks[i, P - len(p):] = p      # left-pad (prompts end together)
+        return {"tokens": jnp.asarray(toks)}
+
+    def generate(self, requests: List[Request]) -> List[Result]:
+        out: List[Result] = []
+        B = self.scfg.batch_size
+        for lo in range(0, len(requests), B):
+            group = requests[lo:lo + B]
+            pad = group + [Request(np.zeros(1, np.int32), 0)] * (B - len(group))
+            out.extend(self._generate_batch(pad)[:len(group)])
+        return out
+
+    def _generate_batch(self, reqs: List[Request]) -> List[Result]:
+        scfg = self.scfg
+        batch = self._pad_batch(reqs)
+        logits, caches = self._prefill(self.params, batch)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        pos = jnp.full((scfg.batch_size,), scfg.max_prompt, jnp.int32)
+
+        produced = [next_tok]
+        for _ in range(scfg.max_new - 1):
+            logits, caches = self._decode(self.params, next_tok, pos, caches)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            pos = pos + 1
+            produced.append(next_tok)
+        gen = np.asarray(jnp.concatenate(produced, axis=1))
+
+        results = []
+        for i, r in enumerate(reqs):
+            toks = gen[i][:r.max_new]
+            if scfg.eos_id is not None:
+                stop = np.where(toks == scfg.eos_id)[0]
+                if len(stop):
+                    toks = toks[:stop[0] + 1]
+            results.append(Result(tokens=toks, prompt_len=len(r.prompt)))
+        return results

@@ -1,0 +1,6 @@
+from repro.train.train_step import TrainOptions, make_train_step, train_shardings
+from repro.train.trainer import StragglerMonitor, Trainer, TrainerConfig
+from repro.train import sharding
+
+__all__ = ["TrainOptions", "make_train_step", "train_shardings",
+           "StragglerMonitor", "Trainer", "TrainerConfig", "sharding"]

@@ -1,0 +1,203 @@
+"""Sharding rules: parameter-path patterns -> PartitionSpec.
+
+This is the actor-to-core mapping of paper §3.3 at pod scale: every tensor
+gets a *placement* on the fixed production mesh.  Rules are name-pattern
+based (like t5x/MaxText "logical axis rules"), with an explicit
+divisibility check: a mesh axis that does not divide the dim is dropped
+(replicated) and recorded — never silently padded, so the roofline
+analysis sees the real layout (DESIGN.md §5: GQA KV tensors are replicated
+by rule, not by fallback).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (regex on "/"-joined path, spec template applied to the *trailing* dims).
+# Templates may be shorter than the rank: missing leading dims replicate
+# (covers the stacked group axis automatically).
+PARAM_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    (r"embed/w$",              ("model", None)),      # vocab-sharded
+    (r"lm_head/w$",            ("model", None)),
+    (r"attn/wq$",              (None, "model")),      # q heads TP
+    (r"attn/wo$",              ("model", None)),
+    (r"attn/wk$",              (None, None)),         # GQA KV replicated
+    (r"attn/wv$",              (None, None)),
+    (r"attn/bq$",              ("model",)),
+    (r"attn/b[kv]$",           (None,)),
+    (r"xattn/w[qkv]$",         (None, "model")),
+    (r"xattn/wo$",             ("model", None)),
+    (r"mlp/w_gate$",           (None, "model")),
+    (r"mlp/w_up$",             (None, "model")),
+    (r"mlp/w_down$",           ("model", None)),
+    (r"mlp/w_in$",             (None, "model")),
+    (r"mlp/b_in$",             ("model",)),
+    (r"mlp/w_out$",            ("model", None)),
+    (r"mlp/b_out$",            (None,)),
+    (r"mlp/router$",           (None, None)),
+    # MoE experts: expert-parallel over `model` (E, D, F).
+    (r"mlp/we_(gate|up|down)$", ("model", None, None)),
+    # Mamba2
+    (r"mixer/in_proj$",        (None, "model")),
+    (r"mixer/out_proj$",       ("model", None)),
+    (r"mixer/conv_w$",         (None, "model")),
+    (r"mixer/conv_b$",         ("model",)),
+    # RG-LRU
+    (r"mixer/in_x$",           (None, "model")),
+    (r"mixer/in_gate$",        (None, "model")),
+    (r"mixer/w_[ax]$",         (None, "model")),
+    (r"mixer/b_[ax]$",         ("model",)),
+    (r"mixer/lam$",            ("model",)),
+    (r"mixer/out$",            ("model", None)),
+]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes: (pod, data) when present."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _apply_template(shape: Tuple[int, ...],
+                    template: Sequence[Optional[str]],
+                    mesh: Mesh, dropped: List[str], path: str) -> P:
+    spec: List[Optional[str]] = [None] * len(shape)
+    # Right-align the template on the shape (leading stacked dims replicate).
+    off = len(shape) - len(template)
+    for i, ax in enumerate(template):
+        if ax is None:
+            continue
+        d = off + i
+        if d < 0:
+            continue
+        if shape[d] % mesh.shape[ax] == 0:
+            spec[d] = ax
+        else:
+            dropped.append(f"{path}: dim {d} ({shape[d]}) % {ax} "
+                           f"({mesh.shape[ax]}) != 0 -> replicated")
+    return P(*spec)
+
+
+def param_specs(params: PyTree, mesh: Mesh,
+                verbose: bool = False) -> Tuple[PyTree, List[str]]:
+    """PartitionSpec pytree for a parameter pytree (works on
+    ShapeDtypeStructs too — dry-run safe)."""
+    dropped: List[str] = []
+
+    def spec_for(path_elems, leaf) -> P:
+        path = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in path_elems)
+        shape = leaf.shape
+        for pat, tmpl in PARAM_RULES:
+            if re.search(pat, path):
+                return _apply_template(shape, tmpl, mesh, dropped, path)
+        return P()  # norms, biases, scalars: replicated
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, params)
+    if verbose and dropped:
+        for d in dropped:
+            print(f"[sharding] {d}")
+    return specs, dropped
+
+
+def shard_over_data(specs: PyTree, tree: PyTree, mesh: Mesh,
+                    min_size: int = 2 ** 16) -> PyTree:
+    """Additionally shard each (large-enough) leaf over the data axis on
+    the first dimension that is still replicated and divisible.
+
+    Applied to optimizer moments this is ZeRO-1; applied to params (and
+    hence grads) it is FSDP/ZeRO-3 — XLA inserts the just-in-time
+    all-gather of weights per scanned layer and the reduce-scatter of
+    grads, both overlapped with compute by the latency-hiding scheduler.
+    """
+    data = "data" if "data" in mesh.axis_names else None
+    if data is None:
+        return specs
+
+    def upgrade(spec: P, leaf) -> P:
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return spec
+        if int(np.prod(leaf.shape)) < min_size:
+            return spec  # tiny tensors: all-gather latency > memory win
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for d in range(len(parts)):
+            if parts[d] is None and leaf.shape[d] % mesh.shape[data] == 0 \
+                    and leaf.shape[d] >= mesh.shape[data]:
+                parts[d] = data
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(upgrade, specs, tree)
+
+
+def zero1_specs(opt_specs: PyTree, params: PyTree, mesh: Mesh) -> PyTree:
+    """ZeRO-1: shard optimizer moments over the data axis."""
+    return shard_over_data(opt_specs, params, mesh)
+
+
+def batch_specs(batch: PyTree, mesh: Mesh) -> PyTree:
+    """Shard every batch input's leading (batch) dim over the DP axes."""
+    dp = dp_axes(mesh)
+
+    def spec_for(leaf) -> P:
+        bs = leaf.shape[0]
+        if bs % int(np.prod([mesh.shape[a] for a in dp])) == 0:
+            return P(dp)
+        return P()
+
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_specs(caches: PyTree, mesh: Mesh,
+                seq_axes: Tuple[str, ...] = ()) -> PyTree:
+    """Serve-state sharding: shard the batch dim over DP axes when it
+    divides; otherwise (long_500k: batch 1) shard the longest divisible
+    dim (the KV sequence) over `data` — sequence-parallel decode.
+
+    ``seq_axes``: additionally shard the KV sequence dim over these axes
+    (§Perf hillclimb: ('model',) sequence-shards the ring caches across
+    the TP axis that GQA KV replication leaves idle — 16x less cache
+    memory per chip for one tiny per-token softmax all-reduce)."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    data_size = mesh.shape["data"]
+
+    def spec_for(path_elems, leaf) -> P:
+        shape = leaf.shape
+        parts: List[Optional[str]] = [None] * len(shape)
+        # group-stacked leaves: (n_groups, B, ...); rest leaves: (B, ...)
+        path = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in path_elems)
+        b_dim = 1 if path.startswith("groups") else 0
+        seq_dim = b_dim + 1   # ring caches: (B, S, ...); states: (B, ...)
+        if len(shape) > b_dim and shape[b_dim] % dp_size == 0 and shape[b_dim] > 1:
+            parts[b_dim] = dp
+            if seq_axes and len(shape) > seq_dim + 1:  # k/v/pos rings only
+                size = int(np.prod([mesh.shape[a] for a in seq_axes]))
+                if shape[seq_dim] % size == 0 and shape[seq_dim] >= 4 * size:
+                    parts[seq_dim] = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+            return P(*parts)
+        # sequence-parallel fallback: shard the largest remaining dim.
+        cand = sorted(range(b_dim + 1, len(shape)),
+                      key=lambda d: -shape[d])
+        for d in cand:
+            if shape[d] % data_size == 0 and shape[d] >= 4 * data_size:
+                parts[d] = "data"
+                return P(*parts)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+def named(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

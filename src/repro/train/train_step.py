@@ -1,0 +1,126 @@
+"""The pjit'd training step: microbatched grad accumulation, remat,
+compressed DP collectives, ZeRO-1 — the distributed-optimization layer.
+
+Overlap note: gradient accumulation is a ``lax.scan`` over microbatches;
+because each microbatch's backward ends in the (implicit) DP reduction of
+its grad contribution, XLA's latency-hiding scheduler overlaps microbatch
+k+1's compute with microbatch k's reduce-scatter/all-reduce — the paper's
+"concurrent actors hide FIFO transfer latency" at pod scale.
+
+Gradient compression: with ``grad_dtype=bf16`` the cross-replica
+all-reduce moves half the bytes (measured in §Perf); the f32 master Adam
+moments make this a safe compression in practice, and the optional error-
+feedback residual closes the loop exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import lm as lm_mod
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.train import sharding as shd
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    microbatches: int = 1
+    remat: bool = True
+    grad_dtype: str = "bf16"       # "bf16" (compressed collectives) | "f32"
+    error_feedback: bool = False   # residual accumulation for bf16 grads
+    zero1: bool = False            # shard optimizer moments over data axis
+    kernel_impl: str = "xla"       # "pallas" on real TPU
+    aux_weight: float = 0.01
+    unroll: bool = False           # dry-run depth probes: unroll layer scan
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    opts: TrainOptions = TrainOptions()):
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)`` — pure, pjit-ready (callers attach shardings)."""
+
+    gdt = jnp.bfloat16 if opts.grad_dtype == "bf16" else jnp.float32
+
+    def loss_fn(params, mb):
+        total, parts = lm_mod.train_loss(params, cfg, mb,
+                                         kernel_impl=opts.kernel_impl,
+                                         remat=opts.remat,
+                                         aux_weight=opts.aux_weight,
+                                         unroll=opts.unroll)
+        return total, parts
+
+    def train_step(params, opt_state, batch):
+        n_mb = opts.microbatches
+        if n_mb > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:]),
+                batch)
+
+            def mb_step(acc, mb):
+                (loss, parts), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g = jax.tree.map(lambda x: x.astype(gdt), g)
+                acc_g, acc_loss = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_loss + loss), parts
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+            (grads, loss_sum), parts = jax.lax.scan(mb_step,
+                                                    (zero, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: (g / n_mb).astype(gdt), grads)
+            loss = loss_sum / n_mb
+            parts = jax.tree.map(lambda x: x[-1], parts)
+        else:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            grads = jax.tree.map(lambda g: g.astype(gdt), grads)
+
+        if opts.error_feedback and opts.grad_dtype == "bf16":
+            fb = opt_state.get("feedback")
+            if fb is not None:
+                corrected = jax.tree.map(
+                    lambda g, r: g.astype(jnp.float32) + r, grads, fb)
+                grads_q = jax.tree.map(lambda c: c.astype(jnp.bfloat16), corrected)
+                new_fb = jax.tree.map(
+                    lambda c, q: c - q.astype(jnp.float32), corrected, grads_q)
+                grads = grads_q
+                opt_state = dict(opt_state, feedback=new_fb)
+
+        core_state = {k: v for k, v in opt_state.items() if k != "feedback"}
+        new_params, new_core, om = adamw_update(opt_cfg, params, grads, core_state)
+        new_opt = dict(new_core)
+        if "feedback" in opt_state:
+            new_opt["feedback"] = opt_state["feedback"]
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------- #
+# Sharding assembly for a full training state on the production mesh.
+# --------------------------------------------------------------------------- #
+def train_shardings(cfg: ArchConfig, mesh: Mesh, params_abs: PyTree,
+                    opt_abs: PyTree, batch_abs: PyTree,
+                    opts: TrainOptions = TrainOptions()):
+    """(in_shardings, out_shardings) PartitionSpec pytrees for pjit."""
+    p_specs, dropped = shd.param_specs(params_abs, mesh)
+    o_specs = {
+        "m": jax.tree.map(lambda s: s, p_specs),
+        "v": jax.tree.map(lambda s: s, p_specs),
+        "count": P(),
+    }
+    if opts.zero1:
+        o_specs["m"] = shd.zero1_specs(o_specs["m"], params_abs, mesh)
+        o_specs["v"] = shd.zero1_specs(o_specs["v"], params_abs, mesh)
+    if opts.error_feedback:
+        o_specs = dict(o_specs, feedback=jax.tree.map(lambda s: s, p_specs))
+    b_specs = shd.batch_specs(batch_abs, mesh)
+    metrics_specs = None  # scalars, replicated
+    return (p_specs, o_specs, b_specs), dropped

@@ -1,0 +1,144 @@
+"""Executor equivalence + dynamic-rate semantics (paper §3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Edge, FifoSpec, Network, RuntimeMode, collect_sink,
+                        compile_dynamic, compile_static, dynamic_actor,
+                        map_fire, run_interpreted, static_actor)
+
+
+def make_chain(n_iter=8, rate=2, delay=True):
+    tok = (3,)
+
+    def src_fire(state, inputs, rates):
+        data, idx = state
+        return (data, idx + 1), {
+            "out": jax.lax.dynamic_slice_in_dim(data, idx * rate, rate, 0)}
+
+    src = static_actor(
+        "src", (), ("out",), src_fire,
+        init=lambda: (jnp.arange(n_iter * rate * 3, dtype=jnp.float32)
+                      .reshape(n_iter * rate, 3), jnp.int32(0)),
+        ready=lambda st: st[1] < n_iter)
+    dbl = static_actor("dbl", ("in",), ("out",),
+                       map_fire(lambda w: w * 2.0, "in", "out"))
+
+    def sink_fire(state, inputs, rates):
+        data, idx = state
+        return (jax.lax.dynamic_update_slice_in_dim(data, inputs["in"],
+                                                    idx * rate, 0), idx + 1), {}
+
+    snk = static_actor(
+        "snk", ("in",), (), sink_fire,
+        init=lambda: (jnp.zeros((n_iter * rate, 3), jnp.float32), jnp.int32(0)),
+        finish=lambda st: st[0])
+    fifos = [FifoSpec("f1", rate, tok),
+             FifoSpec("f2", rate, tok, delay=1 if delay else 0)]
+    edges = [Edge("f1", "src", "out", "dbl", "in"),
+             Edge("f2", "dbl", "out", "snk", "in")]
+    net = Network([src, dbl, snk], fifos, edges)
+    data = 2 * np.arange(n_iter * rate * 3, dtype=np.float32).reshape(-1, 3)
+    expect = (np.concatenate([np.zeros((1, 3), np.float32), data[:-1]])
+              if delay else data)
+    return net, expect
+
+
+@pytest.mark.parametrize("delay", [False, True])
+def test_three_executors_agree(delay):
+    net, expect = make_chain(delay=delay)
+    s1 = compile_static(net, 8)(net.init_state())
+    np.testing.assert_allclose(np.asarray(collect_sink(net, s1, "snk")), expect)
+    s2, counts = compile_dynamic(net)(net.init_state())
+    np.testing.assert_allclose(np.asarray(collect_sink(net, s2, "snk")), expect)
+    assert all(int(v) == 8 for v in counts.values())
+    s3 = run_interpreted(net, net.init_state(), 8)
+    np.testing.assert_allclose(np.asarray(collect_sink(net, s3, "snk")), expect)
+
+
+def make_gated(n=9, period=3):
+    """ctl enables gate every `period`-th firing (dynamic data rates)."""
+    r, tok = 2, (3,)
+
+    def ctl_fire(state, inputs, rates):
+        return state + 1, {"out": (state % period == 0).astype(jnp.int32).reshape(1)}
+
+    ctl = static_actor("ctl", (), ("out",), ctl_fire, init=lambda: jnp.int32(0),
+                       ready=lambda st: st < n)
+
+    def gctl(tok):
+        on = tok[0] > 0
+        return {"in": on, "out": on}
+
+    gate = dynamic_actor("gate", "c", gctl, ("in",), ("out",),
+                         map_fire(lambda w: w + 100.0, "in", "out"))
+    n_pass = (n + period - 1) // period
+
+    def src_fire(state, inputs, rates):
+        data, idx = state
+        return (data, idx + 1), {
+            "out": jax.lax.dynamic_slice_in_dim(data, idx * r, r, 0)}
+
+    src = static_actor(
+        "src", (), ("out",), src_fire,
+        init=lambda: (jnp.arange(n * r * 3, dtype=jnp.float32).reshape(n * r, 3),
+                      jnp.int32(0)),
+        ready=lambda st: st[1] < n_pass)
+
+    def sink_fire(state, inputs, rates):
+        data, idx = state
+        return (jax.lax.dynamic_update_slice_in_dim(data, inputs["in"],
+                                                    idx * r, 0), idx + 1), {}
+
+    snk = static_actor(
+        "snk", ("in",), (), sink_fire,
+        init=lambda: (jnp.zeros((n * r, 3), jnp.float32), jnp.int32(0)),
+        finish=lambda st: st[0])
+    net = Network(
+        [ctl, src, gate, snk],
+        [FifoSpec("fc", 1, (1,), jnp.int32, is_control=True),
+         FifoSpec("f1", r, tok), FifoSpec("f2", r, tok)],
+        [Edge("fc", "ctl", "out", "gate", "c"),
+         Edge("f1", "src", "out", "gate", "in"),
+         Edge("f2", "gate", "out", "snk", "in")])
+    return net, n_pass
+
+
+def test_dynamic_gate_consumes_only_when_enabled():
+    net, n_pass = make_gated()
+    st, counts = compile_dynamic(net)(net.init_state())
+    # gate fires on every control token; src only supplies enabled windows
+    assert int(counts["gate"]) == 9
+    assert int(counts["src"]) == n_pass
+    assert int(counts["snk"]) == n_pass
+    out = np.asarray(collect_sink(net, st, "snk"))
+    data = np.arange(9 * 2 * 3, dtype=np.float32).reshape(-1, 3)
+    np.testing.assert_allclose(out[:2], data[0:2] + 100.0)
+
+
+def test_static_dal_mode_rejects_dynamic_actors():
+    """DAL's OpenCL path is SDF-only (paper §2.3) — dynamic actors must be
+    rejected on the accelerated path."""
+    net, _ = make_gated()
+    with pytest.raises(ValueError, match="STATIC_DAL"):
+        compile_dynamic(net, mode=RuntimeMode.STATIC_DAL)
+    # ... but a static network passes.
+    chain, _ = make_chain()
+    compile_static(chain, 2, mode=RuntimeMode.STATIC_DAL)
+
+
+def test_heterogeneous_split():
+    """GPP/GPU partition (paper §3.3): middle actor accelerated, source and
+    sink on host; boundary channels become feed/fetch actors."""
+    from repro.core import collect_sink, heterogeneous_split, stage_feed
+    net, expect = make_chain(delay=False)
+    sub, feeds, fetches = heterogeneous_split(net, ["dbl"], n_iterations=8)
+    assert feeds == ["__feed_f1"] and fetches == ["__fetch_f2"]
+    state = sub.init_state()
+    data = jnp.arange(8 * 2 * 3, dtype=jnp.float32).reshape(8, 2, 3)
+    state = stage_feed(state, "__feed_f1", data)
+    out_state = compile_static(sub, 8)(state)
+    got = np.asarray(collect_sink(sub, out_state, "__fetch_f2"))
+    np.testing.assert_allclose(got.reshape(-1, 3),
+                               2 * np.asarray(data).reshape(-1, 3))

@@ -1,0 +1,100 @@
+"""FIFO channel unit + property tests (paper Eq. 1 + Fig. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FifoSpec
+
+
+def test_capacity_law_eq1():
+    """C_f = S_f*(3r+1) with delay, S_f*2r otherwise — paper Eq. 1."""
+    f = FifoSpec("f", 4, (10,), jnp.float32)
+    assert f.capacity_tokens == 8
+    assert f.capacity_bytes == 8 * 10 * 4
+    d = FifoSpec("d", 4, (10,), jnp.float32, delay=1)
+    assert d.capacity_tokens == 13          # 3*4 + 1 — Fig. 2's 13 slots
+    assert d.capacity_bytes == 13 * 10 * 4
+
+
+def test_motion_detection_table1_number():
+    """The delayed QVGA channel at r=4 reproduces the paper's accounting."""
+    tok = (240, 320)
+    regular = FifoSpec("r", 4, tok, jnp.uint8)
+    delayed = FifoSpec("d", 4, tok, jnp.uint8, delay=1)
+    assert regular.token_size_bytes == 76800          # paper §4.1
+    total = 4 * regular.capacity_bytes + delayed.capacity_bytes
+    assert abs(total / 1e6 - 3.456) < 1e-3            # paper Table 1: 3.46 MB
+
+
+def test_control_fifo_rules():
+    with pytest.raises(ValueError):
+        FifoSpec("c", 2, (1,), jnp.int32, is_control=True)   # rate must be 1
+    with pytest.raises(ValueError):
+        FifoSpec("c", 1, (1,), jnp.int32, is_control=True, delay=1)
+    with pytest.raises(ValueError):
+        FifoSpec("f", 1, (1,), jnp.float32, delay=2)         # MoC: 0 or 1
+
+
+def test_delay_channel_shifts_by_one_token():
+    """Fig. 2 semantics: reads lag writes by exactly one token."""
+    r = 4
+    spec = FifoSpec("d", r, (2,), jnp.float32, delay=1)
+    st_ = spec.init_state(initial_token=jnp.array([7.0, 7.0]))
+    writes = [np.arange(r * 2, dtype=np.float32).reshape(r, 2) + 10 * i
+              for i in range(6)]
+    out = []
+    for i, w in enumerate(writes):
+        assert bool(spec.can_write(st_)), i
+        st_ = spec.write(st_, jnp.asarray(w))
+        assert bool(spec.can_read(st_))
+        win, st_ = spec.read(st_)
+        out.append(np.asarray(win))
+    flat = np.concatenate(out).reshape(-1, 2)
+    expect = np.concatenate([[np.array([7.0, 7.0])],
+                             np.concatenate(writes)])[:len(flat)]
+    np.testing.assert_allclose(flat, expect)
+
+
+@settings(max_examples=40, deadline=None)
+@given(rate=st.integers(1, 5), delay=st.integers(0, 1),
+       ops=st.lists(st.booleans(), min_size=1, max_size=40))
+def test_fifo_matches_queue_oracle(rate, delay, ops):
+    """Any blocking-legal interleaving of reads/writes behaves exactly like
+    an unbounded FIFO queue initialized with the delay token."""
+    spec = FifoSpec("f", rate, (1,), jnp.float32, delay=delay)
+    st_ = spec.init_state()
+    oracle = [0.0] * delay           # delay token = zeros
+    counter = [1.0]
+    for want_write in ops:
+        if want_write:
+            if not bool(spec.can_write(st_)):
+                continue
+            toks = np.array([counter[0] + i for i in range(rate)],
+                            np.float32).reshape(rate, 1)
+            counter[0] += rate
+            st_ = spec.write(st_, jnp.asarray(toks))
+            oracle.extend(toks[:, 0].tolist())
+        else:
+            if not bool(spec.can_read(st_)):
+                continue
+            win, st_ = spec.read(st_)
+            expect = [oracle.pop(0) for _ in range(rate)]
+            np.testing.assert_allclose(np.asarray(win)[:, 0], expect)
+    assert int(st_.occ) == len(oracle)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rate=st.integers(1, 4), n=st.integers(1, 12))
+def test_masked_rate0_freezes_cursor(rate, n):
+    """Rate-0 reads/writes (dynamic ports) leave the channel untouched."""
+    spec = FifoSpec("f", rate, (1,), jnp.float32)
+    st_ = spec.init_state()
+    st_ = spec.write(st_, jnp.ones((rate, 1)))
+    for _ in range(n):
+        _, st2 = spec.read_masked(st_, jnp.bool_(False))
+        assert int(st2.occ) == int(st_.occ)
+        assert int(st2.rd) == int(st_.rd)
+        st3 = spec.write_masked(st_, jnp.zeros((rate, 1)), jnp.bool_(False))
+        assert int(st3.occ) == int(st_.occ)

@@ -1,0 +1,105 @@
+"""Per-kernel correctness sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gauss5x5 import gauss5x5
+from repro.kernels.motion_post import median5, motion_post
+from repro.kernels.dyn_fir import dpd_branch
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd, ssd_naive
+from repro.kernels.rglru import rglru, rglru_naive
+
+
+@pytest.mark.parametrize("hw", [(240, 320), (480, 640), (120, 160), (64, 48)])
+def test_gauss5x5(rng, hw):
+    H, W = hw
+    f = jnp.asarray(rng.uniform(0, 255, (H, W)), jnp.float32)
+    a = gauss5x5(f, impl="xla")
+    b = gauss5x5(f, impl="pallas", block_h=H // 4, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-3)
+
+
+def test_median5_vs_numpy(rng):
+    vals = rng.normal(size=(5, 2000)).astype(np.float32)
+    m = np.asarray(median5(*[jnp.asarray(v) for v in vals]))
+    np.testing.assert_allclose(m, np.median(vals, axis=0))
+
+
+@pytest.mark.parametrize("hw,block_h", [((240, 320), 60), ((120, 160), 30),
+                                        ((64, 64), 16)])
+def test_motion_post(rng, hw, block_h):
+    H, W = hw
+    cur = jnp.asarray(rng.uniform(0, 255, (H, W)), jnp.float32)
+    prev = jnp.asarray(rng.uniform(0, 255, (H, W)), jnp.float32)
+    a = motion_post(cur, prev, impl="xla")
+    b = motion_post(cur, prev, impl="pallas", block_h=block_h, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("order", [1, 2, 5, 10])
+@pytest.mark.parametrize("L,block", [(2048, 512), (1024, 1024)])
+def test_dyn_fir(rng, order, L, block):
+    xr = jnp.asarray(rng.normal(size=L + 9), jnp.float32)
+    xi = jnp.asarray(rng.normal(size=L + 9), jnp.float32)
+    hr = jnp.asarray(rng.normal(size=10), jnp.float32)
+    hi = jnp.asarray(rng.normal(size=10), jnp.float32)
+    ar, ai = dpd_branch(xr, xi, hr, hi, order=order, impl="xla")
+    br, bi = dpd_branch(xr, xi, hr, hi, order=order, impl="pallas",
+                        block=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(ar), np.asarray(br), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(ai), np.asarray(bi), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize(
+    "B,S,H,Hkv,hd,causal,window,bq,bk",
+    [(2, 128, 4, 2, 32, True, None, 32, 32),
+     (1, 256, 8, 8, 16, True, 64, 64, 64),
+     (2, 64, 4, 1, 32, False, None, 32, 16),
+     (1, 128, 2, 2, 64, True, 32, 32, 32),
+     (1, 128, 6, 3, 16, True, None, 64, 32)])
+def test_flash_attention(rng, B, S, H, Hkv, hd, causal, window, bq, bk):
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    a = flash_attention(q, k, v, causal=causal, window=window, impl="xla")
+    b = flash_attention(q, k, v, causal=causal, window=window, impl="pallas",
+                        bq=bq, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    a = flash_attention(q, k, v, impl="xla")
+    b = flash_attention(q, k, v, impl="pallas", bq=32, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("B,L,H,P,N,chunk",
+                         [(2, 64, 3, 8, 16, 16), (1, 100, 2, 16, 8, 32),
+                          (2, 32, 1, 4, 4, 8)])
+def test_ssd_kernel(rng, B, L, H, P, N, chunk):
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, L, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B_ = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    C_ = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    y0, h0 = ssd_naive(x, dt, A, B_, C_)
+    y1, h1 = ssd(x, dt, A, B_, C_, chunk=chunk, impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("B,L,W,chunk",
+                         [(2, 64, 32, 16), (1, 100, 8, 32), (3, 33, 16, 8)])
+def test_rglru_kernel(rng, B, L, W, chunk):
+    la = jnp.asarray(-rng.uniform(0.01, 2.0, (B, L, W)), jnp.float32)
+    gx = jnp.asarray(rng.normal(size=(B, L, W)), jnp.float32)
+    a0, t0 = rglru_naive(la, gx)
+    a1, t1 = rglru(la, gx, chunk=chunk, impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(a0), np.asarray(a1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(t0), np.asarray(t1), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,63 @@
+"""§Perf hillclimb variants keep semantics: int8 KV, MoE local dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import decode_step, init_params, prefill
+from repro.models.moe import moe_init, moe_layer
+
+
+def test_int8_kv_cache_close_to_fp():
+    cfg = smoke_config("qwen2-72b")
+    cfgq = dataclasses.replace(cfg, kv_quant_int8=True)
+    key = jax.random.PRNGKey(1)
+    p = init_params(key, cfg)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
+    batch = {"tokens": toks[:, :-1]}
+    _, c0 = prefill(p, cfg, batch, max_cache_len=S + 8)
+    lg0, _ = decode_step(p, cfg, toks[:, -1:], jnp.full((B,), S, jnp.int32), c0)
+    _, cq = prefill(p, cfgq, batch, max_cache_len=S + 8)
+    assert cq["groups"]["c0"]["k"].dtype == jnp.int8
+    assert "k_scale" in cq["groups"]["c0"]
+    lgq, _ = decode_step(p, cfgq, toks[:, -1:], jnp.full((B,), S, jnp.int32), cq)
+    # int8 absmax-per-(slot,head): small logit perturbation only
+    assert float(jnp.max(jnp.abs(lg0 - lgq))) < 0.15
+
+
+def test_int8_cache_halves_bytes():
+    from repro.models.attention import cache_spec
+    a = cache_spec(4, 128, 2, 64)
+    b = cache_spec(4, 128, 2, 64, quant=True)
+    bytes_a = sum(np.prod(s.shape) * s.dtype.itemsize for s in jax.tree.leaves(a))
+    bytes_b = sum(np.prod(s.shape) * s.dtype.itemsize for s in jax.tree.leaves(b))
+    assert bytes_b < 0.75 * bytes_a
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_moe_local_dispatch_matches_global_when_dropfree(groups):
+    key = jax.random.PRNGKey(0)
+    params = moe_init(key, 32, 8, 64)
+    x = jax.random.normal(key, (4, 16, 32), jnp.float32)
+    y0, _ = moe_layer(params, x, top_k=2, capacity_factor=8.0)
+    y1, aux = moe_layer(params, x, top_k=2, capacity_factor=8.0,
+                        local_groups=groups)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=3e-2, atol=3e-2)
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_dryrun_variants_resolve():
+    from repro.launch.dryrun import apply_variant
+    from repro.configs import get_config
+    cfg = apply_variant(get_config("granite-moe-3b-a800m"), "moe_local16+cf1")
+    assert cfg.moe.local_groups == 16
+    assert cfg.moe.capacity_factor == 1.0
+    cfg2 = apply_variant(get_config("qwen2-72b"), "kv_int8")
+    assert cfg2.kv_quant_int8
+    with pytest.raises(ValueError):
+        apply_variant(get_config("qwen2-72b"), "bogus")

@@ -1,0 +1,90 @@
+"""Training substrate: optimizer, train step, loss goes down, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state, schedule
+from repro.train import TrainOptions, make_train_step
+
+
+def _to_dev(b):
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def test_schedule_warmup_cosine():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.int32(10))) - 1e-3) < 1e-9
+    assert abs(float(schedule(cfg, jnp.int32(100))) - 1e-4) < 1e-9
+
+
+@pytest.mark.parametrize("opts", [
+    TrainOptions(),
+    TrainOptions(microbatches=2),
+    TrainOptions(grad_dtype="f32"),
+], ids=["default", "microbatched", "f32-grads"])
+def test_loss_decreases(opts):
+    cfg = smoke_config("granite-8b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    step = jax.jit(make_train_step(cfg, opt_cfg, opts))
+    opt_state = init_opt_state(params)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4))
+    losses = []
+    for i in range(25):
+        params, opt_state, m = step(params, opt_state, _to_dev(data.batch(i)))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    # synthetic bigram structure is learnable: loss must clearly decrease
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation over 2 microbatches ~= single big batch."""
+    cfg = smoke_config("granite-8b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4))
+    batch = _to_dev(data.batch(0))
+    s1 = jax.jit(make_train_step(cfg, opt_cfg, TrainOptions(grad_dtype="f32")))
+    s2 = jax.jit(make_train_step(cfg, opt_cfg,
+                                 TrainOptions(microbatches=2, grad_dtype="f32")))
+    p1, _, m1 = s1(params, init_opt_state(params), batch)
+    p2, _, m2 = s2(params, init_opt_state(params), batch)
+    # same data -> nearly identical first step
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+    assert max(jax.tree.leaves(d)) < 5e-2
+
+
+def test_error_feedback_state_threads():
+    cfg = smoke_config("granite-8b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opts = TrainOptions(grad_dtype="bf16", error_feedback=True)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(), opts))
+    opt_state = init_opt_state(params)
+    opt_state["feedback"] = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=2))
+    params, opt_state, m = step(params, opt_state, _to_dev(data.batch(0)))
+    assert "feedback" in opt_state
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_data_pipeline_deterministic_replay():
+    """Batch i is a pure function of (seed, i): restart replay safety."""
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=8, seed=3)
+    a, b = SyntheticLM(cfg), SyntheticLM(cfg)
+    for i in [0, 5, 17]:
+        np.testing.assert_array_equal(a.batch(i)["tokens"], b.batch(i)["tokens"])
+    assert not np.array_equal(a.batch(0)["tokens"], a.batch(1)["tokens"])
+    # labels are next tokens
+    ba = a.batch(2)
+    np.testing.assert_array_equal(ba["tokens"][:, 1:], ba["labels"][:, :-1])
