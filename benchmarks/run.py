@@ -11,6 +11,7 @@ def main() -> None:
     rows = []
     from benchmarks.bench_paper_tables import (bench_buffers, bench_dpd,
                                                bench_motion_detection)
+    from benchmarks.bench_executors import bench_executors
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.roofline import bench_roofline
 
@@ -18,6 +19,7 @@ def main() -> None:
         ("Table 1 (buffer memory)", bench_buffers),
         ("Table 3 (Motion Detection)", bench_motion_detection),
         ("Table 4 (DPD + 5x claim)", bench_dpd),
+        ("Executors (specialization + multi-firing)", bench_executors),
         ("Kernels", bench_kernels),
         ("Roofline (from dry-run)", bench_roofline),
     ]

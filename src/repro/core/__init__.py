@@ -2,9 +2,11 @@
 
 Public API surface (mirrors the paper's minimal C API of §3.1/§3.4: actor
 description, channel law, network composition, executors)."""
-from repro.core.actor import ActorSpec, dynamic_actor, map_fire, static_actor
+from repro.core.actor import (ActorSpec, apply_rate_gate, dynamic_actor,
+                              map_fire, static_actor)
 from repro.core.fifo import FifoSpec, FifoState, total_buffer_bytes
-from repro.core.network import Edge, Network, iteration_token_flops, repetition_vector
+from repro.core.network import (Edge, Network, NetworkState,
+                                iteration_token_flops, repetition_vector)
 from repro.core.executor import (
     RuntimeMode,
     assert_mode_allows,
@@ -23,15 +25,16 @@ from repro.core.mapping import (
     stage_feed,
 )
 from repro.core.pipeline import pipeline_reference, pipeline_spmd
-from repro.core.schedule import cyclic_rate_table, layer_pattern_groups
+from repro.core.schedule import (cyclic_rate_table, layer_pattern_groups,
+                                 phase_unroll_period)
 
 __all__ = [
-    "ActorSpec", "dynamic_actor", "map_fire", "static_actor",
+    "ActorSpec", "apply_rate_gate", "dynamic_actor", "map_fire", "static_actor",
     "FifoSpec", "FifoState", "total_buffer_bytes",
-    "Edge", "Network", "iteration_token_flops", "repetition_vector",
+    "Edge", "Network", "NetworkState", "iteration_token_flops", "repetition_vector",
     "RuntimeMode", "assert_mode_allows", "collect_sink", "compile_dynamic",
     "compile_static", "fire_actor", "make_iteration_step", "run_interpreted",
     "Placement", "boundary_fifos", "heterogeneous_split", "partition_actors",
     "stage_feed", "pipeline_reference", "pipeline_spmd",
-    "cyclic_rate_table", "layer_pattern_groups",
+    "cyclic_rate_table", "layer_pattern_groups", "phase_unroll_period",
 ]

@@ -138,6 +138,21 @@ def dynamic_actor(name: str, control_port: str, control: ControlFn,
                      fire=fire, control_port=control_port, control=control, **kw)
 
 
+def apply_rate_gate(rate: jax.Array, window: jax.Array) -> Optional[jax.Array]:
+    """Gate a window by its 0/1 rate enable, folding constants at trace time.
+
+    Actor bodies that sum over maskable inputs multiply each window by its
+    rate flag (disabled windows hold MoC-unspecified data).  When the
+    enable is a compile-time constant — every firing of a static-rewrite
+    graph — the multiply is pure overhead: returns the window unchanged for
+    a constant 1 and ``None`` (drop the term) for a constant 0, keeping the
+    traced multiply only for genuinely data-dependent enables.
+    """
+    if not isinstance(rate, jax.core.Tracer):
+        return window if int(rate) else None
+    return rate.astype(window.dtype) * window
+
+
 def map_fire(fn: Callable[[jax.Array], jax.Array], in_port: str, out_port: str) -> FireFn:
     """Lift a per-window function into a FireFn for 1-in/1-out actors."""
 

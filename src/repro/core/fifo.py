@@ -71,10 +71,29 @@ class FifoSpec:
     # Control channels must have rate 1 (paper §2.2). Marked so the network
     # validator can enforce it.
     is_control: bool = False
+    # Declares that the producing and consuming ports are always enabled
+    # together (their control functions derive the same 0/r decision, as in
+    # DPD where one configuration value drives both ends of every branch
+    # channel).  Under that invariant a delay-free channel is *transient* in
+    # the static schedule — occupancy returns to 0 every iteration — and
+    # ``compile_static(specialize=True)`` register-allocates it: the window
+    # flows producer->consumer as a traced value inside the fused program
+    # and the ring buffer is never touched.  Channels between two static
+    # actors (or into a control port) are registerized automatically; this
+    # flag extends that to dynamic ports whose enables are structurally
+    # matched.  Declaring it on mismatched ports yields the same stale-slot
+    # hazards the buffered masked path already has — just sooner.
+    matched_rates: bool = False
 
     def __post_init__(self) -> None:
         if self.rate < 1:
             raise ValueError(f"fifo {self.name}: rate must be >= 1, got {self.rate}")
+        if self.matched_rates and self.delay:
+            raise ValueError(
+                f"fifo {self.name}: matched_rates is a transient-channel "
+                "declaration; a delay channel carries tokens across "
+                "iterations and can never be register-allocated"
+            )
         if self.delay not in (0, 1):
             raise ValueError(
                 f"fifo {self.name}: the MoC allows 0 or 1 initial tokens, got {self.delay}"
@@ -171,6 +190,62 @@ class FifoSpec:
         return ph * self.rate + (1 if self.delay else 0)
 
     # ------------------------------------------------------------------ #
+    # Trace-time cursor specialization (EXPERIMENTS.md §Executor perf).    #
+    #                                                                      #
+    # In the single-appearance static schedule every actor fires exactly   #
+    # once per iteration, so a port that consumes/produces unconditionally #
+    # advances its cursor by exactly 1 per iteration: starting from        #
+    # ``init_state`` (rd = wr = 0), the cursor at iteration ``i`` *is*     #
+    # ``i`` and the slot offset is the compile-time constant               #
+    # ``(i % n_write_phases) * rate``.  ``compile_static`` unrolls the     #
+    # phase cycle (LCM of n_write_phases over the network, <= 6) and calls #
+    # these ``*_static`` variants with a Python-int phase — every          #
+    # dynamic_slice / dynamic_update_slice of the cursor-driven API        #
+    # becomes a static slice XLA can fold, fuse and update in place.       #
+    # ------------------------------------------------------------------ #
+    def read_offset_static(self, phase: int) -> int:
+        """Compile-time slot offset of read phase ``phase`` (a Python int)."""
+        return (phase % self.n_write_phases) * self.rate
+
+    def write_offset_static(self, phase: int) -> int:
+        """Compile-time slot offset of write phase ``phase`` (a Python int)."""
+        return (phase % self.n_write_phases) * self.rate + (1 if self.delay else 0)
+
+    def read_static(self, st: FifoState, phase: int) -> Tuple[jax.Array, FifoState]:
+        """``read`` with the cursor specialized to trace-time ``phase``.
+
+        Caller guarantees ``st.rd % n_write_phases == phase % n_write_phases``
+        (true from ``init_state`` when the reader consumes every iteration).
+        Counters still advance so the resulting state is bit-identical to
+        the dynamic-cursor path.
+        """
+        off = self.read_offset_static(phase)
+        window = jax.lax.slice_in_dim(st.buf, off, off + self.rate, axis=0)
+        return window, FifoState(buf=st.buf, rd=st.rd + 1, wr=st.wr, occ=st.occ - self.rate)
+
+    def peek_static(self, st: FifoState, phase: int) -> jax.Array:
+        """``peek`` with a trace-time phase (static single-token slice)."""
+        off = self.read_offset_static(phase)
+        return jax.lax.slice_in_dim(st.buf, off, off + 1, axis=0)[0]
+
+    def write_static(self, st: FifoState, tokens: jax.Array, phase: int) -> FifoState:
+        """``write`` with the cursor specialized to trace-time ``phase``.
+
+        The Fig. 2 delay-channel copy-back happens iff ``phase == 2`` —
+        decided at trace time, so the non-copy-back phases carry no
+        ``lax.cond`` at all.
+        """
+        tokens = jnp.asarray(tokens, self.dtype)
+        off = self.write_offset_static(phase)
+        # dynamic_update_slice with a *constant* start index — not .at[].set,
+        # whose general-gather/scatter lowering is far slower on CPU.
+        buf = jax.lax.dynamic_update_slice_in_dim(st.buf, tokens, off, axis=0)
+        if self.delay and phase % self.n_write_phases == 2:
+            copy = jax.lax.slice_in_dim(buf, 3 * self.rate, 3 * self.rate + 1, axis=0)
+            buf = jax.lax.dynamic_update_slice_in_dim(buf, copy, 0, axis=0)
+        return FifoState(buf=buf, rd=st.rd, wr=st.wr + 1, occ=st.occ + self.rate)
+
+    # ------------------------------------------------------------------ #
     # Blocking predicates (used by the dynamic scheduler).                 #
     # ------------------------------------------------------------------ #
     @property
@@ -258,23 +333,28 @@ class FifoSpec:
     def write_masked(self, st: FifoState, tokens: jax.Array, enabled: jax.Array) -> FifoState:
         """Rate-0/r write: commit the window only when ``enabled``.
 
-        Non-delay channels avoid ``lax.cond`` on the buffer: a cond whose
+        All channels avoid ``lax.cond`` on the buffer: a cond whose
         identity arm returns the buffer forces XLA to materialize a copy of
         the *whole* channel every firing (measured: FIFO-copy-bound DPD,
-        EXPERIMENTS.md §Perf).  Instead the window slot is rewritten
-        unconditionally with either the new tokens or its current content —
-        an in-place dynamic-update-slice touching only r tokens.
+        EXPERIMENTS.md §Executor perf).  Instead the window slot is
+        rewritten unconditionally with either the new tokens or its current
+        content — an in-place dynamic-update-slice touching only r tokens.
+        Delay channels additionally fold the Fig. 2 copy-back (slot 3r ->
+        slot 0) into a predicated *single-token* rewrite of slot 0, instead
+        of the full-buffer copy the old cond identity arm materialized.
+        Pinned against the queue oracle in tests/test_core_fifo.py.
         """
-        if self.delay:
-            def do_write(s):
-                return self.write(s, tokens)
-
-            return jax.lax.cond(enabled, do_write, lambda s: s, st)
         e = enabled.astype(jnp.int32)
         off = self._write_offset(st.wr)
         cur = jax.lax.dynamic_slice_in_dim(st.buf, off, self.rate, axis=0)
         eff = jnp.where(enabled, jnp.asarray(tokens, self.dtype), cur)
         buf = jax.lax.dynamic_update_slice_in_dim(st.buf, eff, off, axis=0)
+        if self.delay:
+            # Copy-back fires iff this is an *enabled* phase-2 write.
+            do_copy = jnp.logical_and(enabled,
+                                      (st.wr % self.n_write_phases) == 2)
+            slot0 = jnp.where(do_copy, buf[3 * self.rate], buf[0])
+            buf = buf.at[0].set(slot0)
         return FifoState(buf=buf, rd=st.rd, wr=st.wr + e,
                          occ=st.occ + e * self.rate)
 

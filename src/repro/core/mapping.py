@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.actor import ActorSpec, static_actor
 from repro.core.fifo import FifoSpec
-from repro.core.network import Edge, Network
+from repro.core.network import Edge, Network, NetworkState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,11 +144,22 @@ def heterogeneous_split(network: Network, accelerated: List[str],
     return sub, feed_names, fetch_names
 
 
-def stage_feed(state: Dict[str, Any], feed_actor: str, data: jax.Array) -> Dict[str, Any]:
-    """Install pre-staged windows into a feed actor's state."""
-    st = dict(state)
-    actors = dict(st["actors"])
-    _, idx = actors[feed_actor]
-    actors[feed_actor] = (jnp.asarray(data), idx)
-    st["actors"] = actors
-    return st
+def stage_feed(state: Any, feed_actor: str, data: jax.Array) -> Any:
+    """Install pre-staged windows into a feed actor's state.
+
+    Boundary feeds operate on the flat :class:`NetworkState` pytree — the
+    staged windows replace the feed actor's zero-filled slab in place of
+    its tuple slot, keeping the treedef (and thus donation signatures) of
+    the compiled step unchanged.  Legacy ``{"fifos": ..., "actors": ...}``
+    dict states are staged in kind (the executors convert them on entry).
+    """
+    if not isinstance(state, NetworkState):
+        st = dict(state)
+        actors = dict(st["actors"])
+        _, cursor = actors[feed_actor]
+        actors[feed_actor] = (jnp.asarray(data), cursor)
+        st["actors"] = actors
+        return st
+    idx = state.actor_names.index(feed_actor)
+    _, cursor = state.actors[idx]
+    return state.replace_actor(idx, (jnp.asarray(data), cursor))

@@ -22,6 +22,48 @@ from repro.core.actor import ActorSpec
 from repro.core.fifo import FifoSpec, FifoState, total_buffer_bytes
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NetworkState:
+    """Flat functional state of a whole network (one pytree, built once).
+
+    FIFO and actor states are packed as *tuples* in network declaration
+    order — the executors index them with build-time integer tables
+    (``Network.in_port_specs`` &c.) instead of rebuilding name-keyed dicts
+    on every firing, and the fixed treedef makes the state cheap to flatten
+    per jitted dispatch and safe to donate (``donate_argnums``).
+
+    ``fifo_names`` / ``actor_names`` are static pytree metadata; the
+    mapping-style ``state["fifos"]`` / ``state["actors"]`` accessors keep
+    the original dict-of-dicts read API working for callers (benchmarks,
+    examples, ``collect_sink``).
+    """
+
+    fifos: Tuple[FifoState, ...]
+    actors: Tuple[Any, ...]
+    fifo_names: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+    actor_names: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+
+    # -- read accessors ------------------------------------------------- #
+    def __getitem__(self, key: str) -> Dict[str, Any]:
+        if key == "fifos":
+            return dict(zip(self.fifo_names, self.fifos))
+        if key == "actors":
+            return dict(zip(self.actor_names, self.actors))
+        raise KeyError(key)
+
+    def fifo(self, name: str) -> FifoState:
+        return self.fifos[self.fifo_names.index(name)]
+
+    def actor(self, name: str) -> Any:
+        return self.actors[self.actor_names.index(name)]
+
+    # -- functional update helpers -------------------------------------- #
+    def replace_actor(self, index: int, value: Any) -> "NetworkState":
+        actors = self.actors[:index] + (value,) + self.actors[index + 1:]
+        return dataclasses.replace(self, actors=actors)
+
+
 @dataclasses.dataclass(frozen=True)
 class Edge:
     """One channel binding: (src actor, src port) --fifo--> (dst actor, dst port)."""
@@ -60,6 +102,55 @@ class Network:
         self.out_fifo: Dict[Tuple[str, str], str] = {
             (e.src_actor, e.src_port): e.fifo for e in self.edges
         }
+        # Flat-state index maps + per-actor port->spec tables, precomputed
+        # once here so the traced executors never re-resolve name->spec
+        # dict chains per firing / per sweep trace (hot-path hoisting).
+        self.fifo_index: Dict[str, int] = {n: i for i, n in enumerate(self.fifos)}
+        self.actor_index: Dict[str, int] = {n: i for i, n in enumerate(self.actors)}
+        self.in_port_specs: Dict[str, Tuple[Tuple[str, FifoSpec, int], ...]] = {}
+        self.out_port_specs: Dict[str, Tuple[Tuple[str, FifoSpec, int], ...]] = {}
+        self.control_specs: Dict[str, Optional[Tuple[FifoSpec, int]]] = {}
+        for name, a in self.actors.items():
+            self.in_port_specs[name] = tuple(
+                (p, self.fifos[self.in_fifo[(name, p)]],
+                 self.fifo_index[self.in_fifo[(name, p)]])
+                for p in a.in_ports)
+            self.out_port_specs[name] = tuple(
+                (p, self.fifos[self.out_fifo[(name, p)]],
+                 self.fifo_index[self.out_fifo[(name, p)]])
+                for p in a.out_ports)
+            if a.control_port is not None:
+                cf = self.in_fifo[(name, a.control_port)]
+                self.control_specs[name] = (self.fifos[cf], self.fifo_index[cf])
+            else:
+                self.control_specs[name] = None
+        # Register-allocatable (transient) channels for the specialized
+        # static executor: delay-free channels whose two ports are provably
+        # enabled together.  In a feasible single-appearance schedule such
+        # a channel's occupancy returns to 0 inside every iteration, so the
+        # fused program can forward the window producer->consumer as a
+        # traced value and never touch the ring buffer.  Scope (measured,
+        # EXPERIMENTS.md §Executor perf):
+        #   * masked bulk channels declared via FifoSpec.matched_rates —
+        #     forwarding erases the read-modify-write their masked ring
+        #     writes otherwise pay;
+        #   * control channels with a static producer — scalar tokens,
+        #     trivially matched (both ports unconditional).
+        # Bulk channels between two *static* actors are deliberately left
+        # buffered: their static-offset ring write is a single contiguous
+        # dynamic-update-slice that doubles as the materialization point
+        # between actor bodies, whereas forwarding them lets XLA fuse
+        # producer stencils into every consumer tap (25-tap gauss inside
+        # each median tap: 10x+ slower on the CPU backend).
+        reg = set()
+        for e in self.edges:
+            f = self.fifos[e.fifo]
+            if f.delay:
+                continue
+            src_static = not self.actors[e.src_actor].is_dynamic
+            if f.matched_rates or (f.is_control and src_static):
+                reg.add(e.fifo)
+        self.register_fifos: frozenset = frozenset(reg)
 
     # ------------------------------------------------------------------ #
     def _validate(self) -> None:
@@ -130,12 +221,22 @@ class Network:
     # ------------------------------------------------------------------ #
     # State construction.                                                  #
     # ------------------------------------------------------------------ #
-    def init_state(self) -> Dict[str, Any]:
-        fifo_states: Dict[str, FifoState] = {}
-        for name, spec in self.fifos.items():
-            fifo_states[name] = spec.init_state(self.initial_tokens.get(name))
-        actor_states = {name: a.init_state() for name, a in self.actors.items()}
-        return {"fifos": fifo_states, "actors": actor_states}
+    def init_state(self) -> NetworkState:
+        fifo_states = tuple(spec.init_state(self.initial_tokens.get(name))
+                            for name, spec in self.fifos.items())
+        actor_states = tuple(a.init_state() for a in self.actors.values())
+        return NetworkState(fifos=fifo_states, actors=actor_states,
+                            fifo_names=tuple(self.fifos),
+                            actor_names=tuple(self.actors))
+
+    def state_from_dict(self, state: Mapping[str, Any]) -> NetworkState:
+        """Adapt a legacy ``{"fifos": {...}, "actors": {...}}`` dict state."""
+        if isinstance(state, NetworkState):
+            return state
+        return NetworkState(
+            fifos=tuple(state["fifos"][n] for n in self.fifos),
+            actors=tuple(state["actors"][n] for n in self.actors),
+            fifo_names=tuple(self.fifos), actor_names=tuple(self.actors))
 
     # ------------------------------------------------------------------ #
     # Graph utilities for the scheduler.                                   #

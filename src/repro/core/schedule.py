@@ -13,9 +13,41 @@ static and the fully dynamic scheduler.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+import math
+from typing import Iterable, List, Sequence, Tuple
 
 import numpy as np
+
+
+def phase_unroll_period(phase_counts: Iterable[int], bound: int = 6) -> int:
+    """Unroll period for trace-time FIFO phase specialization, bounded.
+
+    ``compile_static`` specializes FIFO cursors to trace-time phases by
+    unrolling one *super-iteration* of ``period`` network iterations.  A
+    channel is offset-specialized iff its ``n_write_phases`` (2 for double
+    buffers, 3 for Fig. 2 delay triple buffers) divides ``period``, so the
+    ideal period is the LCM of all cycle lengths — one of {1, 2, 3, 6}
+    under the current MoC, never exceeding the default ``bound`` of 6.
+
+    When the LCM exceeds ``bound`` (a tighter caller bound, or a future
+    channel scheme), we pick the period <= bound that covers the most
+    channels instead of giving up entirely; ties go to the smaller unroll
+    (smaller compiled body).
+    """
+    counts = list(phase_counts)
+    period = 1
+    for c in counts:
+        if c < 1:
+            raise ValueError(f"phase count must be >= 1, got {c}")
+        period = period * c // math.gcd(period, c)
+    if period <= bound:
+        return period
+    best, best_cover = 1, -1
+    for p in range(1, bound + 1):
+        cover = sum(1 for c in counts if p % c == 0)
+        if cover > best_cover:
+            best, best_cover = p, cover
+    return best
 
 
 def cyclic_rate_table(pattern: Sequence[int], length: int) -> np.ndarray:

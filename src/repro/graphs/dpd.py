@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Edge, FifoSpec, Network, dynamic_actor, static_actor
+from repro.core.actor import apply_rate_gate
 from repro.kernels.dyn_fir import N_BRANCHES, N_TAPS, branch_ref
 from repro.kernels.dyn_fir.ops import dpd_branch
 
@@ -175,8 +176,11 @@ def build_dpd(n_firings: int,
     def adder_fire(state, inputs, rates):
         acc = jnp.zeros((1, 2, L), jnp.float32)
         for k in range(n_branches):
-            # Disabled windows hold stale data — gate by the rate flag.
-            acc = acc + rates[f"y{k}"].astype(jnp.float32) * inputs[f"y{k}"]
+            # Disabled windows hold stale data — gate by the rate flag
+            # (folded away at trace time in the static-rewrite build).
+            term = apply_rate_gate(rates[f"y{k}"], inputs[f"y{k}"])
+            if term is not None:
+                acc = acc + term
         return state, {"out": acc}
 
     def adder_control(tok):
@@ -195,11 +199,23 @@ def build_dpd(n_firings: int,
     # ---------------------------------------------------------------- #
     # Channels (Eq. 1 capacities) and wiring.
     # ---------------------------------------------------------------- #
-    fifos = [FifoSpec("f_in", 1, tok), FifoSpec("f_out", 1, tok)]
+    # In the dynamic build, every data channel's two ports are driven by
+    # the same configuration value (fork.b_k, poly_k and adder.y_k all test
+    # k < n_active; f_in and f_out are unconditionally enabled), so they
+    # are matched-rate transient channels: the specialized static executor
+    # register-allocates them instead of paying the masked ring writes'
+    # read-modify-write on 256 KB windows.  The static rewrite has
+    # unconditional ports, where the buffered static-offset path is already
+    # optimal (the contiguous ring write doubles as the materialization
+    # point between actor bodies), so the flag is only set when dynamic.
+    matched = not static_all_active
+    fifos = [FifoSpec("f_in", 1, tok, matched_rates=matched),
+             FifoSpec("f_out", 1, tok, matched_rates=matched)]
     edges = [Edge("f_in", "source", "out", "fork", "in"),
              Edge("f_out", "adder", "out", "sink", "in")]
     for k in range(n_branches):
-        fifos += [FifoSpec(f"f_b{k}", 1, tok), FifoSpec(f"f_y{k}", 1, tok)]
+        fifos += [FifoSpec(f"f_b{k}", 1, tok, matched_rates=matched),
+                  FifoSpec(f"f_y{k}", 1, tok, matched_rates=matched)]
         edges += [Edge(f"f_b{k}", "fork", f"b{k}", f"poly{k}", "in"),
                   Edge(f"f_y{k}", f"poly{k}", "out", "adder", f"y{k}")]
     actors = [source, fork, *polys, adder, sink]
@@ -210,3 +226,16 @@ def build_dpd(n_firings: int,
             edges.append(Edge(f"f_{p}", "config", p, dst, port))
         actors.insert(0, config)
     return Network(actors, fifos, edges)
+
+
+def bench_workload(n_firings: int, block_l: int = BLOCK_L, seed: int = 1,
+                   **build_kw) -> Network:
+    """DPD network staged with a reproducible random signal.
+
+    Shared by benchmarks/bench_executors.py and tests/test_perf_smoke.py so
+    the measured workload (and its Msamples accounting: ``n_firings *
+    block_l`` complex samples end to end) is defined in one place.
+    """
+    rng = np.random.default_rng(seed)
+    sig = jnp.asarray(rng.normal(size=(2, n_firings * block_l)).astype(np.float32))
+    return build_dpd(n_firings, block_l=block_l, signal=sig, **build_kw)

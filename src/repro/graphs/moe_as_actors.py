@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import Edge, FifoSpec, Network, dynamic_actor, static_actor
+from repro.core.actor import apply_rate_gate
 from repro.models.layers import F32
 from repro.models.moe import capacity_for
 
@@ -122,9 +123,15 @@ def build_moe_network(params: Dict[str, jax.Array], n_tokens: int, d_model: int,
         return d
 
     def comb_fire(state, inputs, rates):
+        # Note the expert channels here are deliberately NOT matched_rates:
+        # the router always writes x_e while an idle expert skips reading,
+        # so occupancies drift and the channels are not transient — they
+        # must stay ring-buffered under the specialized static executor.
         y_flat = jnp.zeros((E * C + 1, d_model), token_stream.dtype)
         for e in range(E):
-            gated = rates[f"y{e}"].astype(token_stream.dtype) * inputs[f"y{e}"][0]
+            gated = apply_rate_gate(rates[f"y{e}"], inputs[f"y{e}"][0])
+            if gated is None:
+                continue
             y_flat = jax.lax.dynamic_update_slice_in_dim(y_flat, gated, e * C, axis=0)
         slot = inputs["slot"][0]
         w = inputs["w"][0]

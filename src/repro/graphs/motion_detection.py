@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import Edge, FifoSpec, Network, static_actor
 from repro.kernels.gauss5x5 import gauss5x5
@@ -113,3 +114,21 @@ def build_motion_detection(n_frames: int, rate: int = 1,
         Edge("f_med_sink", "med", "out", "sink", "in"),
     ]
     return Network([source, gauss, thres, med, sink], fifos, edges)
+
+
+def bench_workload(n_frames: int, rate: int = 4,
+                   frame_hw: Tuple[int, int] = (FRAME_H, FRAME_W),
+                   seed: int = 0, **build_kw) -> Network:
+    """MD network staged with reproducible random frames.
+
+    Shared by benchmarks/bench_executors.py and tests/test_perf_smoke.py.
+    All channels here sit between static actors, so the specialized
+    executor keeps them ring-buffered with trace-time phase offsets
+    (period = LCM(2, 3) over the double buffers and the Fig. 2 delayed
+    triple buffer); only the fps accounting lives here.
+    """
+    rng = np.random.default_rng(seed)
+    video = jnp.asarray(
+        rng.uniform(0, 255, (n_frames,) + tuple(frame_hw)).astype(np.float32))
+    return build_motion_detection(n_frames, rate=rate, frame_hw=frame_hw,
+                                  video=video, **build_kw)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container image ships no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import FifoSpec
 
@@ -82,6 +86,95 @@ def test_fifo_matches_queue_oracle(rate, delay, ops):
             win, st_ = spec.read(st_)
             expect = [oracle.pop(0) for _ in range(rate)]
             np.testing.assert_allclose(np.asarray(win)[:, 0], expect)
+    assert int(st_.occ) == len(oracle)
+
+
+@pytest.mark.parametrize("delay", [0, 1])
+def test_static_phase_api_matches_dynamic_cursors(delay):
+    """read_static/write_static/peek_static with trace-time phases produce
+    bit-identical buffers, windows and counters to the cursor-driven API
+    when driven through whole phase cycles from init_state."""
+    r = 3
+    spec = FifoSpec("f", r, (2,), jnp.float32, delay=delay)
+    sd = spec.init_state()
+    ss = spec.init_state()
+    n_phases = spec.n_write_phases
+    for i in range(2 * n_phases):
+        toks = jnp.arange(r * 2, dtype=jnp.float32).reshape(r, 2) + 10 * i
+        sd = spec.write(sd, toks)
+        ss = spec.write_static(ss, toks, i % n_phases)
+        np.testing.assert_array_equal(np.asarray(sd.buf), np.asarray(ss.buf))
+        assert int(sd.wr) == int(ss.wr) and int(sd.occ) == int(ss.occ)
+        np.testing.assert_array_equal(np.asarray(spec.peek(sd)),
+                                      np.asarray(spec.peek_static(ss, i % n_phases)))
+        wd, sd = spec.read(sd)
+        ws, ss = spec.read_static(ss, i % n_phases)
+        np.testing.assert_array_equal(np.asarray(wd), np.asarray(ws))
+        assert int(sd.rd) == int(ss.rd) and int(sd.occ) == int(ss.occ)
+
+
+def test_matched_rates_rejected_on_delay_channel():
+    with pytest.raises(ValueError, match="matched_rates"):
+        FifoSpec("f", 2, (1,), jnp.float32, delay=1, matched_rates=True)
+
+
+def test_phase_unroll_period():
+    from repro.core import phase_unroll_period
+    assert phase_unroll_period([]) == 1
+    assert phase_unroll_period([2, 2]) == 2
+    assert phase_unroll_period([2, 3]) == 6
+    assert phase_unroll_period([3]) == 3
+    # Above the bound: pick the period covering the most channels.
+    assert phase_unroll_period([2, 2, 3], bound=3) == 2
+    assert phase_unroll_period([3, 3, 2], bound=3) == 3
+    with pytest.raises(ValueError):
+        phase_unroll_period([0])
+
+
+@settings(max_examples=40, deadline=None)
+@given(rate=st.integers(1, 5), delay=st.integers(0, 1),
+       ops=st.lists(st.integers(0, 3), min_size=1, max_size=40))
+def test_masked_fifo_matches_queue_oracle(rate, delay, ops):
+    """The masked (rate-0/r) API behaves exactly like the queue oracle.
+
+    Ops: 0 = enabled write, 1 = enabled read, 2 = disabled write,
+    3 = disabled read.  Disabled ops must be pure no-ops observationally;
+    enabled ops must match the unbounded queue.  This pins the delay
+    channel's masked write path — a masked r-token window update plus a
+    predicated slot-0 copy-back, with no full-buffer cond copy (the old
+    ``lax.cond`` identity arm) — against Fig. 2 semantics.
+    """
+    spec = FifoSpec("f", rate, (1,), jnp.float32, delay=delay)
+    st_ = spec.init_state()
+    oracle = [0.0] * delay
+    counter = [1.0]
+    for op in ops:
+        enabled = op < 2
+        if op % 2 == 0:  # write
+            if enabled and not bool(spec.can_write(st_)):
+                continue
+            toks = np.array([counter[0] + i for i in range(rate)],
+                            np.float32).reshape(rate, 1)
+            st2 = spec.write_masked(st_, jnp.asarray(toks),
+                                    jnp.bool_(enabled))
+            if enabled:
+                counter[0] += rate
+                oracle.extend(toks[:, 0].tolist())
+            else:
+                assert int(st2.occ) == int(st_.occ)
+                assert int(st2.wr) == int(st_.wr)
+            st_ = st2
+        else:  # read
+            if enabled and not bool(spec.can_read(st_)):
+                continue
+            win, st2 = spec.read_masked(st_, jnp.bool_(enabled))
+            if enabled:
+                expect = [oracle.pop(0) for _ in range(rate)]
+                np.testing.assert_allclose(np.asarray(win)[:, 0], expect)
+            else:
+                assert int(st2.occ) == int(st_.occ)
+                assert int(st2.rd) == int(st_.rd)
+            st_ = st2
     assert int(st_.occ) == len(oracle)
 
 

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container image ships no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (Edge, FifoSpec, Network, collect_sink, compile_dynamic,
                         compile_static, dynamic_actor, map_fire, static_actor)

@@ -1,0 +1,79 @@
+"""Benchmark bit-rot guard: run every benchmarks/run.py section tiny.
+
+The benchmark harness used to be exercised only at bench time, so API
+drift in the executors/graphs surfaced weeks later as
+``<section>_ERROR`` rows.  This smoke test runs each section in a fast
+configuration (tiny sizes, minimal reps) inside tier-1 so a broken
+section fails CI immediately.  Only the *contract* is asserted — rows of
+``(name, us_per_call, derived)`` with no ERROR markers — never absolute
+timings, which are meaningless on a shared CPU.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)  # benchmarks/ is a plain directory
+
+
+def check_rows(rows):
+    assert rows, "section produced no rows"
+    for name, us, derived in rows:
+        assert isinstance(name, str) and name, rows
+        assert "ERROR" not in name, (name, derived)
+        assert isinstance(us, (int, float)), rows
+        assert isinstance(derived, str), rows
+
+
+def test_bench_buffers():
+    from benchmarks.bench_paper_tables import bench_buffers
+    check_rows(bench_buffers())
+
+
+def test_bench_motion_detection_fast():
+    from benchmarks.bench_paper_tables import bench_motion_detection
+    check_rows(bench_motion_detection(n_frames=8))
+
+
+def test_bench_dpd_fast():
+    from benchmarks.bench_paper_tables import bench_dpd
+    check_rows(bench_dpd(n_firings=4, block_l=1024))
+
+
+def test_bench_executors_fast(tmp_path):
+    from benchmarks.bench_executors import bench_executors
+    json_path = str(tmp_path / "BENCH_executors.json")
+    rows = bench_executors(fast=True, json_path=json_path)
+    check_rows(rows)
+    # The dynamic-scheduler acceptance claims must hold even at tiny sizes:
+    # strictly fewer sweeps, bit-identical final states.
+    reductions = [d for n, _, d in rows if n.endswith("dynamic_sweep_reduction")]
+    assert len(reductions) == 2
+    for derived in reductions:
+        assert "strictly fewer: True" in derived, derived
+        assert "bit-identical states: True" in derived, derived
+    # Machine-readable trajectory: one record per executor x graph.
+    with open(json_path) as f:
+        records = json.load(f)
+    names = {r["name"] for r in records}
+    for g in ("dpd", "md"):
+        for e in ("static_baseline", "static_specialized",
+                  "static_specialized_donated", "dynamic_baseline",
+                  "dynamic_multi_firing"):
+            assert f"exec_{g}_{e}" in names, sorted(names)
+    for r in records:
+        assert r["us_per_call"] > 0
+        assert r["tokens_per_s"] > 0
+
+
+def test_bench_kernels():
+    from benchmarks.bench_kernels import bench_kernels
+    check_rows(bench_kernels())
+
+
+def test_bench_roofline():
+    from benchmarks.roofline import bench_roofline
+    check_rows(bench_roofline())
