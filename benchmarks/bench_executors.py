@@ -2,15 +2,15 @@
 
 Proves the two tentpole claims on real paper graphs:
 
-  * ``compile_static(specialize=True)`` — transient-channel register
-    allocation + phase-specialized ring offsets — vs the dynamic-cursor
-    baseline (``specialize=False``), on the DPD network (paper §4.2, the
-    dynamic-rate showcase) and motion detection (paper §4.1, the delay-
-    channel showcase).  Target: >= 1.5x on DPD.
-  * ``compile_dynamic(multi_firing=True)`` — occupancy-bounded fori_loop
-    firing — reaches quiescence in strictly fewer sweeps than the
-    one-firing-per-actor-per-sweep baseline, with bit-identical final
-    states.
+  * static mode with ``ExecutionPlan(specialize=True)`` — transient-
+    channel register allocation + phase-specialized ring offsets — vs the
+    dynamic-cursor baseline (``specialize=False``), on the DPD network
+    (paper §4.2, the dynamic-rate showcase) and motion detection (paper
+    §4.1, the delay-channel showcase).  Target: >= 1.5x on DPD.
+  * dynamic mode with ``ExecutionPlan(multi_firing=True)`` — occupancy-
+    bounded fori_loop firing — reaches quiescence in strictly fewer
+    sweeps than the one-firing-per-actor-per-sweep baseline, with
+    bit-identical final states.
 
 Timing interleaves baseline/specialized reps and takes medians so shared-
 machine noise hits both arms equally.  Besides the CSV rows, writes
@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compile_dynamic, compile_static
+from repro.core import ExecutionPlan
 
 Row = Tuple[str, float, str]
 
@@ -92,11 +92,13 @@ def bench_executors(fast: bool = False,
     for gname, net, n_iter, tokens, fmt in workloads:
         # -- static executors: baseline vs specialized (+ donation) ------ #
         st = net.init_state()
-        run_base = compile_static(net, n_iter, specialize=False)
-        run_spec = compile_static(net, n_iter, specialize=True)
+        run_base = net.compile(mode="static", n_iterations=n_iter,
+                               specialize=False)
+        run_spec = net.compile(mode="static", n_iterations=n_iter,
+                               specialize=True)
         med = _interleaved_medians({
-            "base": lambda: jax.block_until_ready(run_base(st)),
-            "spec": lambda: jax.block_until_ready(run_spec(st)),
+            "base": lambda: jax.block_until_ready(run_base.run(st).state),
+            "spec": lambda: jax.block_until_ready(run_spec.run(st).state),
         }, reps)
         record(f"exec_{gname}_static_baseline", med["base"], tokens,
                fmt(med["base"]))
@@ -109,25 +111,29 @@ def bench_executors(fast: bool = False,
         # Donated run: every call consumes a fresh state (in-place buffers).
         # Deep-copy each pooled state: init_state shares the staged source
         # slab across states, and donating it once would kill the pool.
-        run_don = compile_static(net, n_iter, specialize=True, donate=True)
+        run_don = net.compile(mode="static", n_iterations=n_iter,
+                              specialize=True, donate=True)
         pool = [jax.tree.map(jnp.copy, net.init_state())
                 for _ in range(reps + 1)]
         med_d = _interleaved_medians(
-            {"don": lambda: jax.block_until_ready(run_don(pool.pop()))}, reps)
+            {"don": lambda: jax.block_until_ready(run_don.run(pool.pop()).state)},
+            reps)
         record(f"exec_{gname}_static_specialized_donated", med_d["don"],
                tokens, fmt(med_d["don"]))
 
         # -- dynamic executors: single- vs multi-firing sweeps ----------- #
-        dyn_base = compile_dynamic(net, multi_firing=False, return_sweeps=True)
-        dyn_mf = compile_dynamic(net, multi_firing=True, return_sweeps=True)
-        sb, cb, swb = dyn_base(net.init_state())
-        sm, cm, swm = dyn_mf(net.init_state())
+        dyn_base = net.compile(ExecutionPlan(mode="dynamic",
+                                             multi_firing=False))
+        dyn_mf = net.compile(ExecutionPlan(mode="dynamic", multi_firing=True))
+        rb, rm = dyn_base.run(), dyn_mf.run()
+        sb, cb, swb = rb.state, rb.fire_counts, rb.sweeps
+        sm, cm, swm = rm.state, rm.fire_counts, rm.sweeps
         identical = (_states_identical(sb, sm) and
                      {k: int(v) for k, v in cb.items()} ==
                      {k: int(v) for k, v in cm.items()})
         med = _interleaved_medians({
-            "base": lambda: jax.block_until_ready(dyn_base(net.init_state())[0]),
-            "mf": lambda: jax.block_until_ready(dyn_mf(net.init_state())[0]),
+            "base": lambda: jax.block_until_ready(dyn_base.run().state),
+            "mf": lambda: jax.block_until_ready(dyn_mf.run().state),
         }, reps)
         record(f"exec_{gname}_dynamic_baseline", med["base"], tokens,
                f"{int(swb)} sweeps")

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (collect_sink, compile_static, run_interpreted)
 from repro.graphs.dpd import BLOCK_L, build_dpd
 from repro.graphs.motion_detection import build_motion_detection
 
@@ -56,18 +55,20 @@ def bench_motion_detection(n_frames: int = 24) -> List[Row]:
 
     # "MC": interpreted per-actor execution, rate 1 (paper: GPP rate 1).
     net1 = build_motion_detection(n_frames, rate=1, video=jnp.asarray(video))
+    interp = net1.compile(mode="interpreted", n_iterations=n_frames)
     st1 = net1.init_state()
     dt = _time(lambda: jax.block_until_ready(
-        run_interpreted(net1, st1, n_frames)["actors"]["sink"][0]), reps=1)
+        interp.run(st1).state.actor("sink")[0]), reps=1)
     fps_mc = n_frames / dt
     rows.append(("table3_md_interpreted_mc_fps", dt / n_frames * 1e6,
                  f"{fps_mc:.0f} fps (paper MC: 485-1138)"))
 
     # "Heterog": whole network compiled, rate 4 (paper's GPU token rate).
     net4 = build_motion_detection(n_frames, rate=4, video=jnp.asarray(video))
-    run4 = compile_static(net4, n_frames // 4)
+    run4 = net4.compile(mode="static", n_iterations=n_frames // 4)
     st4 = net4.init_state()
-    dt = _time(lambda: jax.block_until_ready(run4(st4)["actors"]["sink"][0]))
+    dt = _time(lambda: jax.block_until_ready(
+        run4.run(st4).state.actor("sink")[0]))
     fps_het = n_frames / dt
     rows.append(("table3_md_compiled_heterog_fps", dt / n_frames * 1e6,
                  f"{fps_het:.0f} fps (paper heterog: 4614-6063)"))
@@ -87,14 +88,12 @@ def bench_dpd(n_firings: int = 8, block_l: int = BLOCK_L) -> List[Row]:
     rows: List[Row] = []
 
     def throughput(net, compiled=True) -> float:
-        if compiled:
-            run = compile_static(net, n_firings)
-            st = net.init_state()
-            dt = _time(lambda: jax.block_until_ready(run(st)["actors"]["sink"][0]))
-        else:
-            st = net.init_state()
-            dt = _time(lambda: jax.block_until_ready(
-                run_interpreted(net, st, n_firings)["actors"]["sink"][0]), reps=1)
+        mode = "static" if compiled else "interpreted"
+        prog = net.compile(mode=mode, n_iterations=n_firings)
+        st = net.init_state()
+        dt = _time(lambda: jax.block_until_ready(
+            prog.run(st).state.actor("sink")[0]),
+            reps=3 if compiled else 1)
         return samples / dt / 1e6
 
     # MC analogue: interpreted dynamic graph (avg ~6 filters active).

@@ -11,16 +11,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compile_static
 from repro.graphs.dpd import build_dpd
 
 
 def throughput(net, n_firings, block_l):
-    run = compile_static(net, n_firings)
-    state = run(net.init_state())                    # warmup
+    prog = net.compile(mode="static", n_iterations=n_firings)
+    prog.run()                                       # warmup
     t0 = time.perf_counter()
-    state = run(net.init_state())
-    jax.block_until_ready(state["actors"]["sink"][0])
+    state = prog.run().state
+    jax.block_until_ready(state.actor("sink")[0])
     dt = time.perf_counter() - t0
     return n_firings * block_l / dt / 1e6
 

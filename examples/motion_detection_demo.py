@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import collect_sink, compile_static
 from repro.graphs.motion_detection import build_motion_detection
 
 
@@ -32,13 +31,13 @@ def main():
     net = build_motion_detection(n, rate=4, video=jnp.asarray(video))
     print(f"network: {list(net.actors)}  buffers: "
           f"{net.buffer_bytes()/1e6:.2f} MB (paper Table 1: 3.46)")
-    run = compile_static(net, n // 4)
-    state = run(net.init_state())                    # warmup+compile
+    prog = net.compile(mode="static", n_iterations=n // 4)
+    prog.run()                                       # warmup+compile
     t0 = time.perf_counter()
-    state = run(net.init_state())
-    jax.block_until_ready(state["actors"]["sink"][0])
+    state = prog.run().state
+    jax.block_until_ready(state.actor("sink")[0])
     dt = time.perf_counter() - t0
-    motion = np.asarray(collect_sink(net, state, "sink"))
+    motion = np.asarray(prog.collect("sink", state))
     frac = (motion > 0).mean(axis=(1, 2))
     print(f"throughput: {n/dt:.0f} fps (compiled, rate 4)")
     print(f"motion fraction per frame (first 8): {np.round(frac[:8], 4)}")

@@ -1,8 +1,9 @@
 """Quickstart: the paper's MoC in ~60 lines.
 
-Builds a tiny dynamic-data-rate network — a control actor gates an
-amplifier actor (token rate 0 or r per firing) — compiles it into one XLA
-program, and shows the rate-0 firings genuinely skipping work.
+Builds a tiny dynamic-data-rate network with the declarative
+``NetworkBuilder`` — a control actor gates an amplifier actor (token rate
+0 or r per firing) — compiles it under an ``ExecutionPlan``, and shows
+the rate-0 firings genuinely skipping work.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,9 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Edge, FifoSpec, Network, collect_sink,
-                        compile_dynamic, dynamic_actor, map_fire,
-                        static_actor)
+from repro.core import (ExecutionPlan, NetworkBuilder, dynamic_actor,
+                        map_fire, static_actor)
 
 N_FIRINGS, RATE, TOK = 8, 2, (4,)
 
@@ -55,21 +55,25 @@ def main():
                       jnp.int32(0)),
         finish=lambda st: st[0])
 
-    net = Network(
-        [source, control, amp, sink],
-        [FifoSpec("f_c", 1, (1,), jnp.int32, is_control=True),
-         FifoSpec("f_in", RATE, TOK),        # Eq. 1: capacity 2r (double buffer)
-         FifoSpec("f_out", RATE, TOK)],
-        [Edge("f_c", "control", "out", "amp", "c"),
-         Edge("f_in", "source", "out", "amp", "in"),
-         Edge("f_out", "amp", "out", "sink", "in")])
+    # Declarative wiring: one connect() per channel; the control channel is
+    # inferred from amp's control port, Eq. 1 capacities are derived.
+    b = NetworkBuilder()
+    b.actors(source, control, amp, sink)
+    b.connect("control.out", "amp.c")                        # control (1,) i32
+    b.connect("source.out", "amp.in", rate=RATE, token_shape=TOK)
+    b.connect("amp.out", "sink.in", rate=RATE, token_shape=TOK)
+    net = b.build()
 
     print("channel capacities (Eq. 1):",
           {f.name: f.capacity_tokens for f in net.fifos.values()})
-    run = compile_dynamic(net)                     # one XLA program
-    state, counts = run(net.init_state())
-    out = np.asarray(collect_sink(net, state, "sink"))
-    print("firings:", {k: int(v) for k, v in counts.items()})
+    print("--- Graphviz (net.to_dot(), paste into any dot viewer) ---")
+    print(net.to_dot())
+
+    prog = net.compile(ExecutionPlan(mode="dynamic"))  # one XLA program
+    result = prog.run()
+    out = np.asarray(prog.collect("sink"))
+    print("firings:", {k: int(v) for k, v in result.fire_counts.items()},
+          f"in {int(result.sweeps)} sweeps")
     print("first enabled window (x10):", out[0:RATE, 0])
     assert np.allclose(out[0:RATE], 10.0 * np.arange(RATE * 4).reshape(RATE, 4))
     print("OK — dynamic data rates on the compiled path.")

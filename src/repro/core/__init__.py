@@ -1,12 +1,19 @@
 """repro.core — the paper's dynamic-data-rate dataflow MoC, in JAX.
 
 Public API surface (mirrors the paper's minimal C API of §3.1/§3.4: actor
-description, channel law, network composition, executors)."""
+description, channel law, network composition, one compile entrypoint).
+
+The construction surface is :class:`NetworkBuilder` (declare actors,
+connect ports, build); the execution surface is ``Network.compile(plan)``
+returning a :class:`Program`.  ``compile_static`` / ``compile_dynamic`` /
+``run_interpreted`` remain as deprecated shims."""
 from repro.core.actor import (ActorSpec, apply_rate_gate, dynamic_actor,
                               map_fire, static_actor)
 from repro.core.fifo import FifoSpec, FifoState, total_buffer_bytes
 from repro.core.network import (Edge, Network, NetworkState,
-                                iteration_token_flops, repetition_vector)
+                                iteration_token_flops, name_index_map,
+                                repetition_vector)
+from repro.core.builder import NetworkBuilder, derive_matched_rates
 from repro.core.executor import (
     RuntimeMode,
     assert_mode_allows,
@@ -17,6 +24,8 @@ from repro.core.executor import (
     make_iteration_step,
     run_interpreted,
 )
+from repro.core.program import (ExecutionPlan, Program, ProgramStats,
+                                RunResult)
 from repro.core.mapping import (
     Placement,
     boundary_fifos,
@@ -31,7 +40,10 @@ from repro.core.schedule import (cyclic_rate_table, layer_pattern_groups,
 __all__ = [
     "ActorSpec", "apply_rate_gate", "dynamic_actor", "map_fire", "static_actor",
     "FifoSpec", "FifoState", "total_buffer_bytes",
-    "Edge", "Network", "NetworkState", "iteration_token_flops", "repetition_vector",
+    "Edge", "Network", "NetworkState", "iteration_token_flops",
+    "name_index_map", "repetition_vector",
+    "NetworkBuilder", "derive_matched_rates",
+    "ExecutionPlan", "Program", "ProgramStats", "RunResult",
     "RuntimeMode", "assert_mode_allows", "collect_sink", "compile_dynamic",
     "compile_static", "fire_actor", "make_iteration_step", "run_interpreted",
     "Placement", "boundary_fifos", "heterogeneous_split", "partition_actors",

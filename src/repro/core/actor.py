@@ -51,10 +51,17 @@ class ActorSpec:
       placement:     optional device/mesh tag — the actor-to-core mapping of
                      paper §3.3. ``None`` = "free mapping" (let the compiler
                      place it).
-      ready:         optional ``state -> bool`` predicate consulted by the
-                     token-driven scheduler *in addition to* FIFO blocking
-                     (sources use it to signal input exhaustion — the
-                     analogue of the paper's ``finish`` driven teardown).
+      ready:         optional readiness predicate ``state -> jax.Array``
+                     (scalar bool), matching the annotation below.  The
+                     token-driven scheduler consumes it as a *traced*
+                     predicate: it is evaluated inside the compiled
+                     ``lax.while_loop`` sweep and combined with the FIFO
+                     blocking predicates via ``jnp.logical_and``, so it
+                     must be a pure JAX function returning a scalar boolean
+                     array — never a Python ``bool`` (a Python bool would
+                     bake one branch in at trace time).  Sources use it to
+                     signal input exhaustion — the analogue of the paper's
+                     ``finish``-driven teardown.
       cost_flops:    optional static per-firing FLOP estimate (roofline).
     """
 

@@ -3,7 +3,10 @@
 The paper runs every actor on its own OS thread and lets the OS schedule
 firings by data availability (blocking FIFOs).  Inside one XLA program
 there are no threads, so we provide three execution strategies whose
-*observable* FIFO semantics are identical:
+*observable* FIFO semantics are identical.  The public entrypoint is
+``Network.compile(ExecutionPlan(mode=...)) -> Program``
+(repro.core.program); the strategy names below survive as deprecated
+shims at the bottom of this module:
 
   1. ``compile_static``   — the whole network compiles to one jitted
      ``lax.scan``; one scan step = one *iteration* = one (predicated)
@@ -50,6 +53,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import functools
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -328,12 +332,12 @@ def _phase_aligned_fifos(network: Network,
     return out
 
 
-def compile_static(network: Network, n_iterations: int,
-                   mode: RuntimeMode = RuntimeMode.PROPOSED,
-                   order: Optional[List[str]] = None,
-                   donate: bool = False,
-                   specialize: bool = True,
-                   unroll_bound: int = 6) -> Callable[[State], NetworkState]:
+def _compile_static(network: Network, n_iterations: int,
+                    mode: RuntimeMode = RuntimeMode.PROPOSED,
+                    order: Optional[List[str]] = None,
+                    donate: bool = False,
+                    specialize: bool = True,
+                    unroll_bound: int = 6) -> Callable[[State], NetworkState]:
     """Compile ``n_iterations`` of the network into a single XLA program.
 
     ``specialize=True`` applies trace-time cursor specialization:
@@ -496,11 +500,11 @@ def _max_fireable(network: Network, name: str, state: NetworkState) -> jax.Array
     return k
 
 
-def compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
-                    mode: RuntimeMode = RuntimeMode.PROPOSED,
-                    multi_firing: bool = True,
-                    donate: bool = False,
-                    return_sweeps: bool = False) -> Callable[..., Tuple]:
+def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
+                     mode: RuntimeMode = RuntimeMode.PROPOSED,
+                     multi_firing: bool = True,
+                     donate: bool = False,
+                     return_sweeps: bool = False) -> Callable[..., Tuple]:
     """Token-driven executor: sweeps until quiescence (no actor can fire).
 
     Returns ``(final_state, fire_counts)`` where ``fire_counts[actor]`` is
@@ -570,9 +574,9 @@ def compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
 # --------------------------------------------------------------------------- #
 # 3. Interpreted executor (GPP-thread / DAL-multicore analogue).
 # --------------------------------------------------------------------------- #
-def run_interpreted(network: Network, state: State, n_iterations: int,
-                    order: Optional[List[str]] = None,
-                    donate: bool = False) -> NetworkState:
+def _run_interpreted(network: Network, state: State, n_iterations: int,
+                     order: Optional[List[str]] = None,
+                     donate: bool = False) -> NetworkState:
     """Eagerly fire the static schedule actor-by-actor (no cross-actor fusion).
 
     Each actor's firing is independently jitted — the analogue of the
@@ -605,3 +609,68 @@ def collect_sink(network: Network, state: State, actor: str) -> Any:
         state = network.state_from_dict(state)
     st = state.actors[network.actor_index[actor]]
     return a.finish(st) if a.finish is not None else st
+
+
+# --------------------------------------------------------------------------- #
+# Legacy entrypoints — thin deprecated shims over Network.compile / Program.
+#
+# Deprecation policy (EXPERIMENTS.md §API): the shims delegate to the exact
+# same runners Program uses, so results stay bit-identical for at least two
+# further PRs; new code should construct an ExecutionPlan instead, where
+# every executor policy (mode, specialization, multi-firing, donation,
+# heterogeneous placement) is a plan field.
+# --------------------------------------------------------------------------- #
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see ExecutionPlan in "
+        "repro.core.program)", DeprecationWarning, stacklevel=3)
+
+
+def compile_static(network: Network, n_iterations: int,
+                   mode: RuntimeMode = RuntimeMode.PROPOSED,
+                   order: Optional[List[str]] = None,
+                   donate: bool = False,
+                   specialize: bool = True,
+                   unroll_bound: int = 6) -> Callable[[State], NetworkState]:
+    """Deprecated: ``network.compile(mode="static", n_iterations=...)``."""
+    _warn_deprecated("compile_static(net, n, ...)",
+                     'net.compile(mode="static", n_iterations=n, ...).run')
+    prog = network.compile(
+        mode="static", n_iterations=n_iterations, runtime_mode=mode,
+        order=tuple(order) if order is not None else None, donate=donate,
+        specialize=specialize, unroll_bound=unroll_bound)
+    return lambda state=None: prog.run(state).state
+
+
+def compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
+                    mode: RuntimeMode = RuntimeMode.PROPOSED,
+                    multi_firing: bool = True,
+                    donate: bool = False,
+                    return_sweeps: bool = False) -> Callable[..., Tuple]:
+    """Deprecated: ``network.compile(mode="dynamic", ...)``."""
+    _warn_deprecated("compile_dynamic(net, ...)",
+                     'net.compile(mode="dynamic", ...).run')
+    prog = network.compile(
+        mode="dynamic", runtime_mode=mode, multi_firing=multi_firing,
+        donate=donate, max_sweeps=max_sweeps)
+
+    def run(state=None):
+        r = prog.run(state)
+        if return_sweeps:
+            return r.state, r.fire_counts, r.sweeps
+        return r.state, r.fire_counts
+
+    return run
+
+
+def run_interpreted(network: Network, state: State, n_iterations: int,
+                    order: Optional[List[str]] = None,
+                    donate: bool = False) -> NetworkState:
+    """Deprecated: ``network.compile(mode="interpreted", ...).run(state)``."""
+    _warn_deprecated("run_interpreted(net, state, n, ...)",
+                     'net.compile(mode="interpreted", n_iterations=n, ...)'
+                     ".run(state)")
+    prog = network.compile(
+        mode="interpreted", n_iterations=n_iterations,
+        order=tuple(order) if order is not None else None, donate=donate)
+    return prog.run(state).state

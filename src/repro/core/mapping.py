@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.actor import ActorSpec, static_actor
 from repro.core.fifo import FifoSpec
-from repro.core.network import Edge, Network, NetworkState
+from repro.core.network import Edge, Network, NetworkState, name_index_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +160,6 @@ def stage_feed(state: Any, feed_actor: str, data: jax.Array) -> Any:
         actors[feed_actor] = (jnp.asarray(data), cursor)
         st["actors"] = actors
         return st
-    idx = state.actor_names.index(feed_actor)
+    idx = name_index_map(state.actor_names)[feed_actor]
     _, cursor = state.actors[idx]
     return state.replace_actor(idx, (jnp.asarray(data), cursor))

@@ -13,13 +13,32 @@ The builder validates the MoC's structural rules at construction time:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Mapping, Optional, Tuple
+import functools
+import types
+from typing import TYPE_CHECKING, Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.actor import ActorSpec
 from repro.core.fifo import FifoSpec, FifoState, total_buffer_bytes
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (program -> network)
+    from repro.core.program import ExecutionPlan, Program
+
+
+@functools.lru_cache(maxsize=None)
+def name_index_map(names: Tuple[str, ...]) -> Mapping[str, int]:
+    """name -> position map for a static name tuple, computed once.
+
+    The accessor hot path used to be ``tuple.index`` — an O(n) scan per
+    lookup.  States sharing a name tuple (every state of one network) share
+    one cached map; the tuple lives in static pytree metadata, so it is
+    hashable and stable across jit retraces.  The cached map is returned
+    read-only: every caller shares one object, so a mutation would corrupt
+    lookups for all states of the network.
+    """
+    return types.MappingProxyType({n: i for i, n in enumerate(names)})
 
 
 @jax.tree_util.register_dataclass
@@ -53,10 +72,10 @@ class NetworkState:
         raise KeyError(key)
 
     def fifo(self, name: str) -> FifoState:
-        return self.fifos[self.fifo_names.index(name)]
+        return self.fifos[name_index_map(self.fifo_names)[name]]
 
     def actor(self, name: str) -> Any:
-        return self.actors[self.actor_names.index(name)]
+        return self.actors[name_index_map(self.actor_names)[name]]
 
     # -- functional update helpers -------------------------------------- #
     def replace_actor(self, index: int, value: Any) -> "NetworkState":
@@ -217,6 +236,79 @@ class Network:
     def buffer_bytes(self) -> int:
         """Total communication-buffer memory — paper Table 1 accounting."""
         return total_buffer_bytes(self.fifos.values())
+
+    # ------------------------------------------------------------------ #
+    # Compilation entrypoint (repro.core.program).                         #
+    # ------------------------------------------------------------------ #
+    def compile(self, plan: Optional["ExecutionPlan"] = None,
+                **overrides: Any) -> "Program":
+        """Compile this network under an :class:`ExecutionPlan`.
+
+        The single entrypoint subsuming the legacy ``compile_static`` /
+        ``compile_dynamic`` / ``run_interpreted`` trio: the execution
+        strategy (mode, specialization, multi-firing, donation,
+        heterogeneous placement) is data in the plan, not a choice of
+        function.  Keyword ``overrides`` are applied on top of ``plan``
+        (or of a default plan when none is given)::
+
+            prog = net.compile(mode="static", n_iterations=8)
+            result = prog.run()            # RunResult(state, ...)
+
+        Returns a :class:`repro.core.program.Program`.
+        """
+        from repro.core.program import ExecutionPlan, Program
+        if plan is None:
+            plan = ExecutionPlan(**overrides)
+        elif overrides:
+            plan = dataclasses.replace(plan, **overrides)
+        return Program(self, plan)
+
+    # ------------------------------------------------------------------ #
+    # Graphviz export (debugging builder-constructed graphs).              #
+    # ------------------------------------------------------------------ #
+    def to_dot(self) -> str:
+        """Render the network as a Graphviz ``digraph``.
+
+        Actors are nodes (dynamic actors double-bordered, sources/sinks
+        tinted); every channel is an edge labeled with its name, rate,
+        Eq. 1 capacity and delay; control channels are dashed.  Paste the
+        output into any dot viewer::
+
+            print(net.to_dot())        # | dot -Tsvg > net.svg
+        """
+        def q(s: str) -> str:
+            return '"' + s.replace('"', '\\"') + '"'
+
+        lines = [
+            "digraph network {",
+            "  rankdir=LR;",
+            '  node [shape=box, style=rounded, fontname="Helvetica"];',
+        ]
+        for name, a in self.actors.items():
+            attrs = []
+            if a.is_dynamic:
+                attrs.append("peripheries=2")
+                label = f"{name}\\n(dynamic, ctrl={a.control_port})"
+            else:
+                label = name
+            if a.is_source or a.is_sink:
+                attrs.append('style="rounded,filled"')
+                attrs.append('fillcolor="lightgrey"')
+            attrs.insert(0, f"label={q(label)}")
+            lines.append(f"  {q(name)} [{', '.join(attrs)}];")
+        for e in self.edges:
+            f = self.fifos[e.fifo]
+            label = (f"{f.name}\\n{e.src_port}->{e.dst_port} "
+                     f"r={f.rate} cap={f.capacity_tokens}")
+            if f.delay:
+                label += f" delay={f.delay}"
+            attrs = [f"label={q(label)}"]
+            if f.is_control:
+                attrs.append("style=dashed")
+            lines.append(f"  {q(e.src_actor)} -> {q(e.dst_actor)} "
+                         f"[{', '.join(attrs)}];")
+        lines.append("}")
+        return "\n".join(lines)
 
     # ------------------------------------------------------------------ #
     # State construction.                                                  #

@@ -1,0 +1,376 @@
+"""Program: the single compile/run/stream entrypoint — paper §3.4.
+
+The paper's runtime exposes one operation: *launch the network*.  Our
+reproduction had grown three parallel entrypoints (``compile_static``,
+``compile_dynamic``, ``run_interpreted``) plus a separate
+``heterogeneous_split`` + ``stage_feed`` code path for host/accelerator
+placement.  :class:`Program` folds them behind one object::
+
+    plan = ExecutionPlan(mode="static", n_iterations=8)
+    prog = net.compile(plan)           # Network.compile -> Program
+    result = prog.run()                # RunResult(state, counts, sweeps)
+
+Every execution policy is a field of :class:`ExecutionPlan` — the mode
+(static scan / token-driven dynamic / interpreted), trace-time
+specialization, multi-firing sweeps, buffer donation, and *heterogeneous
+placement*: ``accelerated=[...]`` splits the network at construction so
+boundary channels become feed/fetch actors, and :meth:`Program.stream`
+drives chunked host-feed/fetch through the compiled accelerator step (the
+paper's host<->device transfer loop).  Future policies (sharding across a
+mesh axis, async dispatch, alternate backends — ROADMAP) land as new plan
+fields, not new entrypoints.
+
+The legacy trio lives on in ``repro.core.executor`` as thin deprecated
+shims delegating here; results are bit-identical (pinned by
+``tests/test_program_api.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import (RuntimeMode, _compile_dynamic,
+                                 _compile_static, _run_interpreted,
+                                 collect_sink)
+from repro.core.mapping import heterogeneous_split
+from repro.core.network import (Network, NetworkState, iteration_token_flops)
+from repro.core.schedule import phase_unroll_period
+
+_MODES = ("static", "dynamic", "interpreted")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Declarative execution policy — every executor knob in one record.
+
+    Fields:
+      mode:          ``"static"`` (whole network -> one jitted scan),
+                     ``"dynamic"`` (token-driven ``while_loop`` scheduler,
+                     runs to quiescence), ``"interpreted"`` (eager
+                     per-actor firing, the GPP-thread analogue).
+      n_iterations:  iteration count for static/interpreted schedules (and
+                     the chunk length of :meth:`Program.stream`); dynamic
+                     mode runs to quiescence and ignores it unless
+                     ``accelerated`` needs it for feed slab sizing.
+      specialize:    static mode: trace-time cursor specialization +
+                     transient-channel register allocation.
+      multi_firing:  dynamic mode: fire each actor up to its occupancy
+                     bound per sweep.
+      donate:        donate the input state so XLA reuses its buffers.
+      runtime_mode:  ``RuntimeMode.PROPOSED`` (this paper) or
+                     ``STATIC_DAL`` (reference framework: SDF-only
+                     accelerator, dynamic actors rejected).
+      order:         optional static firing order (defaults topological).
+      max_sweeps:    dynamic mode sweep bound.
+      unroll_bound:  static mode phase-unroll period cap.
+      accelerated:   optional actor subset mapped to the accelerator: the
+                     network is split (``heterogeneous_split``) and the
+                     plan executes the accelerator subnetwork, with
+                     boundary channels exposed as feed/fetch actors and
+                     :meth:`Program.stream` as the host transfer loop.
+    """
+
+    mode: str = "static"
+    n_iterations: Optional[int] = None
+    specialize: bool = True
+    multi_firing: bool = True
+    donate: bool = False
+    runtime_mode: RuntimeMode = RuntimeMode.PROPOSED
+    order: Optional[Tuple[str, ...]] = None
+    max_sweeps: int = 1_000_000
+    unroll_bound: int = 6
+    accelerated: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self) -> None:
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"ExecutionPlan.mode must be one of {_MODES}, got "
+                f"{self.mode!r}")
+        if self.order is not None:
+            object.__setattr__(self, "order", tuple(self.order))
+        if self.accelerated is not None:
+            object.__setattr__(self, "accelerated", tuple(self.accelerated))
+        needs_iters = (self.mode in ("static", "interpreted")
+                       or self.accelerated is not None)
+        if needs_iters and self.n_iterations is None:
+            raise ValueError(
+                f"ExecutionPlan(mode={self.mode!r}"
+                + (", accelerated=[...]" if self.accelerated is not None else "")
+                + "): pass n_iterations= — static/interpreted schedules "
+                "compile a fixed iteration count, and heterogeneous plans "
+                "size their boundary feed/fetch slabs with it (dynamic "
+                "mode alone runs to quiescence without one)")
+        if self.n_iterations is not None and self.n_iterations < 0:
+            raise ValueError(
+                f"ExecutionPlan: n_iterations must be >= 0, got "
+                f"{self.n_iterations}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    """One execution's outcome.
+
+    ``state`` is the final :class:`NetworkState` (bit-identical to the
+    legacy entrypoints' output for the same plan).  ``fire_counts`` /
+    ``sweeps`` are populated by dynamic mode only.
+    """
+
+    state: NetworkState
+    fire_counts: Optional[Dict[str, jax.Array]] = None
+    sweeps: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramStats:
+    """Static + last-run telemetry for a compiled program.
+
+    ``actor_flops`` is the per-firing FLOP annotation (``cost_flops``);
+    ``actor_window_bytes`` the bytes moved through that actor's ports per
+    firing (Eq. 1 windows); ``actor_intensity`` their ratio — the
+    operational-intensity coordinate of a roofline plot.
+    """
+
+    mode: str
+    n_actors: int
+    n_fifos: int
+    buffer_bytes: int
+    register_fifos: Tuple[str, ...]
+    iteration_flops: int
+    actor_flops: Dict[str, int]
+    actor_window_bytes: Dict[str, int]
+    actor_intensity: Dict[str, float]
+    last_sweeps: Optional[int] = None
+    last_fire_counts: Optional[Dict[str, int]] = None
+
+
+class Program:
+    """A network compiled under a plan; run with :meth:`run` or
+    :meth:`stream`.  Built via :meth:`repro.core.network.Network.compile`.
+    """
+
+    def __init__(self, network: Network, plan: ExecutionPlan):
+        self.plan = plan
+        self.source_network = network
+        self._last: Optional[RunResult] = None
+        self._last_is_stream_chunk = False
+        self._feed_by_fifo: Dict[str, str] = {}
+        self._fetch_by_fifo: Dict[str, str] = {}
+        if plan.accelerated is not None:
+            unknown = set(plan.accelerated) - set(network.actors)
+            if unknown:
+                raise ValueError(
+                    f"ExecutionPlan.accelerated names unknown actors "
+                    f"{sorted(unknown)}; known: {sorted(network.actors)}")
+            sub, feeds, fetches = heterogeneous_split(
+                network, list(plan.accelerated), plan.n_iterations)
+            self.network = sub
+            self._feed_by_fifo = {f[len("__feed_"):]: f for f in feeds}
+            self._fetch_by_fifo = {f[len("__fetch_"):]: f for f in fetches}
+        else:
+            self.network = network
+        order = list(plan.order) if plan.order is not None else None
+        if plan.mode == "static":
+            self._runner = _compile_static(
+                self.network, plan.n_iterations, mode=plan.runtime_mode,
+                order=order, donate=plan.donate, specialize=plan.specialize,
+                unroll_bound=plan.unroll_bound)
+        elif plan.mode == "dynamic":
+            self._runner = _compile_dynamic(
+                self.network, plan.max_sweeps, mode=plan.runtime_mode,
+                multi_firing=plan.multi_firing, donate=plan.donate,
+                return_sweeps=True)
+        else:
+            self._runner = functools.partial(
+                _run_interpreted, self.network,
+                n_iterations=plan.n_iterations, order=order,
+                donate=plan.donate)
+
+    # ------------------------------------------------------------------ #
+    def init_state(self) -> NetworkState:
+        """Fresh state of the executed network (the accelerator subnetwork
+        under a heterogeneous plan)."""
+        return self.network.init_state()
+
+    def run(self, state: Optional[Any] = None) -> RunResult:
+        """Execute once from ``state`` (fresh :meth:`init_state` if None).
+
+        Legacy ``{"fifos": ..., "actors": ...}`` dict states are accepted.
+        With ``plan.donate`` the input state's buffers are consumed.
+        """
+        st = self.init_state() if state is None else state
+        if state is None and self.plan.donate:
+            # init_state() may alias arrays staged in the graph closure
+            # (e.g. a source's signal slab); donating those would poison
+            # every later init_state() of the network.  When run() creates
+            # the state itself, donate a private copy instead.
+            st = jax.tree.map(jnp.copy, st)
+        if self.plan.mode == "dynamic":
+            final, counts, sweeps = self._runner(st)
+            result = RunResult(final, fire_counts=counts, sweeps=sweeps)
+        else:  # static and interpreted runners both return the bare state
+            result = RunResult(self._runner(st))
+        self._last = result
+        self._last_is_stream_chunk = False
+        return result
+
+    def collect(self, actor: str, state: Optional[NetworkState] = None) -> Any:
+        """Run ``actor``'s ``finish`` hook on its state (paper §3.1);
+        defaults to the last :meth:`run`'s final state."""
+        if state is None:
+            if self._last is None:
+                raise ValueError("Program.collect: no run yet; pass a state "
+                                 "or call run() first")
+            if self._last_is_stream_chunk:
+                raise ValueError(
+                    "Program.collect: the last execution was stream(), whose "
+                    "implicit final state covers only the LAST chunk; use "
+                    "the dict stream() returned for the full output, or "
+                    "pass a state explicitly")
+            state = self._last.state
+        return collect_sink(self.network, state, actor)
+
+    # ------------------------------------------------------------------ #
+    # Chunked host-feed / fetch loop (heterogeneous plans).                #
+    # ------------------------------------------------------------------ #
+    def _set_actor(self, state: NetworkState, actor: str, value: Any) -> NetworkState:
+        return state.replace_actor(self.network.actor_index[actor], value)
+
+    def stream(self, feeds: Mapping[str, Any]) -> Dict[str, jax.Array]:
+        """Stream host data through the accelerated subnetwork in chunks.
+
+        ``feeds`` maps each *inbound boundary channel* name to its full
+        token stream — ``(total_windows, r, *token_shape)``, or the
+        flattened ``(total_windows * r, *token_shape)``.  The stream is
+        cut into chunks of ``plan.n_iterations`` windows; each chunk is
+        staged into the feed actors, executed under the plan, and the
+        fetch actors' slabs collected.  Actor and internal-FIFO state
+        (e.g. filter histories, delay tokens) carries across chunks —
+        streaming N chunks equals one long run over the concatenation.
+
+        Returns ``{outbound_channel: (total_windows, r, *token_shape)}``.
+        """
+        if self.plan.accelerated is None:
+            raise ValueError(
+                "Program.stream: this plan has no heterogeneous placement; "
+                "pass ExecutionPlan(accelerated=[...], n_iterations=chunk) "
+                "so boundary channels become host feed/fetch actors")
+        chunk = self.plan.n_iterations
+        if self.plan.mode == "static" and self.plan.specialize:
+            # The specialized static executor requires phase-aligned input
+            # cursors; chunk 2+ resumes from chunk 1's final state, so the
+            # chunk size must cover whole phase-unroll periods.  Check here,
+            # before any chunk runs, instead of failing mid-stream with a
+            # resumption error that blames the state rather than the plan.
+            period = phase_unroll_period(
+                [spec.n_write_phases
+                 for name, spec in self.network.fifos.items()
+                 if name not in self.network.register_fifos],
+                bound=self.plan.unroll_bound)
+            if chunk % period:
+                raise ValueError(
+                    f"Program.stream: n_iterations={chunk} is not a "
+                    f"multiple of the phase-unroll period {period} of the "
+                    "accelerated subnetwork, so chunks after the first "
+                    "would resume from non-phase-aligned cursors; use a "
+                    "multiple (delay channels cycle 3, double buffers 2) "
+                    "or plan specialize=False")
+        unknown = set(feeds) - set(self._feed_by_fifo)
+        if unknown:
+            raise ValueError(
+                f"Program.stream: unknown feed channels {sorted(unknown)}; "
+                f"inbound boundary channels: {sorted(self._feed_by_fifo)}")
+        missing = set(self._feed_by_fifo) - set(feeds)
+        if missing:
+            raise ValueError(
+                f"Program.stream: missing feeds for inbound boundary "
+                f"channels {sorted(missing)}")
+        arrays: Dict[str, jax.Array] = {}
+        total = None
+        for fifo, arr in feeds.items():
+            spec = self.source_network.fifos[fifo]
+            arr = jnp.asarray(arr, spec.dtype)
+            window = (spec.rate,) + tuple(spec.token_shape)
+            if arr.shape[1:] != window:
+                if arr.shape[0] % spec.rate == 0 \
+                        and arr.shape[1:] == tuple(spec.token_shape):
+                    arr = arr.reshape((-1,) + window)
+                else:
+                    raise ValueError(
+                        f"Program.stream: feed {fifo!r} has shape "
+                        f"{arr.shape}; expected (n, {spec.rate}, "
+                        f"*{tuple(spec.token_shape)}) windows or the "
+                        "flattened token stream")
+            if total is None:
+                total = arr.shape[0]
+            elif arr.shape[0] != total:
+                raise ValueError(
+                    f"Program.stream: feed {fifo!r} carries {arr.shape[0]} "
+                    f"windows but other feeds carry {total}; all feeds "
+                    "must cover the same number of iterations")
+            arrays[fifo] = arr
+        if total is None:
+            raise ValueError("Program.stream: no feeds given")
+        if total % chunk:
+            raise ValueError(
+                f"Program.stream: {total} windows do not divide into "
+                f"chunks of n_iterations={chunk}; pad the stream or pick "
+                "a dividing chunk size")
+        state = self.init_state()
+        outs: Dict[str, list] = {f: [] for f in self._fetch_by_fifo}
+        for c in range(total // chunk):
+            for fifo, arr in arrays.items():
+                state = self._set_actor(state, self._feed_by_fifo[fifo],
+                                        (arr[c * chunk:(c + 1) * chunk],
+                                         jnp.int32(0)))
+            for fifo, fetch in self._fetch_by_fifo.items():
+                slab, _ = state.actor(fetch)
+                state = self._set_actor(state, fetch,
+                                        (jnp.zeros_like(slab), jnp.int32(0)))
+            state = self.run(state).state
+            # Guard collect() immediately (not after the loop): the implicit
+            # last state holds only this chunk's fetch slabs, not the whole
+            # stream — and must stay guarded if a later chunk raises.
+            self._last_is_stream_chunk = True
+            for fifo, fetch in self._fetch_by_fifo.items():
+                outs[fifo].append(state.actor(fetch)[0])
+        return {f: jnp.concatenate(ws, axis=0) for f, ws in outs.items()}
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> ProgramStats:
+        """Sweep counts, buffer bytes and the per-actor FLOP roofline."""
+        net = self.network
+        flops: Dict[str, int] = {}
+        byts: Dict[str, int] = {}
+        for name, a in net.actors.items():
+            flops[name] = int(a.cost_flops)
+            moved = sum(spec.rate * spec.token_size_bytes
+                        for _, spec, _ in net.in_port_specs[name])
+            moved += sum(spec.rate * spec.token_size_bytes
+                         for _, spec, _ in net.out_port_specs[name])
+            ctl = net.control_specs[name]
+            if ctl is not None:
+                moved += ctl[0].token_size_bytes
+            byts[name] = int(moved)
+        intensity = {n: (flops[n] / byts[n] if byts[n] else 0.0)
+                     for n in net.actors}
+        last = self._last
+        return ProgramStats(
+            mode=self.plan.mode,
+            n_actors=len(net.actors),
+            n_fifos=len(net.fifos),
+            buffer_bytes=net.buffer_bytes(),
+            register_fifos=tuple(sorted(net.register_fifos)),
+            iteration_flops=iteration_token_flops(net),
+            actor_flops=flops,
+            actor_window_bytes=byts,
+            actor_intensity=intensity,
+            last_sweeps=(int(last.sweeps) if last is not None
+                         and last.sweeps is not None else None),
+            last_fire_counts=({k: int(v) for k, v in last.fire_counts.items()}
+                              if last is not None
+                              and last.fire_counts is not None else None),
+        )

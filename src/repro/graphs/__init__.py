@@ -1,6 +1,20 @@
-"""Paper application graphs (§4): video Motion Detection and Dynamic
-Predistortion, expressed as repro.core actor networks."""
+"""Paper application graphs (§4) plus the LM-substrate bridges, all
+constructed through the declarative ``repro.core.NetworkBuilder`` and
+executed through ``Network.compile(ExecutionPlan) -> Program``."""
 from repro.graphs.motion_detection import build_motion_detection
 from repro.graphs.dpd import build_dpd
 
-__all__ = ["build_motion_detection", "build_dpd"]
+__all__ = ["build_motion_detection", "build_dpd", "build_moe_network",
+           "build_lm_stage_network", "lm_stage_network_forward"]
+
+
+def __getattr__(name):
+    # moe_as_actors / lm_pipeline pull in the model stack; import lazily so
+    # the light paper graphs stay importable without it.
+    if name == "build_moe_network":
+        from repro.graphs.moe_as_actors import build_moe_network
+        return build_moe_network
+    if name in ("build_lm_stage_network", "lm_stage_network_forward"):
+        from repro.graphs import lm_pipeline
+        return getattr(lm_pipeline, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Edge, FifoSpec, Network, dynamic_actor, static_actor
+from repro.core import Network, NetworkBuilder, dynamic_actor, static_actor
 from repro.core.actor import apply_rate_gate
 from repro.kernels.dyn_fir import N_BRANCHES, N_TAPS, branch_ref
 from repro.kernels.dyn_fir.ops import dpd_branch
@@ -38,6 +38,18 @@ from repro.kernels.dyn_fir.ops import dpd_branch
 BLOCK_L = 32768                 # complex samples per token (256 KB)
 RECONF_PERIOD_SAMPLES = 65536   # paper §4.2
 RECONF_PERIOD_FIRINGS = RECONF_PERIOD_SAMPLES // BLOCK_L
+
+
+def _branch_on(k: int, tok: jax.Array) -> jax.Array:
+    """0/1 enable of branch ``k`` given the configuration token.
+
+    One shared predicate for every port the configuration value drives
+    (fork.b_k, poly_k.in/out, adder.y_k): identical control *expressions*
+    fed by provably-equal control tokens are what lets
+    ``NetworkBuilder.build`` derive ``matched_rates`` — and thus transient-
+    channel register allocation — instead of taking it on declaration.
+    """
+    return (jnp.int32(k) < tok[0]).astype(jnp.int32)
 
 
 def default_active_schedule(n_firings: int, seed: int = 0,
@@ -118,10 +130,9 @@ def build_dpd(n_firings: int,
     fork_outs = tuple(f"b{k}" for k in range(n_branches))
 
     def fork_control(tok):
-        n = tok[0]
         d = {"in": jnp.int32(1)}
         for k in range(n_branches):
-            d[f"b{k}"] = (k < n).astype(jnp.int32)
+            d[f"b{k}"] = _branch_on(k, tok)
         return d
 
     def fork_fire(state, inputs, rates):
@@ -156,7 +167,7 @@ def build_dpd(n_firings: int,
             return (new_hist, taps), {"out": jnp.stack([yr, yi])[None]}
 
         def control(tok):
-            on = (jnp.int32(k) < tok[0]).astype(jnp.int32)
+            on = _branch_on(k, tok)
             return {"in": on, "out": on}
 
         flops = 2 * L * (4 * N_TAPS + 2 * order)  # complex MACs + basis
@@ -184,10 +195,9 @@ def build_dpd(n_firings: int,
         return state, {"out": acc}
 
     def adder_control(tok):
-        n = tok[0]
         d = {"out": jnp.int32(1)}
         for k in range(n_branches):
-            d[f"y{k}"] = (k < n).astype(jnp.int32)
+            d[f"y{k}"] = _branch_on(k, tok)
         return d
 
     if static_all_active:
@@ -197,35 +207,34 @@ def build_dpd(n_firings: int,
                               adder_fire)
 
     # ---------------------------------------------------------------- #
-    # Channels (Eq. 1 capacities) and wiring.
+    # Wiring (declarative; Eq. 1 capacities derived per channel).
     # ---------------------------------------------------------------- #
     # In the dynamic build, every data channel's two ports are driven by
-    # the same configuration value (fork.b_k, poly_k and adder.y_k all test
-    # k < n_active; f_in and f_out are unconditionally enabled), so they
-    # are matched-rate transient channels: the specialized static executor
-    # register-allocates them instead of paying the masked ring writes'
-    # read-modify-write on 256 KB windows.  The static rewrite has
-    # unconditional ports, where the buffered static-offset path is already
-    # optimal (the contiguous ring write doubles as the materialization
-    # point between actor bodies), so the flag is only set when dynamic.
-    matched = not static_all_active
-    fifos = [FifoSpec("f_in", 1, tok, matched_rates=matched),
-             FifoSpec("f_out", 1, tok, matched_rates=matched)]
-    edges = [Edge("f_in", "source", "out", "fork", "in"),
-             Edge("f_out", "adder", "out", "sink", "in")]
-    for k in range(n_branches):
-        fifos += [FifoSpec(f"f_b{k}", 1, tok, matched_rates=matched),
-                  FifoSpec(f"f_y{k}", 1, tok, matched_rates=matched)]
-        edges += [Edge(f"f_b{k}", "fork", f"b{k}", f"poly{k}", "in"),
-                  Edge(f"f_y{k}", f"poly{k}", "out", "adder", f"y{k}")]
-    actors = [source, fork, *polys, adder, sink]
+    # the same configuration value (fork.b_k, poly_k and adder.y_k all
+    # evaluate `_branch_on(k, tok)`; f_in and f_out are unconditionally
+    # enabled), so builder derivation proves them matched-rate transient
+    # channels: the specialized static executor register-allocates them
+    # instead of paying the masked ring writes' read-modify-write on
+    # 256 KB windows.  The static rewrite has static actors at both ends,
+    # where the buffered static-offset path is already optimal (the
+    # contiguous ring write doubles as the materialization point between
+    # actor bodies) — derivation never marks static-static channels.
+    b = NetworkBuilder()
     if not static_all_active:
-        for p, dst, port in ([("c_fork", "fork", "c"), ("c_add", "adder", "c")] +
-                             [(f"c{k}", f"poly{k}", "c") for k in range(n_branches)]):
-            fifos.append(FifoSpec(f"f_{p}", 1, (1,), jnp.int32, is_control=True))
-            edges.append(Edge(f"f_{p}", "config", p, dst, port))
-        actors.insert(0, config)
-    return Network(actors, fifos, edges)
+        b.actor(config)
+    b.actors(source, fork, *polys, adder, sink)
+    b.connect("source.out", "fork.in", token_shape=tok, name="f_in")
+    b.connect("adder.out", "sink.in", token_shape=tok, name="f_out")
+    for k in range(n_branches):
+        b.connect(f"fork.b{k}", f"poly{k}.in", token_shape=tok, name=f"f_b{k}")
+        b.connect(f"poly{k}.out", f"adder.y{k}", token_shape=tok,
+                  name=f"f_y{k}")
+    if not static_all_active:
+        b.connect("config.c_fork", "fork.c", name="f_c_fork")
+        b.connect("config.c_add", "adder.c", name="f_c_add")
+        for k in range(n_branches):
+            b.connect(f"config.c{k}", f"poly{k}.c", name=f"f_c{k}")
+    return b.build()
 
 
 def bench_workload(n_firings: int, block_l: int = BLOCK_L, seed: int = 1,

@@ -10,12 +10,13 @@ building block for PP × DP × TP meshes at >2 pods.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import Network, NetworkBuilder, static_actor
 from repro.core.pipeline import pipeline_reference, pipeline_spmd
 from repro.models import lm as lm_mod
 from repro.models.lm import _block_apply, layer_plan
@@ -71,6 +72,106 @@ def pipeline_forward(params: PyTree, cfg: ArchConfig, tokens: jax.Array,
         x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(DTYPE)
     stage_params = stack_stage_params(params, cfg, n_stages)
     y = pipeline_spmd(make_stage_fn(cfg), stage_params, x, mesh, axis=axis)
+    y = rmsnorm(params["final_norm"], y, cfg.rms_eps)
+    head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    return lm_mod._unembed_masked(y, head, cfg)
+
+
+def build_lm_stage_network(params: PyTree, cfg: ArchConfig,
+                           tokens: jax.Array, n_stages: int) -> Network:
+    """The pipeline expressed literally as a paper-MoC actor network.
+
+    One *stage* of LM blocks = one static actor; microbatch activations
+    flow source -> stage_0 -> ... -> stage_{n-1} -> sink over rate-1
+    channels whose tokens are whole ``(S, D)`` activation windows (the
+    FIFO double buffer is Eq. 1's 2r capacity — exactly the send/recv
+    pair ``pipeline_spmd`` realizes as a ``ppermute``).  ``tokens`` is
+    ``(n_micro, S)``: one sequence per microbatch; embedding runs at
+    build time (the host-side source), unembedding in the caller (see
+    :func:`lm_stage_network_forward`).
+
+    Unlike ``pipeline_spmd`` this network runs under any
+    :class:`ExecutionPlan` — including ``accelerated=[stages...]`` with
+    chunked :meth:`Program.stream` feeds — making the LM pipeline the
+    fourth paper graph on the unified construction/execution surface.
+    """
+    from repro.models.layers import embed_lookup, DTYPE
+    x = embed_lookup(params["embed"]["w"], tokens).astype(DTYPE)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(DTYPE)
+    stage_params = stack_stage_params(params, cfg, n_stages)
+    stage_fn = make_stage_fn(cfg)
+    n_micro, S, D = x.shape
+
+    def src_fire(state, inputs, rates):
+        data, idx = state
+        win = jax.lax.dynamic_index_in_dim(data, idx, axis=0, keepdims=False)
+        return (data, idx + 1), {"out": win[None]}
+
+    source = static_actor("source", (), ("out",), src_fire,
+                          init=lambda: (x, jnp.int32(0)),
+                          ready=lambda st: st[1] < n_micro)
+
+    def sink_fire(state, inputs, rates):
+        data, idx = state
+        data = jax.lax.dynamic_update_index_in_dim(data, inputs["in"][0],
+                                                   idx, axis=0)
+        return (data, idx + 1), {}
+
+    sink = static_actor("sink", ("in",), (), sink_fire,
+                        init=lambda: (jnp.zeros((n_micro, S, D), x.dtype),
+                                      jnp.int32(0)),
+                        finish=lambda st: st[0])
+
+    b = NetworkBuilder()
+    b.actor(source)
+    prev = "source.out"
+    for s in range(n_stages):
+        p_s = jax.tree.map(lambda l: l[s], stage_params)
+        n_params = sum(int(l.size) for l in jax.tree.leaves(p_s))
+
+        def fire(state, inputs, rates, p_s=p_s):
+            return state, {"out": stage_fn(p_s, inputs["in"][0])[None]}
+
+        b.actor(static_actor(f"stage{s}", ("in",), ("out",), fire,
+                             cost_flops=2 * S * n_params))
+        b.connect(prev, f"stage{s}.in", token_shape=(S, D), dtype=x.dtype,
+                  name=f"f_s{s}")
+        prev = f"stage{s}.out"
+    b.actor(sink)
+    b.connect(prev, "sink.in", token_shape=(S, D), dtype=x.dtype,
+              name="f_out")
+    return b.build()
+
+
+def lm_stage_network_forward(params: PyTree, cfg: ArchConfig,
+                             tokens: jax.Array, n_stages: int,
+                             plan: Optional[Any] = None) -> jax.Array:
+    """Forward pass through the stage actor network -> logits.
+
+    Equivalent to :func:`pipeline_forward_reference` (tested in
+    tests/test_graphs_paper.py) but executed by the dataflow runtime:
+    builds the network, compiles it under ``plan`` (default: static
+    schedule over the microbatches), collects the sink, applies final
+    norm + unembedding.
+    """
+    from repro.models.layers import rmsnorm
+    net = build_lm_stage_network(params, cfg, tokens, n_stages)
+    n_micro = int(tokens.shape[0])
+    if plan is None:
+        prog = net.compile(mode="static", n_iterations=n_micro)
+    else:
+        if plan.accelerated is not None:
+            # A heterogeneous plan replaces the staged source with a
+            # zero-filled feed actor; run() would silently produce logits
+            # of zero activations.  Streaming callers drive the network
+            # through build_lm_stage_network + Program.stream directly.
+            raise ValueError(
+                "lm_stage_network_forward: plans with accelerated=[...] "
+                "need explicit feeds; use build_lm_stage_network(...)"
+                ".compile(plan).stream(...) instead")
+        prog = net.compile(plan, n_iterations=n_micro)
+    y = prog.collect("sink", prog.run().state)
     y = rmsnorm(params["final_norm"], y, cfg.rms_eps)
     head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
     return lm_mod._unembed_masked(y, head, cfg)

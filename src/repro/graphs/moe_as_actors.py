@@ -29,7 +29,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import Edge, FifoSpec, Network, dynamic_actor, static_actor
+from repro.core import Network, NetworkBuilder, dynamic_actor, static_actor
 from repro.core.actor import apply_rate_gate
 from repro.models.layers import F32
 from repro.models.moe import capacity_for
@@ -79,14 +79,19 @@ def build_moe_network(params: Dict[str, jax.Array], n_tokens: int, d_model: int,
         w = (gate_w * keep.astype(F32))
         return slabs, counts, slot, w
 
-    rt_outs = tuple(f"x{e}" for e in range(E)) + tuple(f"c{e}" for e in range(E)) \
-        + ("slot", "w")
+    # Router out ports: per-expert slabs + control counts (one copy for the
+    # expert, one for the packer feeding combine), routing metadata.
+    rt_outs = (tuple(f"x{e}" for e in range(E))
+               + tuple(f"c{e}" for e in range(E))
+               + ("slot", "w")
+               + tuple(f"c{e}_p" for e in range(E)))
 
     def router_fire(state, inputs, rates):
         xt = inputs["in"][0]
         slabs, counts, slot, w = route(xt)
         outs = {f"x{e}": slabs[e][None] for e in range(E)}
         outs.update({f"c{e}": counts[e].reshape(1, 1) for e in range(E)})
+        outs.update({f"c{e}_p": counts[e].reshape(1, 1) for e in range(E)})
         outs["slot"] = slot[None].astype(jnp.int32)
         outs["w"] = w[None]
         return state, outs
@@ -143,14 +148,11 @@ def build_moe_network(params: Dict[str, jax.Array], n_tokens: int, d_model: int,
     combine = dynamic_actor("combine", "cc", comb_control, comb_ins, ("out",),
                             comb_fire)
 
-    def ctl_fire(state, inputs, rates):
-        # pack all counts into one control token for the combine actor
-        return state, {"out": inputs["in"]}
-
-    # router emits per-expert counts; we need a packed (E,) control token
-    # for combine — add a small static packer actor.
+    # router emits per-expert counts; combine wants one packed control
+    # token — a small static packer actor concatenates them (padded to the
+    # (2E,) control-token shape).
     def pack_fire(state, inputs, rates):
-        vec = jnp.concatenate([inputs[f"c{e}"][0] for e in range(E)])
+        vec = jnp.concatenate([inputs[f"c{e}"][0] for e in range(E)] * 2)[:2 * E]
         return state, {"out": vec[None]}
 
     packer = static_actor("packer", tuple(f"c{e}" for e in range(E)), ("out",),
@@ -169,50 +171,30 @@ def build_moe_network(params: Dict[str, jax.Array], n_tokens: int, d_model: int,
         finish=lambda st: st[0])
 
     # ------------------------------------------------------------------ #
+    # Wiring.  Note the expert data channels are *not* matched-rate
+    # transient (the builder derivation correctly leaves them buffered):
+    # the router always writes x_e while an idle expert skips reading, so
+    # occupancies drift and the channels must stay ring-buffered under the
+    # specialized static executor; combine's y_e enables are keyed on the
+    # packer's control stream, not the experts' — structurally unprovable.
     D = d_model
-    fifos = [FifoSpec("f_in", 1, (N, D)), FifoSpec("f_out", 1, (N, D)),
-             FifoSpec("f_slot", 1, (N, top_k), jnp.int32),
-             FifoSpec("f_w", 1, (N, top_k), jnp.float32),
-             FifoSpec("f_cpack", 1, (2 * E,), jnp.int32, is_control=True)]
-    edges = [Edge("f_in", "source", "out", "router", "in"),
-             Edge("f_slot", "router", "slot", "combine", "slot"),
-             Edge("f_w", "router", "w", "combine", "w"),
-             Edge("f_cpack", "packer", "out", "combine", "cc"),
-             Edge("f_out", "combine", "out", "sink", "in")]
-    # control fifo token must be rate-1 of shape (E,)... packed as (2E,) to
-    # satisfy is_control token-shape freedom; combine reads tok[e].
-    fifos[-1] = FifoSpec("f_cpack", 1, (2 * E,), jnp.int32, is_control=True)
+    b = NetworkBuilder()
+    b.actors(source, router, packer, *experts, combine, sink)
+    b.connect("source.out", "router.in", token_shape=(N, D), name="f_in")
+    b.connect("combine.out", "sink.in", token_shape=(N, D), name="f_out")
+    b.connect("router.slot", "combine.slot", token_shape=(N, top_k),
+              dtype=jnp.int32, name="f_slot")
+    b.connect("router.w", "combine.w", token_shape=(N, top_k),
+              dtype=jnp.float32, name="f_w")
+    # combine's control token packs all counts; shape (2E,) rather than
+    # (E,) exercises is_control token-shape freedom (combine reads tok[e]).
+    b.connect("packer.out", "combine.cc", token_shape=(2 * E,), name="f_cpack")
     for e in range(E):
-        fifos += [FifoSpec(f"f_x{e}", 1, (C, D)),
-                  FifoSpec(f"f_y{e}", 1, (C, D)),
-                  FifoSpec(f"f_ce{e}", 1, (1,), jnp.int32, is_control=True),
-                  FifoSpec(f"f_cp{e}", 1, (1,), jnp.int32)]
-        edges += [Edge(f"f_x{e}", "router", f"x{e}", f"expert{e}", "in"),
-                  Edge(f"f_y{e}", f"expert{e}", "out", "combine", f"y{e}"),
-                  Edge(f"f_ce{e}", "router", f"c{e}", f"expert{e}", "c"),
-                  Edge(f"f_cp{e}", "router", f"c{e}_p", "packer", f"c{e}")]
-
-    # router needs separate out ports for packer copies of counts
-    rt_outs2 = rt_outs + tuple(f"c{e}_p" for e in range(E))
-
-    def router_fire2(state, inputs, rates):
-        xt = inputs["in"][0]
-        slabs, counts, slot, w = route(xt)
-        outs = {f"x{e}": slabs[e][None] for e in range(E)}
-        outs.update({f"c{e}": counts[e].reshape(1, 1) for e in range(E)})
-        outs.update({f"c{e}_p": counts[e].reshape(1, 1) for e in range(E)})
-        outs["slot"] = slot[None].astype(jnp.int32)
-        outs["w"] = w[None]
-        return state, outs
-
-    router = static_actor("router", ("in",), rt_outs2, router_fire2)
-
-    def pack_fire2(state, inputs, rates):
-        vec = jnp.concatenate([inputs[f"c{e}"][0] for e in range(E)] * 2)[:2 * E]
-        return state, {"out": vec[None]}
-
-    packer = static_actor("packer", tuple(f"c{e}" for e in range(E)), ("out",),
-                          pack_fire2)
-
-    return Network([source, router, packer, *experts, combine, sink],
-                   fifos, edges)
+        b.connect(f"router.x{e}", f"expert{e}.in", token_shape=(C, D),
+                  name=f"f_x{e}")
+        b.connect(f"expert{e}.out", f"combine.y{e}", token_shape=(C, D),
+                  name=f"f_y{e}")
+        b.connect(f"router.c{e}", f"expert{e}.c", name=f"f_ce{e}")
+        b.connect(f"router.c{e}_p", f"packer.c{e}", token_shape=(1,),
+                  dtype=jnp.int32, name=f"f_cp{e}")
+    return b.build()

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Edge, FifoSpec, Network, static_actor
+from repro.core import Network, NetworkBuilder, static_actor
 from repro.kernels.gauss5x5 import gauss5x5
 from repro.kernels.motion_post import DEFAULT_THRESHOLD, med_ref, thres_ref
 
@@ -99,21 +99,21 @@ def build_motion_detection(n_frames: int, rate: int = 1,
                         finish=lambda st: st[0])
 
     u8 = jnp.uint8
-    fifos = [
-        FifoSpec("f_src_gauss", rate, tok, u8),
-        FifoSpec("f_gauss_thres", rate, tok, u8),
-        FifoSpec("f_gauss_thres_d", rate, tok, u8, delay=1),  # the dotted channel
-        FifoSpec("f_thres_med", rate, tok, u8),
-        FifoSpec("f_med_sink", rate, tok, u8),
-    ]
-    edges = [
-        Edge("f_src_gauss", "source", "out", "gauss", "in"),
-        Edge("f_gauss_thres", "gauss", "out", "thres", "cur"),
-        Edge("f_gauss_thres_d", "gauss", "out_d", "thres", "prev"),
-        Edge("f_thres_med", "thres", "out", "med", "in"),
-        Edge("f_med_sink", "med", "out", "sink", "in"),
-    ]
-    return Network([source, gauss, thres, med, sink], fifos, edges)
+    b = NetworkBuilder()
+    b.actors(source, gauss, thres, med, sink)
+    b.connect("source.out", "gauss.in", rate=rate, token_shape=tok, dtype=u8,
+              name="f_src_gauss")
+    b.connect("gauss.out", "thres.cur", rate=rate, token_shape=tok, dtype=u8,
+              name="f_gauss_thres")
+    # The dotted Fig. 4 channel: one initial (delay) token -> Eq. 1 triple
+    # buffer, enabling consecutive-frame subtraction.
+    b.connect("gauss.out_d", "thres.prev", rate=rate, token_shape=tok,
+              dtype=u8, delay=1, name="f_gauss_thres_d")
+    b.connect("thres.out", "med.in", rate=rate, token_shape=tok, dtype=u8,
+              name="f_thres_med")
+    b.connect("med.out", "sink.in", rate=rate, token_shape=tok, dtype=u8,
+              name="f_med_sink")
+    return b.build()
 
 
 def bench_workload(n_frames: int, rate: int = 4,

@@ -1,0 +1,238 @@
+"""NetworkBuilder: validation errors, matched-rates derivation, to_dot."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Edge, FifoSpec, Network, NetworkBuilder,
+                        dynamic_actor, map_fire, static_actor)
+
+
+def _source(name="src", ports=("out",)):
+    def fire(state, inputs, rates):
+        return state, {p: jnp.zeros((1, 1)) for p in ports}
+    return static_actor(name, (), ports, fire)
+
+
+def _sink(name="snk"):
+    def fire(state, inputs, rates):
+        return state, {}
+    return static_actor(name, ("in",), (), fire)
+
+
+def _gate(name="gate"):
+    return dynamic_actor(name, "c", lambda t: {"in": t[0] > 0, "out": t[0] > 0},
+                         ("in",), ("out",), map_fire(lambda w: w, "in", "out"))
+
+
+# --------------------------------------------------------------------------- #
+# Actionable validation errors, reported at the offending call.
+# --------------------------------------------------------------------------- #
+def test_unknown_actor_is_reported_with_suggestion():
+    b = NetworkBuilder()
+    b.actor(_source())
+    b.actor(_sink())
+    with pytest.raises(ValueError, match=r"unknown actor 'sr'.*did you mean 'src'"):
+        b.connect("sr.out", "snk.in", token_shape=(1,))
+
+
+def test_unknown_port_is_reported_with_suggestion():
+    b = NetworkBuilder()
+    b.actor(_source())
+    b.actor(_sink())
+    with pytest.raises(ValueError, match=r"no output port 'ot'.*did you mean 'out'"):
+        b.connect("src.ot", "snk.in", token_shape=(1,))
+    with pytest.raises(ValueError, match=r"no input port 'inn'.*did you mean 'in'"):
+        b.connect("src.out", "snk.inn", token_shape=(1,))
+
+
+def test_double_connected_port_names_existing_channel():
+    b = NetworkBuilder()
+    b.actors(_source(), _sink(), _sink("snk2"))
+    b.connect("src.out", "snk.in", token_shape=(1,), name="first")
+    with pytest.raises(ValueError, match=r"already connected by channel 'first'.*fork"):
+        b.connect("src.out", "snk2.in", token_shape=(1,))
+
+
+def test_double_connected_input_port():
+    b = NetworkBuilder()
+    b.actors(_source(), _source("src2"), _sink())
+    b.connect("src.out", "snk.in", token_shape=(1,), name="first")
+    with pytest.raises(ValueError, match=r"already connected by channel 'first'.*merge"):
+        b.connect("src2.out", "snk.in", token_shape=(1,))
+
+
+def test_control_rate_violation():
+    b = NetworkBuilder()
+    b.actors(_source("ctl"), _source(), _gate(), _sink())
+    with pytest.raises(ValueError, match=r"control channels must have token rate 1"):
+        b.connect("ctl.out", "gate.c", rate=2)
+    with pytest.raises(ValueError, match=r"cannot carry delay tokens"):
+        b.connect("ctl.out", "gate.c", delay=1)
+
+
+def test_control_flag_mismatches():
+    b = NetworkBuilder()
+    b.actors(_source("ctl"), _source(), _gate(), _sink())
+    with pytest.raises(ValueError, match=r"control=True but 'in' is not the control port"):
+        b.connect("src.out", "gate.in", token_shape=(1,), control=True)
+    with pytest.raises(ValueError, match=r"control=False but 'c' IS the control port"):
+        b.connect("ctl.out", "gate.c", control=False)
+
+
+def test_dangling_port_reported_at_build():
+    b = NetworkBuilder()
+    b.actors(_source(), _sink())
+    with pytest.raises(ValueError, match=r"dangling ports.*\['snk.in', 'src.out'\]"):
+        b.build()
+
+
+def test_duplicate_actor_and_channel_names():
+    b = NetworkBuilder()
+    b.actor(_source())
+    with pytest.raises(ValueError, match="already registered"):
+        b.actor(_source())
+    b.actor(_sink())
+    b.actor(_sink("snk2"))
+    b2 = NetworkBuilder()
+    b2.actors(_source(), _source("src2"), _sink(), _sink("snk2"))
+    b2.connect("src.out", "snk.in", token_shape=(1,), name="f")
+    with pytest.raises(ValueError, match="channel name 'f' already used"):
+        b2.connect("src2.out", "snk2.in", token_shape=(1,), name="f")
+
+
+def test_capacity_is_derived_not_chosen():
+    b = NetworkBuilder()
+    b.actors(_source(), _sink())
+    # Correct Eq. 1 expectation passes ...
+    b.connect("src.out", "snk.in", rate=2, token_shape=(1,), capacity=4)
+    net = b.build()
+    assert net.fifos["src.out->snk.in"].capacity_tokens == 4
+    # ... a wrong one is contradicted with the law.
+    b2 = NetworkBuilder()
+    b2.actors(_source(), _sink())
+    with pytest.raises(ValueError, match=r"contradicts the Eq. 1 law"):
+        b2.connect("src.out", "snk.in", rate=2, token_shape=(1,), capacity=7)
+
+
+def test_missing_token_shape_and_bad_endpoint_syntax():
+    b = NetworkBuilder()
+    b.actors(_source(), _sink())
+    with pytest.raises(ValueError, match="token_shape"):
+        b.connect("src.out", "snk.in")
+    with pytest.raises(ValueError, match="'actor.port'"):
+        b.connect("src", "snk.in", token_shape=(1,))
+
+
+def test_initial_token_requires_delay():
+    b = NetworkBuilder()
+    b.actors(_source(), _sink())
+    with pytest.raises(ValueError, match="initial_token needs delay=1"):
+        b.connect("src.out", "snk.in", token_shape=(1,),
+                  initial_token=np.zeros((1,)))
+
+
+# --------------------------------------------------------------------------- #
+# Builder output == hand-assembled Network (same names, order, semantics).
+# --------------------------------------------------------------------------- #
+def test_builder_emits_equivalent_network():
+    b = NetworkBuilder()
+    b.actors(_source(), _sink())
+    b.connect("src.out", "snk.in", rate=2, token_shape=(3,), delay=1,
+              name="f", initial_token=np.ones((2, 3))[0])
+    built = b.build()
+    manual = Network(
+        [_source(), _sink()],
+        [FifoSpec("f", 2, (3,), jnp.float32, delay=1)],
+        [Edge("f", "src", "out", "snk", "in")],
+        initial_tokens={"f": np.ones((3,))})
+    assert list(built.actors) == list(manual.actors)
+    assert list(built.fifos) == list(manual.fifos)
+    assert built.edges == manual.edges
+    s1, s2 = built.init_state(), manual.init_state()
+    for x, y in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_auto_naming_and_control_defaults():
+    b = NetworkBuilder()
+    b.actors(_source("ctl"), _source(), _gate(), _sink())
+    cname = b.connect("ctl.out", "gate.c")
+    assert cname == "ctl.out->gate.c"
+    b.connect("src.out", "gate.in", token_shape=(1,))
+    b.connect("gate.out", "snk.in", token_shape=(1,))
+    net = b.build()
+    cspec = net.fifos[cname]
+    assert cspec.is_control and cspec.rate == 1
+    assert cspec.token_shape == (1,) and cspec.dtype == jnp.int32
+
+
+# --------------------------------------------------------------------------- #
+# matched_rates derivation.
+# --------------------------------------------------------------------------- #
+def test_derivation_pins_dpd_register_set():
+    """All 22 DPD data channels + 12 control channels register-allocate:
+    the derivation proves what the hand flags used to declare."""
+    from repro.graphs.dpd import build_dpd
+    net = build_dpd(4, active_schedule=np.array([2, 10, 5, 7], np.int32),
+                    block_l=64)
+    expect = ({"f_in", "f_out", "f_c_fork", "f_c_add"}
+              | {f"f_b{k}" for k in range(10)}
+              | {f"f_y{k}" for k in range(10)}
+              | {f"f_c{k}" for k in range(10)})
+    assert set(net.register_fifos) == expect
+    # The static rewrite keeps every channel ring-buffered (static-static
+    # registerization is the measured XLA mega-fusion pathology).
+    sta = build_dpd(4, block_l=64, static_all_active=True)
+    assert not sta.register_fifos
+
+
+def test_derivation_is_conservative_for_unmatched_enables():
+    """A dynamic consumer whose enable depends on the token must NOT be
+    matched against an unconditional static producer (occupancy drifts)."""
+    b = NetworkBuilder()
+    b.actors(_source("ctl"), _source(), _gate(), _sink())
+    b.connect("ctl.out", "gate.c")
+    f_in = b.connect("src.out", "gate.in", token_shape=(1,))
+    f_out = b.connect("gate.out", "snk.in", token_shape=(1,))
+    net = b.build()
+    assert f_in not in net.register_fifos
+    assert f_out not in net.register_fifos
+
+
+def test_derivation_override():
+    b = NetworkBuilder()
+    b.actors(_source("ctl"), _source(), _gate(), _sink())
+    b.connect("ctl.out", "gate.c")
+    f_in = b.connect("src.out", "gate.in", token_shape=(1,))
+    # Caller may assert the invariant the derivation cannot prove.
+    f_out = b.connect("gate.out", "snk.in", token_shape=(1,),
+                      matched_rates=True)
+    net = b.build()
+    assert f_out in net.register_fifos and f_in not in net.register_fifos
+
+
+def test_delay_channels_never_matched():
+    b = NetworkBuilder()
+    b.actors(_source(), _sink())
+    f = b.connect("src.out", "snk.in", token_shape=(1,), delay=1)
+    net = b.build()
+    assert f not in net.register_fifos
+
+
+# --------------------------------------------------------------------------- #
+# Graphviz export.
+# --------------------------------------------------------------------------- #
+def test_to_dot_marks_control_dashed_and_delay_labels():
+    b = NetworkBuilder()
+    b.actors(_source("ctl"), _source(), _gate(), _sink())
+    b.connect("ctl.out", "gate.c", name="fc")
+    b.connect("src.out", "gate.in", token_shape=(1,), name="fi")
+    b.connect("gate.out", "snk.in", token_shape=(1,), delay=1, name="fo")
+    dot = b.build().to_dot()
+    assert dot.startswith("digraph network {") and dot.endswith("}")
+    assert '"ctl" -> "gate"' in dot and "style=dashed" in dot
+    assert "delay=1" in dot and "cap=4" in dot       # Eq. 1: 3r+1 with delay
+    assert "peripheries=2" in dot                    # dynamic actor marker
+    # one edge line per channel
+    assert dot.count(" -> ") == 3

@@ -1,12 +1,12 @@
-"""Executor equivalence + dynamic-rate semantics (paper §3.3)."""
+"""Executor equivalence + dynamic-rate semantics (paper §3.3), on the
+unified ``NetworkBuilder`` + ``Network.compile(ExecutionPlan)`` surface."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Edge, FifoSpec, Network, RuntimeMode, collect_sink,
-                        compile_dynamic, compile_static, dynamic_actor,
-                        map_fire, run_interpreted, static_actor)
+from repro.core import (ExecutionPlan, NetworkBuilder, RuntimeMode,
+                        dynamic_actor, map_fire, static_actor)
 
 
 def make_chain(n_iter=8, rate=2, delay=True):
@@ -34,11 +34,12 @@ def make_chain(n_iter=8, rate=2, delay=True):
         "snk", ("in",), (), sink_fire,
         init=lambda: (jnp.zeros((n_iter * rate, 3), jnp.float32), jnp.int32(0)),
         finish=lambda st: st[0])
-    fifos = [FifoSpec("f1", rate, tok),
-             FifoSpec("f2", rate, tok, delay=1 if delay else 0)]
-    edges = [Edge("f1", "src", "out", "dbl", "in"),
-             Edge("f2", "dbl", "out", "snk", "in")]
-    net = Network([src, dbl, snk], fifos, edges)
+    b = NetworkBuilder()
+    b.actors(src, dbl, snk)
+    b.connect("src.out", "dbl.in", rate=rate, token_shape=tok, name="f1")
+    b.connect("dbl.out", "snk.in", rate=rate, token_shape=tok,
+              delay=1 if delay else 0, name="f2")
+    net = b.build()
     data = 2 * np.arange(n_iter * rate * 3, dtype=np.float32).reshape(-1, 3)
     expect = (np.concatenate([np.zeros((1, 3), np.float32), data[:-1]])
               if delay else data)
@@ -48,13 +49,16 @@ def make_chain(n_iter=8, rate=2, delay=True):
 @pytest.mark.parametrize("delay", [False, True])
 def test_three_executors_agree(delay):
     net, expect = make_chain(delay=delay)
-    s1 = compile_static(net, 8)(net.init_state())
-    np.testing.assert_allclose(np.asarray(collect_sink(net, s1, "snk")), expect)
-    s2, counts = compile_dynamic(net)(net.init_state())
-    np.testing.assert_allclose(np.asarray(collect_sink(net, s2, "snk")), expect)
-    assert all(int(v) == 8 for v in counts.values())
-    s3 = run_interpreted(net, net.init_state(), 8)
-    np.testing.assert_allclose(np.asarray(collect_sink(net, s3, "snk")), expect)
+    p1 = net.compile(mode="static", n_iterations=8)
+    np.testing.assert_allclose(
+        np.asarray(p1.collect("snk", p1.run().state)), expect)
+    p2 = net.compile(ExecutionPlan(mode="dynamic"))
+    r2 = p2.run()
+    np.testing.assert_allclose(np.asarray(p2.collect("snk", r2.state)), expect)
+    assert all(int(v) == 8 for v in r2.fire_counts.values())
+    p3 = net.compile(mode="interpreted", n_iterations=8)
+    np.testing.assert_allclose(
+        np.asarray(p3.collect("snk", p3.run().state)), expect)
 
 
 def make_gated(n=9, period=3):
@@ -95,24 +99,24 @@ def make_gated(n=9, period=3):
         "snk", ("in",), (), sink_fire,
         init=lambda: (jnp.zeros((n * r, 3), jnp.float32), jnp.int32(0)),
         finish=lambda st: st[0])
-    net = Network(
-        [ctl, src, gate, snk],
-        [FifoSpec("fc", 1, (1,), jnp.int32, is_control=True),
-         FifoSpec("f1", r, tok), FifoSpec("f2", r, tok)],
-        [Edge("fc", "ctl", "out", "gate", "c"),
-         Edge("f1", "src", "out", "gate", "in"),
-         Edge("f2", "gate", "out", "snk", "in")])
-    return net, n_pass
+    b = NetworkBuilder()
+    b.actors(ctl, src, gate, snk)
+    b.connect("ctl.out", "gate.c", name="fc")          # control: inferred
+    b.connect("src.out", "gate.in", rate=r, token_shape=tok, name="f1")
+    b.connect("gate.out", "snk.in", rate=r, token_shape=tok, name="f2")
+    return b.build(), n_pass
 
 
 def test_dynamic_gate_consumes_only_when_enabled():
     net, n_pass = make_gated()
-    st, counts = compile_dynamic(net)(net.init_state())
+    prog = net.compile(ExecutionPlan(mode="dynamic"))
+    result = prog.run()
+    counts = result.fire_counts
     # gate fires on every control token; src only supplies enabled windows
     assert int(counts["gate"]) == 9
     assert int(counts["src"]) == n_pass
     assert int(counts["snk"]) == n_pass
-    out = np.asarray(collect_sink(net, st, "snk"))
+    out = np.asarray(prog.collect("snk", result.state))
     data = np.arange(9 * 2 * 3, dtype=np.float32).reshape(-1, 3)
     np.testing.assert_allclose(out[:2], data[0:2] + 100.0)
 
@@ -122,15 +126,18 @@ def test_static_dal_mode_rejects_dynamic_actors():
     rejected on the accelerated path."""
     net, _ = make_gated()
     with pytest.raises(ValueError, match="STATIC_DAL"):
-        compile_dynamic(net, mode=RuntimeMode.STATIC_DAL)
+        net.compile(ExecutionPlan(mode="dynamic",
+                                  runtime_mode=RuntimeMode.STATIC_DAL))
     # ... but a static network passes.
     chain, _ = make_chain()
-    compile_static(chain, 2, mode=RuntimeMode.STATIC_DAL)
+    chain.compile(mode="static", n_iterations=2,
+                  runtime_mode=RuntimeMode.STATIC_DAL)
 
 
 def test_heterogeneous_split():
     """GPP/GPU partition (paper §3.3): middle actor accelerated, source and
-    sink on host; boundary channels become feed/fetch actors."""
+    sink on host; boundary channels become feed/fetch actors.  The raw
+    mapping API — Program.stream wraps this (tests/test_program_api.py)."""
     from repro.core import collect_sink, heterogeneous_split, stage_feed
     net, expect = make_chain(delay=False)
     sub, feeds, fetches = heterogeneous_split(net, ["dbl"], n_iterations=8)
@@ -138,7 +145,7 @@ def test_heterogeneous_split():
     state = sub.init_state()
     data = jnp.arange(8 * 2 * 3, dtype=jnp.float32).reshape(8, 2, 3)
     state = stage_feed(state, "__feed_f1", data)
-    out_state = compile_static(sub, 8)(state)
+    out_state = sub.compile(mode="static", n_iterations=8).run(state).state
     got = np.asarray(collect_sink(sub, out_state, "__fetch_f2"))
     np.testing.assert_allclose(got.reshape(-1, 3),
                                2 * np.asarray(data).reshape(-1, 3))

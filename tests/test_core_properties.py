@@ -9,8 +9,8 @@ try:
 except ModuleNotFoundError:  # container image ships no hypothesis
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core import (Edge, FifoSpec, Network, collect_sink, compile_dynamic,
-                        compile_static, dynamic_actor, map_fire, static_actor)
+from repro.core import (Edge, ExecutionPlan, FifoSpec, Network, collect_sink,
+                        dynamic_actor, map_fire, static_actor)
 
 
 def build_random_chain(depth: int, rate: int, gate_mask: int, n: int = 6):
@@ -110,8 +110,8 @@ def test_random_dynamic_chain_matches_numpy_oracle(depth, rate, gate_mask):
     (FIFO order preservation + rate-0 cursor freezing, end to end)."""
     n = 6
     net, data0, n_enabled, has_gate = build_random_chain(depth, rate, gate_mask, n)
-    state, counts = compile_dynamic(net)(net.init_state())
-    got = np.asarray(collect_sink(net, state, "snk"))
+    result = net.compile(ExecutionPlan(mode="dynamic")).run()
+    got = np.asarray(collect_sink(net, result.state, "snk"))
     if has_gate:
         expect = numpy_oracle(data0, depth, rate, gate_mask, n)
     else:

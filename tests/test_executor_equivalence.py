@@ -1,8 +1,8 @@
 """Bit-identity of the specialized/multi-firing executors vs the baselines.
 
-The trace-time cursor-specialized static path (``compile_static`` with
-``specialize=True``) and the multi-firing dynamic scheduler
-(``compile_dynamic`` with ``multi_firing=True``) are *performance*
+The trace-time cursor-specialized static path (static mode with
+``ExecutionPlan(specialize=True)``) and the multi-firing dynamic scheduler
+(dynamic mode with ``ExecutionPlan(multi_firing=True)``) are *performance*
 transformations: on every graph — including delay channels (motion
 detection's dotted Fig. 4 channel) and rate-0 firings (DPD's disabled
 branches, MoE's idle experts) — the final actor states, FIFO cursors,
@@ -19,20 +19,14 @@ instead.  The multi-firing dynamic scheduler has no such carve-out: its
 states are compared bit-for-bit in full.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import NetworkState, compile_dynamic, compile_static
+from _graph_factories import (assert_states_identical, make_dpd,
+                              make_moe, make_motion_detection)
+from repro.core import ExecutionPlan, NetworkState
 
 jax.config.update("jax_platform_name", "cpu")
-
-
-def assert_states_identical(a: NetworkState, b: NetworkState) -> None:
-    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
-    assert jax.tree.structure(a) == jax.tree.structure(b)
-    for x, y in zip(la, lb):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 def assert_states_equivalent(net, base: NetworkState, spec: NetworkState) -> None:
@@ -57,35 +51,6 @@ def assert_states_equivalent(net, base: NetworkState, spec: NetworkState) -> Non
                                           err_msg=name)
 
 
-def make_dpd(n_firings=6):
-    from repro.graphs.dpd import build_dpd
-    # Rate-0 firings on most branches: active counts 2..10 across firings.
-    sched = np.array([2, 10, 5, 7, 3, 9][:n_firings], np.int32)
-    rng = np.random.default_rng(0)
-    sig = jnp.asarray(rng.normal(size=(2, n_firings * 256)).astype(np.float32))
-    return build_dpd(n_firings, active_schedule=sched, block_l=256,
-                     signal=sig), n_firings
-
-
-def make_motion_detection(n_frames=12, rate=4):
-    from repro.graphs.motion_detection import build_motion_detection
-    rng = np.random.default_rng(1)
-    video = jnp.asarray(rng.uniform(0, 255, (n_frames, 240, 320))
-                        .astype(np.float32))
-    return build_motion_detection(n_frames, rate=rate, video=video), \
-        n_frames // rate
-
-
-def make_moe(n_firings=3):
-    from repro.graphs.moe_as_actors import build_moe_network
-    from repro.models.moe import moe_init
-    key = jax.random.PRNGKey(0)
-    D, E, K, N = 32, 4, 2, 16
-    params = moe_init(key, D, E, 64)
-    xs = jax.random.normal(key, (n_firings * N, D), jnp.float32)
-    return build_moe_network(params, N, D, K, 2.0, n_firings, xs), n_firings
-
-
 GRAPHS = {
     "dpd": make_dpd,
     "motion_detection": make_motion_detection,
@@ -96,21 +61,22 @@ GRAPHS = {
 @pytest.mark.parametrize("graph", sorted(GRAPHS))
 def test_specialized_static_bit_identical(graph):
     net, n_iter = GRAPHS[graph]()
-    base = compile_static(net, n_iter, specialize=False)(net.init_state())
-    spec = compile_static(net, n_iter, specialize=True)(net.init_state())
+    base = net.compile(mode="static", n_iterations=n_iter,
+                       specialize=False).run().state
+    spec = net.compile(mode="static", n_iterations=n_iter,
+                       specialize=True).run().state
     assert_states_equivalent(net, base, spec)
 
 
 @pytest.mark.parametrize("graph", sorted(GRAPHS))
 def test_multi_firing_dynamic_bit_identical_and_fewer_sweeps(graph):
     net, _ = GRAPHS[graph]()
-    sb, cb, swb = compile_dynamic(net, multi_firing=False,
-                                  return_sweeps=True)(net.init_state())
-    sm, cm, swm = compile_dynamic(net, multi_firing=True,
-                                  return_sweeps=True)(net.init_state())
-    assert_states_identical(sb, sm)
-    assert {k: int(v) for k, v in cb.items()} == {k: int(v) for k, v in cm.items()}
-    assert int(swm) < int(swb)
+    rb = net.compile(ExecutionPlan(mode="dynamic", multi_firing=False)).run()
+    rm = net.compile(ExecutionPlan(mode="dynamic", multi_firing=True)).run()
+    assert_states_identical(rb.state, rm.state)
+    assert ({k: int(v) for k, v in rb.fire_counts.items()}
+            == {k: int(v) for k, v in rm.fire_counts.items()})
+    assert int(rm.sweeps) < int(rb.sweeps)
 
 
 def test_specialized_remainder_iterations():
@@ -118,8 +84,10 @@ def test_specialized_remainder_iterations():
     post-scan remainder unroll (MD's delay channel gives period LCM(2,3)=6,
     so 7 iterations = 1 super-iteration + 1 remainder)."""
     net, _ = make_motion_detection(n_frames=28, rate=4)
-    base = compile_static(net, 7, specialize=False)(net.init_state())
-    spec = compile_static(net, 7, specialize=True)(net.init_state())
+    base = net.compile(mode="static", n_iterations=7,
+                       specialize=False).run().state
+    spec = net.compile(mode="static", n_iterations=7,
+                       specialize=True).run().state
     assert_states_equivalent(net, base, spec)
 
 
@@ -127,11 +95,12 @@ def test_specialized_rejects_phase_misaligned_state():
     """Resuming a specialized run from a non-phase-aligned state must fail
     loudly instead of silently reading the wrong buffer windows."""
     net, _ = make_motion_detection(n_frames=28, rate=4)
-    run1 = compile_static(net, 1, specialize=False)  # 1 iter: cursors at 1
-    misaligned = run1(net.init_state())
-    spec = compile_static(net, 6, specialize=True)
+    run1 = net.compile(mode="static", n_iterations=1,
+                       specialize=False)  # 1 iter: cursors at 1
+    misaligned = run1.run().state
+    spec = net.compile(mode="static", n_iterations=6, specialize=True)
     with pytest.raises(ValueError, match="phase-aligned"):
-        spec(misaligned)
+        spec.run(misaligned)
 
 
 def test_specialized_accepts_full_cycle_resume():
@@ -139,28 +108,31 @@ def test_specialized_accepts_full_cycle_resume():
     be resumed under specialization, matching the baseline continuation."""
     net, _ = make_motion_detection(n_frames=48, rate=4)
     state0 = net.init_state()
-    spec6 = compile_static(net, 6, specialize=True)
-    base6 = compile_static(net, 6, specialize=False)
-    assert_states_equivalent(net, base6(base6(state0)), spec6(spec6(state0)))
+    spec6 = net.compile(mode="static", n_iterations=6, specialize=True)
+    base6 = net.compile(mode="static", n_iterations=6, specialize=False)
+    assert_states_equivalent(
+        net, base6.run(base6.run(state0).state).state,
+        spec6.run(spec6.run(state0).state).state)
 
 
 def test_donated_static_executor_matches():
     """donate=True must not change results (buffers reused, values equal)."""
     net, n_iter = make_dpd()
-    keep = compile_static(net, n_iter, specialize=True)(net.init_state())
-    donated = compile_static(net, n_iter, specialize=True,
-                             donate=True)(net.init_state())
+    keep = net.compile(mode="static", n_iterations=n_iter,
+                       specialize=True).run().state
+    donated = net.compile(mode="static", n_iterations=n_iter,
+                          specialize=True, donate=True).run().state
     assert_states_identical(keep, donated)
 
 
 def test_donated_dynamic_and_interpreted_match():
-    from repro.core import run_interpreted
     net, n_iter = make_motion_detection()
-    sd, cd = compile_dynamic(net, donate=True)(net.init_state())
-    sb, cb = compile_dynamic(net)(net.init_state())
+    sd = net.compile(ExecutionPlan(mode="dynamic", donate=True)).run().state
+    sb = net.compile(ExecutionPlan(mode="dynamic")).run().state
     assert_states_identical(sd, sb)
-    ri_d = run_interpreted(net, net.init_state(), n_iter, donate=True)
-    ri_b = run_interpreted(net, net.init_state(), n_iter)
+    ri_d = net.compile(mode="interpreted", n_iterations=n_iter,
+                       donate=True).run().state
+    ri_b = net.compile(mode="interpreted", n_iterations=n_iter).run().state
     assert_states_identical(ri_d, ri_b)
 
 
@@ -170,8 +142,9 @@ def test_legacy_dict_state_accepted():
     net, n_iter = make_dpd()
     state = net.init_state()
     legacy = {"fifos": state["fifos"], "actors": state["actors"]}
-    out_legacy = compile_static(net, n_iter)(legacy)
-    out_new = compile_static(net, n_iter)(state)
+    prog = net.compile(mode="static", n_iterations=n_iter)
+    out_legacy = prog.run(legacy).state
+    out_new = prog.run(state).state
     assert_states_identical(out_legacy, out_new)
     assert set(out_new["actors"]) == set(net.actors)
     assert set(out_new["fifos"]) == set(net.fifos)

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (RuntimeMode, assert_mode_allows, collect_sink,
-                        compile_dynamic, compile_static)
+from repro.core import ExecutionPlan, RuntimeMode, assert_mode_allows
 from repro.graphs.dpd import build_dpd
 from repro.graphs.motion_detection import build_motion_detection
 from repro.kernels.dyn_fir import N_TAPS, branch_ref
@@ -31,8 +30,9 @@ def test_motion_detection_matches_oracle(rng, rate):
     video = rng.uniform(0, 255, (NF, H, W)).astype(np.float32)
     net = build_motion_detection(NF, rate=rate, frame_hw=(H, W),
                                  video=jnp.asarray(video))
-    st = compile_static(net, NF // rate)(net.init_state())
-    np.testing.assert_allclose(np.asarray(collect_sink(net, st, "sink")),
+    prog = net.compile(mode="static", n_iterations=NF // rate)
+    prog.run()
+    np.testing.assert_allclose(np.asarray(prog.collect("sink")),
                                _md_oracle(video))
 
 
@@ -73,15 +73,17 @@ def test_dpd_dynamic_rates_match_oracle(rng):
     sched = np.array([2, 2, 10, 5], np.int32)
     net = build_dpd(NF, active_schedule=sched, block_l=L,
                     signal=jnp.asarray(sig))
-    st = compile_static(net, NF)(net.init_state())
-    got = np.asarray(collect_sink(net, st, "sink"))
+    prog = net.compile(mode="static", n_iterations=NF)
+    prog.run()
+    got = np.asarray(prog.collect("sink"))
     np.testing.assert_allclose(got, _dpd_oracle(sig, sched, L),
                                rtol=6e-4, atol=6e-4)
     # token-driven scheduler agrees
-    st2, counts = compile_dynamic(net)(net.init_state())
-    np.testing.assert_allclose(np.asarray(collect_sink(net, st2, "sink")),
+    dyn = net.compile(ExecutionPlan(mode="dynamic"))
+    result = dyn.run()
+    np.testing.assert_allclose(np.asarray(dyn.collect("sink")),
                                _dpd_oracle(sig, sched, L), rtol=6e-4, atol=6e-4)
-    assert int(counts["config"]) == NF
+    assert int(result.fire_counts["config"]) == NF
 
 
 def test_dpd_static_variant_is_dal_compatible(rng):
@@ -95,7 +97,38 @@ def test_dpd_static_variant_is_dal_compatible(rng):
     static = build_dpd(NF, block_l=L, signal=jnp.asarray(sig),
                        static_all_active=True)
     assert_mode_allows(static, RuntimeMode.STATIC_DAL)
-    compile_static(static, NF)(static.init_state())
+    static.compile(mode="static", n_iterations=NF,
+                   runtime_mode=RuntimeMode.STATIC_DAL).run()
+
+
+def test_lm_pipeline_stage_network_matches_reference():
+    """The fourth paper graph on the unified surface: LM pipeline stages as
+    a builder-constructed actor network, executed by Program, == the
+    sequential stage oracle."""
+    from repro.configs import smoke_config
+    from repro.graphs.lm_pipeline import (build_lm_stage_network,
+                                          lm_stage_network_forward,
+                                          pipeline_forward_reference)
+    from repro.models.lm import init_params
+    cfg = smoke_config("granite-8b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (4, 16), 0, cfg.vocab)
+    got = lm_stage_network_forward(params, cfg, tokens, n_stages=2)
+    want = pipeline_forward_reference(params, cfg, tokens, n_stages=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+    # The network also streams: stages accelerated, activations fed/fetched
+    # chunk-by-chunk through the boundary channels.
+    net = build_lm_stage_network(params, cfg, tokens, n_stages=2)
+    prog = net.compile(mode="static", n_iterations=2,
+                       accelerated=("stage0", "stage1"))
+    x = net.actors["source"].init()[0]               # staged activations
+    outs = prog.stream({"f_s0": np.asarray(x)[:, None]})
+    full = net.compile(mode="static", n_iterations=4)
+    want_y = np.asarray(full.collect("sink", full.run().state))
+    np.testing.assert_allclose(np.asarray(outs["f_out"])[:, 0], want_y,
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_dpd_static_equals_dynamic_all_active(rng):
@@ -105,6 +138,8 @@ def test_dpd_static_equals_dynamic_all_active(rng):
     sched = np.full(NF, 10, np.int32)
     dyn = build_dpd(NF, active_schedule=sched, block_l=L, signal=jnp.asarray(sig))
     sta = build_dpd(NF, block_l=L, signal=jnp.asarray(sig), static_all_active=True)
-    a = np.asarray(collect_sink(dyn, compile_static(dyn, NF)(dyn.init_state()), "sink"))
-    b = np.asarray(collect_sink(sta, compile_static(sta, NF)(sta.init_state()), "sink"))
+    pd = dyn.compile(mode="static", n_iterations=NF)
+    ps = sta.compile(mode="static", n_iterations=NF)
+    a = np.asarray(pd.collect("sink", pd.run().state))
+    b = np.asarray(ps.collect("sink", ps.run().state))
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)

@@ -86,7 +86,7 @@ def test_flash_scan_matches_dense(rng, causal, window):
 def test_moe_actor_network_equals_fused_layer():
     """The paper-MoC expression of MoE == the fused einsum implementation
     (DESIGN.md §3 — router is the control actor, experts dynamic actors)."""
-    from repro.core import collect_sink, compile_dynamic, compile_static
+    from repro.core import ExecutionPlan
     from repro.graphs.moe_as_actors import build_moe_network
     from repro.models.moe import moe_init, moe_layer
     key = jax.random.PRNGKey(0)
@@ -100,13 +100,14 @@ def test_moe_actor_network_equals_fused_layer():
         outs.append(np.asarray(y[0]))
     expect = np.concatenate(outs)
     net = build_moe_network(params, N, D, K, 2.0, F, xs)
-    st = compile_static(net, F)(net.init_state())
-    np.testing.assert_allclose(np.asarray(collect_sink(net, st, "sink")),
+    sta = net.compile(mode="static", n_iterations=F)
+    np.testing.assert_allclose(np.asarray(sta.collect("sink", sta.run().state)),
                                expect, rtol=2e-2, atol=2e-2)
-    st2, counts = compile_dynamic(net)(net.init_state())
-    np.testing.assert_allclose(np.asarray(collect_sink(net, st2, "sink")),
+    dyn = net.compile(ExecutionPlan(mode="dynamic"))
+    result = dyn.run()
+    np.testing.assert_allclose(np.asarray(dyn.collect("sink", result.state)),
                                expect, rtol=2e-2, atol=2e-2)
-    assert int(counts["router"]) == F
+    assert int(result.fire_counts["router"]) == F
 
 
 def test_unroll_matches_scan():

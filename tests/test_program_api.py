@@ -1,0 +1,222 @@
+"""Program / ExecutionPlan: shim equivalence, stream loop, stats, plan
+validation.  The acceptance pin of the API redesign: the deprecated
+``compile_static`` / ``compile_dynamic`` shims and ``Network.compile``
+produce bit-identical ``NetworkState``s on the paper graphs."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _graph_factories import (assert_states_identical, make_dpd as _make_dpd,
+                              make_motion_detection as _make_md)
+from repro.core import (ExecutionPlan, compile_dynamic, compile_static,
+                        name_index_map, run_interpreted)
+
+# Smaller workloads than the equivalence suite: these tests compare API
+# surfaces, not executor transforms, so tiny graphs keep the suite fast.
+make_dpd = functools.partial(_make_dpd, n_firings=4, block_l=128)
+
+
+def make_motion_detection(n_frames=12, rate=4):
+    return _make_md(n_frames=n_frames, rate=rate, frame_hw=(48, 64))
+
+
+GRAPHS = {"dpd": make_dpd, "motion_detection": make_motion_detection}
+
+
+# --------------------------------------------------------------------------- #
+# Shim equivalence (the deprecation is transparent).
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_static_shim_bit_identical_to_program(graph):
+    net, n_iter = GRAPHS[graph]()
+    with pytest.warns(DeprecationWarning, match="compile_static"):
+        legacy = compile_static(net, n_iter)
+    s_old = legacy(net.init_state())
+    s_new = net.compile(mode="static", n_iterations=n_iter).run().state
+    assert_states_identical(s_old, s_new)
+
+
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_dynamic_shim_bit_identical_to_program(graph):
+    net, _ = GRAPHS[graph]()
+    with pytest.warns(DeprecationWarning, match="compile_dynamic"):
+        legacy = compile_dynamic(net, return_sweeps=True)
+    s_old, c_old, sw_old = legacy(net.init_state())
+    r = net.compile(ExecutionPlan(mode="dynamic")).run()
+    assert_states_identical(s_old, r.state)
+    assert ({k: int(v) for k, v in c_old.items()}
+            == {k: int(v) for k, v in r.fire_counts.items()})
+    assert int(sw_old) == int(r.sweeps)
+
+
+def test_interpreted_shim_bit_identical_to_program():
+    net, n_iter = make_motion_detection()
+    with pytest.warns(DeprecationWarning, match="run_interpreted"):
+        s_old = run_interpreted(net, net.init_state(), n_iter)
+    s_new = net.compile(mode="interpreted", n_iterations=n_iter).run().state
+    assert_states_identical(s_old, s_new)
+
+
+# --------------------------------------------------------------------------- #
+# Plan validation.
+# --------------------------------------------------------------------------- #
+def test_plan_rejects_bad_mode_and_missing_iterations():
+    with pytest.raises(ValueError, match="mode must be one of"):
+        ExecutionPlan(mode="jitted")
+    with pytest.raises(ValueError, match="n_iterations"):
+        ExecutionPlan(mode="static")
+    with pytest.raises(ValueError, match="n_iterations"):
+        ExecutionPlan(mode="interpreted")
+    with pytest.raises(ValueError, match="n_iterations"):
+        ExecutionPlan(mode="dynamic", accelerated=("a",))
+    ExecutionPlan(mode="dynamic")  # quiescence needs no count
+
+
+def test_plan_rejects_unknown_accelerated_actor():
+    net, _ = make_motion_detection()
+    with pytest.raises(ValueError, match="unknown actors.*nosuch"):
+        net.compile(mode="static", n_iterations=3, accelerated=("nosuch",))
+
+
+def test_stream_requires_heterogeneous_plan():
+    net, n_iter = make_motion_detection()
+    prog = net.compile(mode="static", n_iterations=n_iter)
+    with pytest.raises(ValueError, match="accelerated"):
+        prog.stream({})
+
+
+def test_stream_rejects_period_misaligned_chunk_up_front():
+    """A specialized static plan whose chunk does not cover whole unroll
+    periods must fail before any chunk runs (not mid-stream with a
+    phase-alignment error blaming the resumed state)."""
+    net, _ = make_motion_detection(n_frames=16, rate=4)
+    prog = net.compile(mode="static", n_iterations=1,
+                       accelerated=("gauss", "thres", "med"))
+    with pytest.raises(ValueError, match="phase-unroll period"):
+        prog.stream({"f_src_gauss": np.zeros((4, 4, 48, 64), np.uint8)})
+    # specialize=False has no alignment constraint: same chunking runs.
+    prog2 = net.compile(mode="static", n_iterations=1, specialize=False,
+                        accelerated=("gauss", "thres", "med"))
+    outs = prog2.stream({"f_src_gauss": np.zeros((4, 4, 48, 64), np.uint8)})
+    assert outs["f_med_sink"].shape == (4, 4, 48, 64)
+
+
+# --------------------------------------------------------------------------- #
+# The chunked host-feed/fetch loop.
+# --------------------------------------------------------------------------- #
+def test_stream_equals_single_run_md():
+    """Streaming the MD accelerator subnetwork chunk-by-chunk == one long
+    run: actor and internal-FIFO state (the Fig. 4 delay token!) carries
+    across chunk boundaries."""
+    n_frames, rate = 24, 4
+    net, n_iter = make_motion_detection(n_frames=n_frames, rate=rate)
+    accel = ("gauss", "thres", "med")
+    # Chunk of 3 iterations = one delay-channel phase cycle... but the
+    # unroll period is LCM(2,3)=6, so use 6 for the specialized path.
+    prog = net.compile(mode="static", n_iterations=6, accelerated=accel)
+    rng = np.random.default_rng(1)
+    video = jnp.asarray(
+        np.clip(np.round(rng.uniform(0, 255, (n_frames, 48, 64))), 0, 255)
+        .astype(np.uint8))
+    feeds = {"f_src_gauss": video.reshape(n_iter, rate, 48, 64)}
+    outs = prog.stream(feeds)
+    assert set(outs) == {"f_med_sink"}
+    assert outs["f_med_sink"].shape == (n_iter, rate, 48, 64)
+    # Oracle: the full network in one compiled run.
+    full = net.compile(mode="static", n_iterations=n_iter)
+    st = full.run().state
+    want = np.asarray(full.collect("sink", st))
+    np.testing.assert_array_equal(
+        np.asarray(outs["f_med_sink"]).reshape(n_frames, 48, 64), want)
+
+
+def test_stream_accepts_flat_feed_and_checks_shapes():
+    net, n_iter = make_motion_detection(n_frames=24, rate=4)
+    prog = net.compile(mode="static", n_iterations=6,
+                       accelerated=("gauss", "thres", "med"))
+    with pytest.raises(ValueError, match="unknown feed channels"):
+        prog.stream({"nope": np.zeros((6, 4, 48, 64))})
+    with pytest.raises(ValueError, match="missing feeds"):
+        prog.stream({})
+    with pytest.raises(ValueError, match="expected"):
+        prog.stream({"f_src_gauss": np.zeros((6, 3, 48, 64))})
+    with pytest.raises(ValueError, match="do not divide"):
+        prog.stream({"f_src_gauss": np.zeros((4, 4, 48, 64))})
+    # Flattened token stream is reshaped into windows.
+    flat = np.zeros((24, 48, 64), np.uint8)
+    outs = prog.stream({"f_src_gauss": flat})
+    assert outs["f_med_sink"].shape == (6, 4, 48, 64)
+
+
+def test_stream_dynamic_mode_dpd():
+    """Heterogeneous placement composes with the dynamic scheduler: the
+    DPD compute subnetwork (all but source/sink) streamed in chunks."""
+    net, n_firings = make_dpd()
+    accel = tuple(n for n in net.actors if n not in ("source", "sink"))
+    prog = net.compile(mode="dynamic", n_iterations=2, accelerated=accel)
+    # Same windows the staged source emits: sig[:, i*L:(i+1)*L] per firing.
+    rng = np.random.default_rng(0)
+    sig = rng.normal(size=(2, n_firings * 128)).astype(np.float32)
+    wins = np.stack([sig[:, i * 128:(i + 1) * 128]
+                     for i in range(n_firings)])[:, None]
+    outs = prog.stream({"f_in": jnp.asarray(wins)})
+    full = net.compile(ExecutionPlan(mode="dynamic"))
+    st = full.run().state
+    want = np.asarray(full.collect("sink", st))      # (2, n_firings * L)
+    got = np.concatenate(list(np.asarray(outs["f_out"])[:, 0]), axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_donate_with_default_state_does_not_poison_network():
+    """run(None) under a donate plan must copy the auto-created state:
+    init_state() aliases the staged source slab, and donating it would
+    delete the buffer for every later init_state() of the network."""
+    net, n_iter = make_dpd()
+    prog = net.compile(mode="static", n_iterations=n_iter, donate=True)
+    a = np.asarray(prog.run().state.actor("sink")[0])
+    b = np.asarray(prog.run().state.actor("sink")[0])  # crashed pre-fix
+    np.testing.assert_array_equal(a, b)
+    keep = net.compile(mode="static", n_iterations=n_iter).run().state
+    np.testing.assert_array_equal(a, np.asarray(keep.actor("sink")[0]))
+
+
+# --------------------------------------------------------------------------- #
+# Stats.
+# --------------------------------------------------------------------------- #
+def test_stats_reports_roofline_and_sweeps():
+    net, _ = make_dpd()
+    prog = net.compile(ExecutionPlan(mode="dynamic"))
+    st = prog.stats()
+    assert st.last_sweeps is None                 # nothing ran yet
+    prog.run()
+    st = prog.stats()
+    assert st.mode == "dynamic"
+    assert st.n_actors == len(net.actors) and st.n_fifos == len(net.fifos)
+    assert st.buffer_bytes == net.buffer_bytes()
+    assert st.last_sweeps >= 1
+    assert st.last_fire_counts["config"] == 4
+    # Roofline coordinates: poly branches have FLOP annotations and move
+    # window bytes, so their intensity is positive.
+    assert st.actor_flops["poly0"] > 0
+    assert st.actor_window_bytes["poly0"] > 0
+    assert st.actor_intensity["poly0"] == pytest.approx(
+        st.actor_flops["poly0"] / st.actor_window_bytes["poly0"])
+    assert set(st.register_fifos) == set(net.register_fifos)
+
+
+# --------------------------------------------------------------------------- #
+# O(1) state accessors (precomputed name->index maps).
+# --------------------------------------------------------------------------- #
+def test_state_accessors_use_index_maps():
+    net, _ = make_motion_detection()
+    state = net.init_state()
+    m = name_index_map(state.fifo_names)
+    assert m is name_index_map(state.fifo_names)   # cached per name tuple
+    for i, name in enumerate(state.fifo_names):
+        assert m[name] == i
+        assert state.fifo(name) is state.fifos[i]
+    for i, name in enumerate(state.actor_names):
+        assert state.actor(name) is state.actors[i]
