@@ -30,18 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ExecutionPlan
+from repro.graphs.factories import states_identical as _states_identical
 
 Row = Tuple[str, float, str]
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                          "BENCH_executors.json")
-
-
-def _states_identical(a, b) -> bool:
-    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
-    return (jax.tree.structure(a) == jax.tree.structure(b) and
-            all(np.array_equal(np.asarray(x), np.asarray(y))
-                for x, y in zip(la, lb)))
 
 
 def _interleaved_medians(fns: Dict[str, Callable[[], None]],
@@ -122,9 +116,15 @@ def bench_executors(fast: bool = False,
                tokens, fmt(med_d["don"]))
 
         # -- dynamic executors: single- vs multi-firing sweeps ----------- #
+        # donate=False pins the measurement to the executor itself: the
+        # "auto" default would donate run(None)'s private copy on graphs
+        # passing the buffered-bytes heuristic, adding a tree copy to
+        # every timed call.
         dyn_base = net.compile(ExecutionPlan(mode="dynamic",
-                                             multi_firing=False))
-        dyn_mf = net.compile(ExecutionPlan(mode="dynamic", multi_firing=True))
+                                             multi_firing=False,
+                                             donate=False))
+        dyn_mf = net.compile(ExecutionPlan(mode="dynamic", multi_firing=True,
+                                           donate=False))
         rb, rm = dyn_base.run(), dyn_mf.run()
         sb, cb, swb = rb.state, rb.fire_counts, rb.sweeps
         sm, cm, swm = rm.state, rm.fire_counts, rm.sweeps

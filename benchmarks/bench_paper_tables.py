@@ -14,10 +14,10 @@ import time
 from typing import Callable, List, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.dpd import BLOCK_L, build_dpd
+from repro.graphs.factories import make_dpd, make_motion_detection
 from repro.graphs.motion_detection import build_motion_detection
 
 Row = Tuple[str, float, str]
@@ -49,12 +49,11 @@ def bench_buffers() -> List[Row]:
 # Paper Table 3: Motion Detection throughput (fps).
 # --------------------------------------------------------------------------- #
 def bench_motion_detection(n_frames: int = 24) -> List[Row]:
-    rng = np.random.default_rng(0)
-    video = rng.uniform(0, 255, (n_frames, 240, 320)).astype(np.float32)
+    # Shared factory (same seed -> same staged video for both rates).
+    net1, _ = make_motion_detection(n_frames, rate=1, seed=0)
     rows: List[Row] = []
 
     # "MC": interpreted per-actor execution, rate 1 (paper: GPP rate 1).
-    net1 = build_motion_detection(n_frames, rate=1, video=jnp.asarray(video))
     interp = net1.compile(mode="interpreted", n_iterations=n_frames)
     st1 = net1.init_state()
     dt = _time(lambda: jax.block_until_ready(
@@ -64,7 +63,7 @@ def bench_motion_detection(n_frames: int = 24) -> List[Row]:
                  f"{fps_mc:.0f} fps (paper MC: 485-1138)"))
 
     # "Heterog": whole network compiled, rate 4 (paper's GPU token rate).
-    net4 = build_motion_detection(n_frames, rate=4, video=jnp.asarray(video))
+    net4, _ = make_motion_detection(n_frames, rate=4, seed=0)
     run4 = net4.compile(mode="static", n_iterations=n_frames // 4)
     st4 = net4.init_state()
     dt = _time(lambda: jax.block_until_ready(
@@ -82,8 +81,10 @@ def bench_motion_detection(n_frames: int = 24) -> List[Row]:
 # Paper Table 4 + the 5x claim: DPD throughput (Msamples/s).
 # --------------------------------------------------------------------------- #
 def bench_dpd(n_firings: int = 8, block_l: int = BLOCK_L) -> List[Row]:
-    rng = np.random.default_rng(1)
-    sig = rng.normal(size=(2, n_firings * block_l)).astype(np.float32)
+    # All variants share the seed-1 factory signal (one construction).
+    def dpd(**kw):
+        return make_dpd(n_firings, block_l=block_l, seed=1, **kw)[0]
+
     samples = n_firings * block_l
     rows: List[Row] = []
 
@@ -98,16 +99,14 @@ def bench_dpd(n_firings: int = 8, block_l: int = BLOCK_L) -> List[Row]:
 
     # MC analogue: interpreted dynamic graph (avg ~6 filters active).
     mixed = np.array([2, 10, 5, 7, 3, 9, 2, 10][:n_firings], np.int32)
-    net_mc = build_dpd(n_firings, active_schedule=mixed, block_l=block_l,
-                       signal=jnp.asarray(sig))
+    net_mc = dpd(active_schedule=mixed)
     ms_mc = throughput(net_mc, compiled=False)
     rows.append(("table4_dpd_interpreted_mc_Msps", 0.0,
                  f"{ms_mc:.1f} Msamples/s (paper MC: 7-33)"))
 
     # DAL-GPU analogue is impossible for dynamic rates (paper: n/a): the
     # static rewrite (all 10 branches always on) is what DAL would need.
-    net_static = build_dpd(n_firings, block_l=block_l, signal=jnp.asarray(sig),
-                           static_all_active=True)
+    net_static = dpd(static_all_active=True)
     ms_static = throughput(net_static)
     rows.append(("table4_dpd_compiled_static_all10_Msps", 0.0,
                  f"{ms_static:.1f} Msamples/s (DAL-style: every branch computed)"))
@@ -116,8 +115,7 @@ def bench_dpd(n_firings: int = 8, block_l: int = BLOCK_L) -> List[Row]:
     for label, sched in [("min_active2", np.full(n_firings, 2, np.int32)),
                          ("mixed", mixed),
                          ("all10", np.full(n_firings, 10, np.int32))]:
-        net = build_dpd(n_firings, active_schedule=sched, block_l=block_l,
-                        signal=jnp.asarray(sig))
+        net = dpd(active_schedule=sched)
         ms = throughput(net)
         rows.append((f"table4_dpd_compiled_dynamic_{label}_Msps", 0.0,
                      f"{ms:.1f} Msamples/s"))
@@ -134,8 +132,7 @@ def bench_dpd(n_firings: int = 8, block_l: int = BLOCK_L) -> List[Row]:
     # all).  The gap between this ratio and the dynamic n_active=2 ratio
     # above is the cost of XLA's *functional* conds still moving rate-r
     # windows for disabled ports — analysis in EXPERIMENTS.md §Perf.
-    net2 = build_dpd(n_firings, block_l=block_l, n_branches=2,
-                     signal=jnp.asarray(sig), static_all_active=True)
+    net2 = dpd(n_branches=2, static_all_active=True)
     ms2 = throughput(net2)
     rows.append(("table4_dpd_structural_2branch_Msps", 0.0,
                  f"{ms2:.1f} Msamples/s -> {ms2 / ms_static:.1f}x vs 10-branch "

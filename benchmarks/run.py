@@ -13,6 +13,7 @@ def main() -> None:
                                                bench_motion_detection)
     from benchmarks.bench_executors import bench_executors
     from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_megakernel import bench_megakernel
     from benchmarks.roofline import bench_roofline
 
     sections = [
@@ -20,6 +21,7 @@ def main() -> None:
         ("Table 3 (Motion Detection)", bench_motion_detection),
         ("Table 4 (DPD + 5x claim)", bench_dpd),
         ("Executors (specialization + multi-firing)", bench_executors),
+        ("Megakernel (device-resident dynamic scheduling)", bench_megakernel),
         ("Kernels", bench_kernels),
         ("Roofline (from dry-run)", bench_roofline),
     ]

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ExecutionPlan, NetworkBuilder, dynamic_actor,
+from repro.core import (ExecutionPlan, Mode, NetworkBuilder, dynamic_actor,
                         map_fire, static_actor)
 
 N_FIRINGS, RATE, TOK = 8, 2, (4,)
@@ -77,6 +77,23 @@ def main():
     print("first enabled window (x10):", out[0:RATE, 0])
     assert np.allclose(out[0:RATE], 10.0 * np.arange(RATE * 4).reshape(RATE, 4))
     print("OK — dynamic data rates on the compiled path.")
+
+    # Same network as ONE persistent Pallas kernel: ring buffers live in
+    # kernel scratch, the token-driven sweep loop runs on the device
+    # (interpret mode off-TPU).  Bit-identical to the dynamic executor.
+    mega = net.compile(ExecutionPlan(mode=Mode.MEGAKERNEL))
+    mresult = mega.run()
+    stats = mega.stats()
+    assert np.array_equal(np.asarray(mega.collect("sink")), out)
+    print(f"megakernel: {int(mresult.sweeps)} sweeps on-device, "
+          f"{stats.scratch_bytes} B scratch vs "
+          f"{stats.hbm_state_bytes} B HBM state")
+
+    # Note on donation: ExecutionPlan.donate defaults to "auto" — donate
+    # only when the ring-buffered bytes are small enough that copy
+    # elision wins (full-size motion detection measured 1.7x SLOWER
+    # donated; EXPERIMENTS.md §Executor perf).  Pass donate=True/False to
+    # override per run.
 
 
 if __name__ == "__main__":

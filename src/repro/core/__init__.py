@@ -24,8 +24,21 @@ from repro.core.executor import (
     make_iteration_step,
     run_interpreted,
 )
-from repro.core.program import (ExecutionPlan, Program, ProgramStats,
-                                RunResult)
+from repro.core.program import (MEGAKERNEL, ExecutionPlan, Mode, Program,
+                                ProgramStats, RunResult)
+
+# Megakernel names resolve lazily (module __getattr__ below): the backend
+# imports jax.experimental.pallas(+tpu), ~1 s of import cost every
+# non-megakernel consumer of repro.core should not pay.
+_MEGAKERNEL_EXPORTS = ("MegakernelLayout", "compile_megakernel",
+                       "lower_network", "state_hbm_bytes")
+
+
+def __getattr__(name: str):
+    if name in _MEGAKERNEL_EXPORTS:
+        from repro.core import megakernel
+        return getattr(megakernel, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
 from repro.core.mapping import (
     Placement,
     boundary_fifos,
@@ -43,7 +56,10 @@ __all__ = [
     "Edge", "Network", "NetworkState", "iteration_token_flops",
     "name_index_map", "repetition_vector",
     "NetworkBuilder", "derive_matched_rates",
-    "ExecutionPlan", "Program", "ProgramStats", "RunResult",
+    "ExecutionPlan", "MEGAKERNEL", "Mode", "Program", "ProgramStats",
+    "RunResult",
+    "MegakernelLayout", "compile_megakernel", "lower_network",
+    "state_hbm_bytes",
     "RuntimeMode", "assert_mode_allows", "collect_sink", "compile_dynamic",
     "compile_static", "fire_actor", "make_iteration_step", "run_interpreted",
     "Placement", "boundary_fifos", "heterogeneous_split", "partition_actors",

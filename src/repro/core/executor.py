@@ -620,7 +620,21 @@ def collect_sink(network: Network, state: State, actor: str) -> Any:
 # every executor policy (mode, specialization, multi-firing, donation,
 # heterogeneous placement) is a plan field.
 # --------------------------------------------------------------------------- #
+# Warned entrypoints, module-level so each shim warns once per process:
+# per-call warnings flooded benchmark loops that call a shim-built runner
+# factory repeatedly (thousands of identical lines per bench section).
+_DEPRECATION_WARNED: set = set()
+
+
+def reset_deprecation_warnings() -> None:
+    """Re-arm the once-per-process shim warnings (testing hook)."""
+    _DEPRECATION_WARNED.clear()
+
+
 def _warn_deprecated(old: str, new: str) -> None:
+    if old in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(old)
     warnings.warn(
         f"{old} is deprecated; use {new} (see ExecutionPlan in "
         "repro.core.program)", DeprecationWarning, stacklevel=3)

@@ -1,0 +1,18 @@
+"""repro.core.megakernel — device-resident dynamic actor scheduling.
+
+The third real execution backend (``ExecutionPlan(mode=Mode.MEGAKERNEL)``):
+the whole accelerated subnetwork lowers into a single persistent Pallas
+kernel whose Eq. 1 ring buffers live in scratch memory and whose
+token-driven sweep loop runs on the device (paper §3.3).  See
+``lower.py`` for the build-time layout/firing-table pass and ``kernel.py``
+for the kernel itself.
+"""
+from repro.core.megakernel.kernel import compile_megakernel
+from repro.core.megakernel.lower import (FiringRow, MegakernelLayout,
+                                         PortBinding, lower_network,
+                                         state_hbm_bytes)
+
+__all__ = [
+    "FiringRow", "MegakernelLayout", "PortBinding",
+    "compile_megakernel", "lower_network", "state_hbm_bytes",
+]

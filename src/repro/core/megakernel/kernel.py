@@ -1,0 +1,565 @@
+"""The persistent Pallas megakernel: device-resident dynamic scheduling.
+
+One ``pl.pallas_call`` executes the whole network to quiescence:
+
+  * every Eq. 1 ring buffer is staged into a **scratch** allocation
+    (``pltpu.VMEM`` shapes from :meth:`MegakernelLayout.scratch_shape`)
+    at kernel entry and copied back to the HBM outputs at exit — between
+    those two copies no channel traffic leaves the device's fast memory;
+  * FIFO cursors (rd / wr / occ per channel) and actor states are
+    **loop-carried values** of the in-kernel sweep ``lax.while_loop`` —
+    the register-resident analogue of ``FifoState``'s scalars;
+  * the sweep loop itself is the paper's §3.3 device-resident scheduler:
+    each sweep visits every actor in declaration order, peeks its control
+    token straight out of scratch, and predicates up to
+    ``_max_fireable``-many firings on ring occupancy via ``lax.cond`` —
+    the exact blocking semantics of the host-side token-driven executor,
+    with no host round trip per dispatch decision.
+
+**Closure hoisting.**  Actor functions close over arrays staged at graph
+build time (DPD's reconfiguration schedule, the MoE layer weights).
+``pallas_call`` requires every array a kernel touches to be an explicit
+operand, so :func:`_hoist_consts` traces each actor's ``fire`` /
+``control`` / ``ready`` once at compile time, lifts the captured arrays
+out of the jaxpr, and the runner passes them as extra kernel inputs —
+weights enter the megakernel the same way they would enter any other
+accelerator kernel.
+
+**Bit-identity contract.**  The ring helpers (``_ring_read_masked``,
+``_ring_write_masked``, ``_ring_peek``) mirror ``FifoSpec.read_masked`` /
+``write_masked`` / ``peek`` operation for operation — same offsets, same
+masked-window rewrite (disabled writes rewrite the current bytes, no
+``lax.cond`` identity arm), same predicated slot-0 delay copy-back — and
+``_fire`` / ``_can_fire`` / ``_max_fireable`` mirror their
+``repro.core.executor`` namesakes.  Final states, fire counts and sweep
+counts are therefore bit-identical to ``compile_dynamic`` (pinned by
+``tests/test_megakernel.py``; the ring helpers alone are pinned against
+the queue oracle in ``tests/test_megakernel_ring.py``).
+
+**Interpret fallback.**  ``interpret=None`` auto-selects Pallas interpret
+mode off-TPU so tier-1 runs the kernel on CPU; the Mosaic (non-interpret)
+TPU path is a ROADMAP open item — actor bodies may use ops Mosaic cannot
+lower yet (MoE's top_k/scatter), so on TPU pass ``interpret=True`` to
+fall back deliberately.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.executor import (_MAX_FIRINGS_PER_VISIT, RuntimeMode,
+                                 _is_concrete, assert_mode_allows)
+from repro.core.fifo import FifoSpec, FifoState
+from repro.core.megakernel.lower import (FiringRow, MegakernelLayout,
+                                         lower_network)
+from repro.core.network import Network, NetworkState
+
+# Cursor row layout inside the packed (n_fifos, 3) block.
+_RD, _WR, _OCC = 0, 1, 2
+
+
+# --------------------------------------------------------------------------- #
+# Scratch ring-buffer ops — FifoSpec's masked API, re-expressed on a Pallas
+# ref + a packed cursor row.  Each mirrors its fifo.py namesake bit for bit;
+# the phase-offset arithmetic is *shared* with FifoSpec (_read_offset /
+# _write_offset) so a future phase-scheme change cannot diverge silently.
+# --------------------------------------------------------------------------- #
+def _ring_peek(spec: FifoSpec, ring, cursors: jax.Array,
+               fi: int) -> jax.Array:
+    """``FifoSpec.peek``: next single token, cursor untouched."""
+    off = spec._read_offset(cursors[fi, _RD])
+    return ring[pl.ds(off, 1)][0]
+
+
+def _ring_read(spec: FifoSpec, ring, cursors: jax.Array,
+               fi: int) -> Tuple[jax.Array, jax.Array]:
+    """``FifoSpec.read``: unconditional window consume (control ports)."""
+    off = spec._read_offset(cursors[fi, _RD])
+    window = ring[pl.ds(off, spec.rate)]
+    cursors = (cursors.at[fi, _RD].add(1)
+                      .at[fi, _OCC].add(-spec.rate))
+    return window, cursors
+
+
+def _ring_read_masked(spec: FifoSpec, ring, cursors: jax.Array, fi: int,
+                      enabled: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """``FifoSpec.read_masked``: static-shaped window, masked cursor
+    advance; disabled reads return the current (stale) slots exactly as
+    the functional API does, so gated consumers see identical bytes."""
+    off = spec._read_offset(cursors[fi, _RD])
+    window = ring[pl.ds(off, spec.rate)]
+    e = enabled.astype(jnp.int32)
+    cursors = (cursors.at[fi, _RD].add(e)
+                      .at[fi, _OCC].add(-e * spec.rate))
+    return window, cursors
+
+
+def _ring_write_masked(spec: FifoSpec, ring, cursors: jax.Array, fi: int,
+                       tokens: jax.Array, enabled: jax.Array) -> jax.Array:
+    """``FifoSpec.write_masked``: the window slot is rewritten
+    unconditionally with either the new tokens or its current content
+    (no cond identity arm), and delay channels fold the Fig. 2 copy-back
+    into a predicated single-token rewrite of slot 0."""
+    e = enabled.astype(jnp.int32)
+    off = spec._write_offset(cursors[fi, _WR])
+    cur = ring[pl.ds(off, spec.rate)]
+    eff = jnp.where(enabled, jnp.asarray(tokens, spec.dtype), cur)
+    ring[pl.ds(off, spec.rate)] = eff
+    if spec.delay:
+        do_copy = jnp.logical_and(
+            enabled, (cursors[fi, _WR] % spec.n_write_phases) == 2)
+        slot0 = jnp.where(do_copy, ring[3 * spec.rate], ring[0])
+        ring[pl.ds(0, 1)] = slot0[None]
+    return (cursors.at[fi, _WR].add(e)
+                   .at[fi, _OCC].add(e * spec.rate))
+
+
+# --------------------------------------------------------------------------- #
+# Closure hoisting: actor fns -> (jaxpr-eval callable, captured arrays).
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class _HoistedFn:
+    """One actor function with its closure arrays lifted out.
+
+    ``call(args, const_values)`` evaluates the traced jaxpr with the
+    hoisted arrays substituted back in as inputs; ``const_ids`` index into
+    the layout-wide deduplicated const table.  When ``const_ids`` is empty
+    the original Python callable is used directly (preserving trace-time
+    constant folding on concrete rates, exactly like the host executors).
+    """
+
+    call: Callable
+    const_ids: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class _ActorFns:
+    fire: _HoistedFn
+    control: Optional[_HoistedFn]
+    ready: Optional[_HoistedFn]
+
+
+def _hoist_fn(fn: Callable, example_args: Tuple[Any, ...],
+              register: Callable[[List[Any]], Tuple[int, ...]]) -> _HoistedFn:
+    """Trace ``fn`` once against abstract example args; lift the jaxpr's
+    captured concrete arrays into the shared const table."""
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
+    if not closed.consts:
+        return _HoistedFn(call=lambda args, _consts: fn(*args),
+                          const_ids=())
+    in_tree = jax.tree.structure(example_args)
+    out_tree = jax.tree.structure(out_shape)
+    const_ids = register(list(closed.consts))
+    jaxpr = closed.jaxpr
+
+    def call(args: Tuple[Any, ...], const_values: List[jax.Array]) -> Any:
+        flat, tree = jax.tree.flatten(args)
+        if tree != in_tree:
+            raise ValueError(
+                f"megakernel hoisted call: argument structure {tree} does "
+                f"not match the traced structure {in_tree}")
+        outs = jax.core.eval_jaxpr(jaxpr, const_values, *flat)
+        return jax.tree.unflatten(out_tree, outs)
+
+    return _HoistedFn(call=call, const_ids=const_ids)
+
+
+def _hoist_consts(network: Network, layout: MegakernelLayout
+                  ) -> Tuple[Dict[str, _ActorFns], List[jax.Array]]:
+    """Build per-actor hoisted fire/control/ready callables plus the
+    deduplicated table of every array any actor closure captures."""
+    example = jax.eval_shape(network.init_state)
+    consts: List[jax.Array] = []
+    seen: Dict[int, int] = {}
+    # The dedup key is id(original); jnp.asarray may *copy* (numpy
+    # consts), so the original must be kept alive for as long as `seen`
+    # is consulted or a recycled id could alias a later actor's const to
+    # the wrong operand.
+    keepalive: List[Any] = []
+
+    def register(arrs: List[Any]) -> Tuple[int, ...]:
+        ids = []
+        for arr in arrs:
+            key = id(arr)
+            if key not in seen:
+                seen[key] = len(consts)
+                consts.append(jnp.asarray(arr))
+                keepalive.append(arr)
+            ids.append(seen[key])
+        return tuple(ids)
+
+    fns: Dict[str, _ActorFns] = {}
+    for row in layout.firing_table:
+        a = network.actors[row.name]
+        st_ex = example.actors[row.index]
+        wins_ex = {
+            pb.port: jax.ShapeDtypeStruct(
+                (layout.fifo_specs[pb.fifo].rate,)
+                + tuple(layout.fifo_specs[pb.fifo].token_shape),
+                layout.fifo_specs[pb.fifo].dtype)
+            for pb in row.inputs
+        }
+        control = None
+        if row.control is not None:
+            cspec = layout.fifo_specs[row.control]
+            tok_ex = jax.ShapeDtypeStruct(tuple(cspec.token_shape),
+                                          cspec.dtype)
+            rate_keys = list(jax.eval_shape(a.control, tok_ex))
+            missing = (set(a.in_ports) | set(a.out_ports)) - set(rate_keys)
+            if missing:
+                raise ValueError(
+                    f"actor {row.name}: control() must set a rate for every "
+                    f"regular port; missing {sorted(missing)}")
+            control = _hoist_fn(a.control, (tok_ex,), register)
+        else:
+            rate_keys = list(a.in_ports) + list(a.out_ports)
+        rates_ex = {k: jax.ShapeDtypeStruct((), jnp.int32)
+                    for k in rate_keys}
+        fire = _hoist_fn(a.fire, (st_ex, wins_ex, rates_ex), register)
+        ready = (_hoist_fn(a.ready, (st_ex,), register)
+                 if row.has_ready else None)
+        fns[row.name] = _ActorFns(fire=fire, control=control, ready=ready)
+    return fns, consts
+
+
+# --------------------------------------------------------------------------- #
+# In-kernel firing protocol — mirrors executor.fire_actor's masked path.
+# --------------------------------------------------------------------------- #
+def _rates_for(a, fns: _ActorFns, consts: List[jax.Array],
+               ctrl_tok: Optional[jax.Array]) -> Dict[str, jax.Array]:
+    """``ActorSpec.rates_for`` with the hoisted control function."""
+    one = jnp.int32(1)
+    if not a.is_dynamic:
+        return {p: one for p in (*a.in_ports, *a.out_ports)}
+    raw = fns.control.call(
+        (ctrl_tok,), [consts[i] for i in fns.control.const_ids])
+    return {k: jnp.asarray(v, jnp.int32) for k, v in raw.items()}
+
+
+def _can_fire(network: Network, layout: MegakernelLayout, row: FiringRow,
+              fns: _ActorFns, consts: List[jax.Array], rings,
+              cursors: jax.Array, actors: Tuple[Any, ...]) -> jax.Array:
+    """Blocking predicate of paper §2.2 on scratch occupancies — mirrors
+    ``executor._can_fire`` (same and-tree order, control token peeked)."""
+    a = network.actors[row.name]
+    specs = layout.fifo_specs
+    ok = jnp.bool_(True)
+    if row.has_ready:
+        ok = jnp.logical_and(ok, fns.ready.call(
+            (actors[row.index],), [consts[i] for i in fns.ready.const_ids]))
+    if row.control is not None:
+        ci = row.control
+        ok = jnp.logical_and(ok, cursors[ci, _OCC] >= 1)  # can_peek
+        rates = _rates_for(a, fns, consts,
+                           _ring_peek(specs[ci], rings[ci], cursors, ci))
+    else:
+        rates = _rates_for(a, fns, consts, None)
+    for pb in row.inputs:
+        spec = specs[pb.fifo]
+        have = cursors[pb.fifo, _OCC] >= spec.rate
+        ok = jnp.logical_and(ok, jnp.logical_or(rates[pb.port] == 0, have))
+    for pb in row.outputs:
+        spec = specs[pb.fifo]
+        room = (cursors[pb.fifo, _OCC] + spec.rate
+                <= spec.writable_occupancy_bound)
+        ok = jnp.logical_and(ok, jnp.logical_or(rates[pb.port] == 0, room))
+    return ok
+
+
+def _max_fireable(layout: MegakernelLayout, row: FiringRow,
+                  cursors: jax.Array) -> jax.Array:
+    """Occupancy-derived multi-firing bound — mirrors
+    ``executor._max_fireable`` (PRUNE-style decidable bound)."""
+    if row.control is not None:
+        return jnp.minimum(jnp.int32(_MAX_FIRINGS_PER_VISIT),
+                           cursors[row.control, _OCC])
+    specs = layout.fifo_specs
+    k = jnp.int32(_MAX_FIRINGS_PER_VISIT)
+    for pb in row.inputs:
+        k = jnp.minimum(k, cursors[pb.fifo, _OCC] // specs[pb.fifo].rate)
+    for pb in row.outputs:
+        spec = specs[pb.fifo]
+        room = spec.writable_occupancy_bound - cursors[pb.fifo, _OCC]
+        k = jnp.minimum(k, room // spec.rate)
+    return k
+
+
+def _fire(network: Network, layout: MegakernelLayout, row: FiringRow,
+          fns: _ActorFns, consts: List[jax.Array], rings,
+          cursors: jax.Array,
+          actors: Tuple[Any, ...]) -> Tuple[jax.Array, Tuple[Any, ...]]:
+    """One firing against the scratch rings — mirrors
+    ``executor.fire_actor``'s masked (phase=None) path step for step:
+    control consume, rates, masked input reads, predicated body, masked
+    output writes."""
+    a = network.actors[row.name]
+    specs = layout.fifo_specs
+
+    ctrl_tok = None
+    if row.control is not None:
+        ci = row.control
+        ctok, cursors = _ring_read(specs[ci], rings[ci], cursors, ci)
+        ctrl_tok = ctok[0]
+    rates = _rates_for(a, fns, consts, ctrl_tok)
+
+    windows: Dict[str, jax.Array] = {}
+    for pb in row.inputs:
+        windows[pb.port], cursors = _ring_read_masked(
+            specs[pb.fifo], rings[pb.fifo], cursors, pb.fifo,
+            rates[pb.port] > 0)
+
+    enabled_list = [rates[p] for p in (*a.in_ports, *a.out_ports)]
+    concrete_on = any(_is_concrete(e) and int(e) > 0 for e in enabled_list)
+    if enabled_list:
+        any_enabled = functools.reduce(
+            jnp.logical_or, [e > 0 for e in enabled_list])
+    else:
+        any_enabled = jnp.bool_(True)
+
+    out_specs = {pb.port: specs[pb.fifo] for pb in row.outputs}
+
+    def run_body(operand):
+        st, wins = operand
+        new_st, outs = fns.fire.call(
+            (st, wins, rates), [consts[i] for i in fns.fire.const_ids])
+        missing = set(a.out_ports) - set(outs)
+        if missing:
+            raise ValueError(
+                f"actor {row.name}: fire() missing outputs {sorted(missing)}")
+        outs = {
+            p: jnp.asarray(outs[p], out_specs[p].dtype).reshape(
+                (out_specs[p].rate,) + tuple(out_specs[p].token_shape))
+            for p in a.out_ports
+        }
+        return new_st, outs
+
+    def skip_body(operand):
+        st, _ = operand
+        zeros = {
+            p: jnp.zeros((s.rate,) + tuple(s.token_shape), s.dtype)
+            for p, s in out_specs.items()
+        }
+        return st, zeros
+
+    if a.is_dynamic and not concrete_on:
+        new_actor_state, outputs = jax.lax.cond(
+            any_enabled, run_body, skip_body, (actors[row.index], windows))
+    else:
+        new_actor_state, outputs = run_body((actors[row.index], windows))
+
+    for pb in row.outputs:
+        cursors = _ring_write_masked(
+            specs[pb.fifo], rings[pb.fifo], cursors, pb.fifo,
+            outputs[pb.port], rates[pb.port] > 0)
+
+    actors = actors[:row.index] + (new_actor_state,) + actors[row.index + 1:]
+    return cursors, actors
+
+
+# --------------------------------------------------------------------------- #
+# Kernel body construction.
+# --------------------------------------------------------------------------- #
+def _build_kernel(network: Network, layout: MegakernelLayout,
+                  fns: Dict[str, _ActorFns],
+                  actor_treedef, scalar_leaf: List[bool],
+                  scalar_const: List[bool],
+                  multi_firing: bool, max_sweeps: int) -> Callable:
+    n_fifos = len(layout.fifo_specs)
+    n_actors = len(network.actors)
+    n_leaves = len(scalar_leaf)
+    n_consts = len(scalar_const)
+
+    def kernel(*refs):
+        buf_in = refs[:n_fifos]
+        cur_in = refs[n_fifos]
+        leaf_in = refs[n_fifos + 1:n_fifos + 1 + n_leaves]
+        const_in = refs[n_fifos + 1 + n_leaves:
+                        n_fifos + 1 + n_leaves + n_consts]
+        o = n_fifos + 1 + n_leaves + n_consts
+        buf_out = refs[o:o + n_fifos]
+        cur_out = refs[o + n_fifos]
+        leaf_out = refs[o + n_fifos + 1:o + n_fifos + 1 + n_leaves]
+        counts_ref = refs[o + n_fifos + 1 + n_leaves]
+        sweeps_ref = refs[o + n_fifos + 2 + n_leaves]
+        rings = refs[o + n_fifos + 3 + n_leaves:]
+        assert len(rings) == n_fifos
+
+        # 1. Stage every Eq. 1 ring buffer into device scratch; read the
+        #    cursor block, actor states and hoisted closure arrays into
+        #    loop-carried / trace-bound values.
+        for i in range(n_fifos):
+            rings[i][...] = buf_in[i][...]
+        cursors0 = cur_in[...]
+        leaves0 = [leaf_in[j][...].reshape(()) if scalar_leaf[j]
+                   else leaf_in[j][...] for j in range(n_leaves)]
+        actors0 = tuple(jax.tree.unflatten(actor_treedef, leaves0))
+        consts = [const_in[j][...].reshape(()) if scalar_const[j]
+                  else const_in[j][...] for j in range(n_consts)]
+
+        # 2. Device-resident sweep loop (mirrors executor._compile_dynamic:
+        #    same visit order, same per-visit multi-firing bound, same
+        #    quiescence condition, same sweep accounting).
+        def attempt(row, cursors, actors, counts):
+            ready = _can_fire(network, layout, row, fns[row.name], consts,
+                              rings, cursors, actors)
+
+            def do(c):
+                cursors, actors, counts = c
+                cursors, actors = _fire(network, layout, row, fns[row.name],
+                                        consts, rings, cursors, actors)
+                return cursors, actors, counts.at[row.index].add(1)
+
+            cursors, actors, counts = jax.lax.cond(
+                ready, do, lambda c: c, (cursors, actors, counts))
+            return cursors, actors, counts, ready
+
+        def sweep(carry):
+            cursors, actors, counts, _, sweeps = carry
+            fired_any = jnp.bool_(False)
+            for row in layout.firing_table:
+                if multi_firing:
+                    k = _max_fireable(layout, row, cursors)
+
+                    def body(_, c, row=row):
+                        cursors, actors, counts, fired = c
+                        cursors, actors, counts, ready = attempt(
+                            row, cursors, actors, counts)
+                        return (cursors, actors, counts,
+                                jnp.logical_or(fired, ready))
+
+                    cursors, actors, counts, fired = jax.lax.fori_loop(
+                        0, k, body,
+                        (cursors, actors, counts, jnp.bool_(False)))
+                else:
+                    cursors, actors, counts, fired = attempt(
+                        row, cursors, actors, counts)
+                fired_any = jnp.logical_or(fired_any, fired)
+            return cursors, actors, counts, fired_any, sweeps + 1
+
+        def cond(carry):
+            _, _, _, fired_any, sweeps = carry
+            return jnp.logical_and(fired_any, sweeps < max_sweeps)
+
+        carry = (cursors0, actors0, jnp.zeros((n_actors,), jnp.int32),
+                 jnp.bool_(True), jnp.int32(0))
+        cursors, actors, counts, _, sweeps = jax.lax.while_loop(
+            cond, sweep, carry)
+
+        # 3. Copy the rings back out of scratch; emit cursors, actor
+        #    states, fire counts and the sweep count.
+        for i in range(n_fifos):
+            buf_out[i][...] = rings[i][...]
+        cur_out[...] = cursors
+        leaves = jax.tree.leaves(actors)
+        assert len(leaves) == n_leaves
+        for j in range(n_leaves):
+            leaf_out[j][...] = (leaves[j].reshape(1) if scalar_leaf[j]
+                                else leaves[j])
+        counts_ref[...] = counts
+        sweeps_ref[0] = sweeps
+
+    return kernel
+
+
+# --------------------------------------------------------------------------- #
+# Public entrypoint.
+# --------------------------------------------------------------------------- #
+def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
+                       mode: RuntimeMode = RuntimeMode.PROPOSED,
+                       multi_firing: bool = True,
+                       interpret: Optional[bool] = None,
+                       layout: Optional[MegakernelLayout] = None) -> Callable:
+    """Compile the network into one persistent Pallas kernel.
+
+    Returns ``runner(state) -> (final_state, fire_counts, n_sweeps)`` with
+    the exact signature and bit-exact results of the token-driven dynamic
+    executor (``executor._compile_dynamic(..., return_sweeps=True)``).
+
+    ``interpret=None`` auto-selects Pallas interpret mode on non-TPU
+    backends (the tier-1 CPU fallback); pass an explicit bool to force
+    either path.  ``layout`` lets a caller that already lowered the
+    network (``Program``) pass its :class:`MegakernelLayout` instead of
+    lowering twice.
+    """
+    assert_mode_allows(network, mode)
+    if layout is None:
+        layout = lower_network(network)
+    fns, const_arrays = _hoist_consts(network, layout)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_fifos = len(layout.fifo_specs)
+    n_actors = len(network.actors)
+    actor_names = tuple(network.actors)
+    scalar_const = [c.ndim == 0 for c in const_arrays]
+    kernel_consts = [c.reshape(1) if s else c
+                     for c, s in zip(const_arrays, scalar_const)]
+
+    def run(state):
+        if not isinstance(state, NetworkState):
+            state = network.state_from_dict(state)
+        bufs = [f.buf for f in state.fifos]
+        cursors = jnp.stack(
+            [jnp.stack([jnp.asarray(f.rd, jnp.int32),
+                        jnp.asarray(f.wr, jnp.int32),
+                        jnp.asarray(f.occ, jnp.int32)])
+             for f in state.fifos])
+        leaves, treedef = jax.tree.flatten(tuple(state.actors))
+        leaves = [jnp.asarray(leaf) for leaf in leaves]
+        scalar_leaf = [leaf.ndim == 0 for leaf in leaves]
+        kernel_leaves = [leaf.reshape(1) if s else leaf
+                         for leaf, s in zip(leaves, scalar_leaf)]
+
+        kernel = _build_kernel(network, layout, fns, treedef, scalar_leaf,
+                               scalar_const, multi_firing, max_sweeps)
+        out_shape = (
+            [jax.ShapeDtypeStruct(b.shape, b.dtype) for b in bufs]
+            + [jax.ShapeDtypeStruct((n_fifos, 3), jnp.int32)]
+            + [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in kernel_leaves]
+            + [jax.ShapeDtypeStruct((n_actors,), jnp.int32),
+               jax.ShapeDtypeStruct((1,), jnp.int32)]
+        )
+        scratch_shapes = [
+            pltpu.VMEM(layout.scratch_shape(i), layout.fifo_specs[i].dtype)
+            for i in range(n_fifos)
+        ]
+        outs = pl.pallas_call(
+            kernel,
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )(*bufs, cursors, *kernel_leaves, *kernel_consts)
+
+        bufs_o = outs[:n_fifos]
+        cur_o = outs[n_fifos]
+        leaves_o = outs[n_fifos + 1:n_fifos + 1 + len(kernel_leaves)]
+        counts_vec = outs[-2]
+        sweeps = outs[-1][0]
+        leaves_o = [l.reshape(()) if s else l
+                    for l, s in zip(leaves_o, scalar_leaf)]
+        actors = tuple(jax.tree.unflatten(treedef, leaves_o))
+        fifos = tuple(
+            FifoState(buf=bufs_o[i], rd=cur_o[i, _RD], wr=cur_o[i, _WR],
+                      occ=cur_o[i, _OCC])
+            for i in range(n_fifos))
+        final = NetworkState(fifos=fifos, actors=actors,
+                             fifo_names=state.fifo_names,
+                             actor_names=state.actor_names)
+        counts = {nm: counts_vec[i] for i, nm in enumerate(actor_names)}
+        return final, counts, sweeps
+
+    jitted = jax.jit(run)
+
+    def runner(state):
+        return jitted(state)
+
+    # Exposed for Program.stats: the hoisted closure arrays are kernel
+    # operands living in HBM alongside the state pytree.
+    runner.hoisted_const_bytes = int(sum(
+        c.size * c.dtype.itemsize for c in const_arrays))
+    return runner

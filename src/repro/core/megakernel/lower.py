@@ -1,0 +1,166 @@
+"""Lowering pass: Network -> megakernel scratch layout + firing table.
+
+The megakernel backend runs a whole accelerated subnetwork as ONE
+persistent Pallas kernel (paper §3.3 made literal): every Eq. 1 FIFO ring
+buffer lives in device scratch memory for the kernel's entire lifetime,
+and the token-driven sweep loop — the part the paper keeps resident on the
+device instead of round-tripping dispatch decisions through the host —
+runs *inside* the kernel.  This module is the build-time half: it flattens
+the validated :class:`~repro.core.network.Network` into the static tables
+the kernel body is traced from.
+
+Outputs of :func:`lower_network`:
+
+  * **scratch layout** — one ring-buffer scratch allocation per channel,
+    shaped ``(capacity_tokens, *token_shape)`` straight from the Eq. 1
+    capacity law (``FifoSpec.capacity_tokens``), plus one packed
+    ``(n_fifos, 3)`` int32 cursor block (rd / wr / occ per channel, the
+    kernel's register-resident analogue of ``FifoState``'s scalars);
+  * **firing table** — one :class:`FiringRow` per actor in network
+    declaration order (the same visit order as the token-driven host
+    scheduler, so sweep counts and final states match bit for bit), each
+    row resolving the actor's control / input / output ports to flat
+    channel indices at build time so the traced kernel never touches a
+    name-keyed dict;
+  * reused analyses — ``Network.register_fifos`` (channels the static
+    specializer proves transient; the megakernel keeps them ring-buffered
+    for bit-identity with the dynamic executor but reports them as the
+    candidates a future in-kernel forwarding pass would keep VMEM-only)
+    and :func:`~repro.core.schedule.phase_unroll_period` (the unroll
+    period a static in-kernel prologue would use; recorded for the stats
+    table and the ROADMAP follow-on, not yet acted on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.fifo import FifoSpec
+from repro.core.network import Network
+from repro.core.schedule import phase_unroll_period
+
+# One packed cursor row per channel: (rd, wr, occ) int32.
+CURSOR_FIELDS = 3
+_CURSOR_ITEMSIZE = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class PortBinding:
+    """One regular port resolved to its flat channel index."""
+
+    port: str
+    fifo: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FiringRow:
+    """One actor's row in the firing table.
+
+    ``control`` is the flat index of the control channel (None for static
+    actors); ``inputs`` / ``outputs`` are the regular ports in declaration
+    order — the same order ``fire_actor`` consumes them, which the kernel
+    must preserve for bit-identical cursor arithmetic.
+    """
+
+    name: str
+    index: int
+    control: Optional[int]
+    inputs: Tuple[PortBinding, ...]
+    outputs: Tuple[PortBinding, ...]
+    is_dynamic: bool
+    has_ready: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class MegakernelLayout:
+    """Static layout of one lowered network (everything the kernel trace
+    needs, nothing resolved per sweep)."""
+
+    fifo_names: Tuple[str, ...]
+    fifo_specs: Tuple[FifoSpec, ...]
+    firing_table: Tuple[FiringRow, ...]
+    # Channels the specialized static executor would register-allocate
+    # (Network.register_fifos).  Kept ring-buffered here for bit-identity
+    # with compile_dynamic; reported so stats can show how much of the
+    # scratch footprint a forwarding pass would reclaim.
+    transient_fifos: frozenset
+    # phase_unroll_period over the buffered channels — the unroll a static
+    # in-kernel prologue would use (ROADMAP follow-on; diagnostic today).
+    unroll_period: int
+
+    # -- scratch accounting (the paper's Table 1, device-side) ---------- #
+    @property
+    def ring_scratch_bytes(self) -> int:
+        """Eq. 1 capacities summed — bytes of ring buffer held in scratch."""
+        return sum(s.capacity_bytes for s in self.fifo_specs)
+
+    @property
+    def cursor_bytes(self) -> int:
+        return len(self.fifo_specs) * CURSOR_FIELDS * _CURSOR_ITEMSIZE
+
+    @property
+    def scratch_bytes(self) -> int:
+        return self.ring_scratch_bytes + self.cursor_bytes
+
+    @property
+    def transient_scratch_bytes(self) -> int:
+        """Scratch bytes a forwarding pass over transient channels would
+        reclaim (they would become traced values, not buffers)."""
+        return sum(s.capacity_bytes for s in self.fifo_specs
+                   if s.name in self.transient_fifos)
+
+    def scratch_shape(self, fifo_index: int) -> Tuple[int, ...]:
+        """Ring scratch shape of one channel: Eq. 1 capacity x token."""
+        spec = self.fifo_specs[fifo_index]
+        return (spec.capacity_tokens,) + tuple(spec.token_shape)
+
+
+def lower_network(network: Network) -> MegakernelLayout:
+    """Flatten a validated network into the megakernel's static tables.
+
+    Pure build-time work: reuses the port->spec tables the network
+    precomputes (``in_port_specs`` / ``out_port_specs`` /
+    ``control_specs``) and the ``register_fifos`` / phase-cycle analyses,
+    so lowering adds no per-run cost and no new validation rules — any
+    network the dynamic executor accepts lowers.
+    """
+    fifo_names = tuple(network.fifos)
+    fifo_specs = tuple(network.fifos[n] for n in fifo_names)
+    rows = []
+    for index, (name, actor) in enumerate(network.actors.items()):
+        ctl = network.control_specs[name]
+        rows.append(FiringRow(
+            name=name,
+            index=index,
+            control=None if ctl is None else ctl[1],
+            inputs=tuple(PortBinding(p, fi)
+                         for p, _, fi in network.in_port_specs[name]),
+            outputs=tuple(PortBinding(p, fi)
+                          for p, _, fi in network.out_port_specs[name]),
+            is_dynamic=actor.is_dynamic,
+            has_ready=actor.ready is not None,
+        ))
+    period = phase_unroll_period(
+        [spec.n_write_phases for name, spec in network.fifos.items()
+         if name not in network.register_fifos])
+    return MegakernelLayout(
+        fifo_names=fifo_names,
+        fifo_specs=fifo_specs,
+        firing_table=tuple(rows),
+        transient_fifos=frozenset(network.register_fifos),
+        unroll_period=period,
+    )
+
+
+def state_hbm_bytes(state: Any) -> int:
+    """Total bytes of a state pytree as it sits in HBM (kernel in/out
+    operands: ring buffers, cursors, actor states) — the 'HBM' column of
+    the scratch-vs-HBM table in EXPERIMENTS.md §Megakernel."""
+    total = 0
+    for leaf in jax.tree.leaves(state):
+        total += (int(np.prod(np.shape(leaf), dtype=np.int64))
+                  * np.dtype(leaf.dtype).itemsize)
+    return total

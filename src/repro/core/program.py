@@ -11,7 +11,8 @@ placement.  :class:`Program` folds them behind one object::
     result = prog.run()                # RunResult(state, counts, sweeps)
 
 Every execution policy is a field of :class:`ExecutionPlan` — the mode
-(static scan / token-driven dynamic / interpreted), trace-time
+(static scan / token-driven dynamic / interpreted / persistent-Pallas
+megakernel, see :mod:`repro.core.megakernel`), trace-time
 specialization, multi-firing sweeps, buffer donation, and *heterogeneous
 placement*: ``accelerated=[...]`` splits the network at construction so
 boundary channels become feed/fetch actors, and :meth:`Program.stream`
@@ -27,8 +28,9 @@ shims delegating here; results are bit-identical (pinned by
 from __future__ import annotations
 
 import dataclasses
+import enum
 import functools
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +42,35 @@ from repro.core.mapping import heterogeneous_split
 from repro.core.network import (Network, NetworkState, iteration_token_flops)
 from repro.core.schedule import phase_unroll_period
 
-_MODES = ("static", "dynamic", "interpreted")
+
+class Mode(str, enum.Enum):
+    """Execution backends of :class:`ExecutionPlan`.
+
+    A ``str`` enum so plans written with bare strings (``mode="static"``)
+    and with the enum (``mode=Mode.MEGAKERNEL``) are interchangeable.
+    """
+
+    STATIC = "static"
+    DYNAMIC = "dynamic"
+    INTERPRETED = "interpreted"
+    # Device-resident scheduling: the whole network as ONE persistent
+    # Pallas kernel — Eq. 1 rings in scratch memory, the token-driven
+    # sweep loop inside the kernel (repro.core.megakernel).
+    MEGAKERNEL = "megakernel"
+
+
+#: Convenience alias so call sites can write ``ExecutionPlan(mode=MEGAKERNEL)``.
+MEGAKERNEL = Mode.MEGAKERNEL
+
+_MODES = tuple(m.value for m in Mode)
+
+# donate="auto" threshold: donation is only profitable when the state the
+# call consumes is dominated by register-allocatable traffic; once the
+# *buffered* (ring-resident) channel bytes grow past this, the in-place
+# aliasing constraint costs more than the elided copies (measured on MD:
+# 707 -> 415 tok/s donated, EXPERIMENTS.md §Executor perf — negative
+# result; DPD, whose bulk channels registerize, gains 1.2x).
+_DONATE_AUTO_BUFFERED_BYTES_MAX = 1 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,22 +81,43 @@ class ExecutionPlan:
       mode:          ``"static"`` (whole network -> one jitted scan),
                      ``"dynamic"`` (token-driven ``while_loop`` scheduler,
                      runs to quiescence), ``"interpreted"`` (eager
-                     per-actor firing, the GPP-thread analogue).
+                     per-actor firing, the GPP-thread analogue), or
+                     ``"megakernel"`` / :data:`Mode.MEGAKERNEL` (one
+                     persistent Pallas kernel: Eq. 1 rings in scratch,
+                     the token-driven sweep loop device-resident; runs to
+                     quiescence like dynamic mode and is bit-identical to
+                     it).
       n_iterations:  iteration count for static/interpreted schedules (and
                      the chunk length of :meth:`Program.stream`); dynamic
-                     mode runs to quiescence and ignores it unless
-                     ``accelerated`` needs it for feed slab sizing.
+                     and megakernel modes run to quiescence and ignore it
+                     unless ``accelerated`` needs it for feed slab sizing.
       specialize:    static mode: trace-time cursor specialization +
                      transient-channel register allocation.
-      multi_firing:  dynamic mode: fire each actor up to its occupancy
-                     bound per sweep.
+      multi_firing:  dynamic/megakernel modes: fire each actor up to its
+                     occupancy bound per sweep.
       donate:        donate the input state so XLA reuses its buffers.
+                     Default ``"auto"``: donation is applied only to
+                     ``run()`` calls where the program owns the state
+                     (``state=None`` — a private copy is donated, so
+                     caller-held arrays are never invalidated), and only
+                     when the buffered (non-register-allocated) channel
+                     bytes are small enough that copy elision wins — the
+                     measured heuristic behind the MD donate regression
+                     (EXPERIMENTS.md §Executor perf).  ``donate=True``
+                     keeps the legacy semantics: every call donates,
+                     including states the caller passed in (which are
+                     consumed).  Megakernel mode resolves donation to
+                     False regardless — buffers are staged through
+                     kernel scratch, there is nothing to donate.
       runtime_mode:  ``RuntimeMode.PROPOSED`` (this paper) or
                      ``STATIC_DAL`` (reference framework: SDF-only
                      accelerator, dynamic actors rejected).
       order:         optional static firing order (defaults topological).
-      max_sweeps:    dynamic mode sweep bound.
+      max_sweeps:    dynamic/megakernel sweep bound.
       unroll_bound:  static mode phase-unroll period cap.
+      interpret:     megakernel mode: force Pallas interpret mode on
+                     (True) or off (False); ``None`` auto-selects
+                     interpret off-TPU (the tier-1 CPU fallback).
       accelerated:   optional actor subset mapped to the accelerator: the
                      network is split (``heterogeneous_split``) and the
                      plan executes the accelerator subnetwork, with
@@ -74,22 +125,29 @@ class ExecutionPlan:
                      :meth:`Program.stream` as the host transfer loop.
     """
 
-    mode: str = "static"
+    mode: Union[str, Mode] = "static"
     n_iterations: Optional[int] = None
     specialize: bool = True
     multi_firing: bool = True
-    donate: bool = False
+    donate: Union[bool, str] = "auto"
     runtime_mode: RuntimeMode = RuntimeMode.PROPOSED
     order: Optional[Tuple[str, ...]] = None
     max_sweeps: int = 1_000_000
     unroll_bound: int = 6
+    interpret: Optional[bool] = None
     accelerated: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self) -> None:
+        if isinstance(self.mode, Mode):
+            object.__setattr__(self, "mode", self.mode.value)
         if self.mode not in _MODES:
             raise ValueError(
                 f"ExecutionPlan.mode must be one of {_MODES}, got "
                 f"{self.mode!r}")
+        if not (isinstance(self.donate, bool) or self.donate == "auto"):
+            raise ValueError(
+                f"ExecutionPlan.donate must be True, False or 'auto', got "
+                f"{self.donate!r}")
         if self.order is not None:
             object.__setattr__(self, "order", tuple(self.order))
         if self.accelerated is not None:
@@ -132,6 +190,14 @@ class ProgramStats:
     ``actor_window_bytes`` the bytes moved through that actor's ports per
     firing (Eq. 1 windows); ``actor_intensity`` their ratio — the
     operational-intensity coordinate of a roofline plot.
+
+    Megakernel programs additionally report the device-residency split:
+    ``scratch_bytes`` (Eq. 1 rings + cursor block held in kernel scratch
+    for the whole run), ``transient_scratch_bytes`` (the subset a future
+    in-kernel forwarding pass over ``register_fifos`` would reclaim) and
+    ``hbm_state_bytes`` (the kernel's HBM operands — ring copies, actor
+    states, hoisted closure arrays — measured from the last run's state).
+    ``resolved_donate`` is the per-graph outcome of ``donate="auto"``.
     """
 
     mode: str
@@ -145,6 +211,10 @@ class ProgramStats:
     actor_intensity: Dict[str, float]
     last_sweeps: Optional[int] = None
     last_fire_counts: Optional[Dict[str, int]] = None
+    resolved_donate: Optional[bool] = None
+    scratch_bytes: Optional[int] = None
+    transient_scratch_bytes: Optional[int] = None
+    hbm_state_bytes: Optional[int] = None
 
 
 class Program:
@@ -172,22 +242,78 @@ class Program:
             self._fetch_by_fifo = {f[len("__fetch_"):]: f for f in fetches}
         else:
             self.network = network
+        self.donate = self._resolve_donate(plan, self.network)
+        self._layout = None
+        if plan.mode == "megakernel":
+            from repro.core.megakernel import lower_network
+            self._layout = lower_network(self.network)
+        # donate="auto" must never consume a state the *caller* passed in
+        # (donated inputs are invalidated; callers legitimately reuse
+        # states across runs), so auto donation applies only to run(None),
+        # where the program donates its own private copy.  Two runners are
+        # built for that case; jit tracing is lazy, so an unused variant
+        # costs nothing.
+        if plan.mode == "megakernel":
+            # Donation is meaningless here (buffers are staged through
+            # kernel scratch): one runner serves both donate paths and
+            # no private copy is ever made (_resolve_donate -> False).
+            runner = self._make_runner(False)
+            self._runners = {False: runner, True: runner}
+        elif isinstance(plan.donate, bool):
+            self._runners = {plan.donate: self._make_runner(plan.donate)}
+        else:
+            self._runners = {False: self._make_runner(False)}
+            if self.donate:
+                self._runners[True] = self._make_runner(True)
+
+    def _make_runner(self, donate: bool):
+        plan = self.plan
         order = list(plan.order) if plan.order is not None else None
         if plan.mode == "static":
-            self._runner = _compile_static(
+            return _compile_static(
                 self.network, plan.n_iterations, mode=plan.runtime_mode,
-                order=order, donate=plan.donate, specialize=plan.specialize,
+                order=order, donate=donate, specialize=plan.specialize,
                 unroll_bound=plan.unroll_bound)
-        elif plan.mode == "dynamic":
-            self._runner = _compile_dynamic(
+        if plan.mode == "dynamic":
+            return _compile_dynamic(
                 self.network, plan.max_sweeps, mode=plan.runtime_mode,
-                multi_firing=plan.multi_firing, donate=plan.donate,
+                multi_firing=plan.multi_firing, donate=donate,
                 return_sweeps=True)
-        else:
-            self._runner = functools.partial(
-                _run_interpreted, self.network,
-                n_iterations=plan.n_iterations, order=order,
-                donate=plan.donate)
+        if plan.mode == "megakernel":
+            from repro.core.megakernel import compile_megakernel
+            return compile_megakernel(
+                self.network, max_sweeps=plan.max_sweeps,
+                mode=plan.runtime_mode, multi_firing=plan.multi_firing,
+                interpret=plan.interpret, layout=self._layout)
+        return functools.partial(
+            _run_interpreted, self.network,
+            n_iterations=plan.n_iterations, order=order, donate=donate)
+
+    @staticmethod
+    def _resolve_donate(plan: ExecutionPlan, network: Network) -> bool:
+        """Resolve ``donate="auto"`` per graph.
+
+        Donation helps only while the ring-buffered state stays small:
+        once the buffered (non-register-allocated) channel bytes dominate,
+        the aliasing constraint regresses throughput (MD: 707 -> 415
+        tok/s; DPD, whose bulk channels registerize, gains 1.2x —
+        EXPERIMENTS.md §Executor perf).  The megakernel stages buffers
+        through kernel scratch itself, so donation buys nothing there.
+        """
+        if plan.mode == "megakernel":
+            return False    # even explicit donate=True: nothing to donate
+        if isinstance(plan.donate, bool):
+            return plan.donate
+        # register_fifos leave their ring buffers untouched ONLY under the
+        # specialized static executor; every other mode keeps those rings
+        # live, so their bytes count as buffered there.
+        registerized = (network.register_fifos
+                        if plan.mode == "static" and plan.specialize
+                        else frozenset())
+        buffered = sum(
+            spec.capacity_bytes for name, spec in network.fifos.items()
+            if name not in registerized)
+        return buffered <= _DONATE_AUTO_BUFFERED_BYTES_MAX
 
     # ------------------------------------------------------------------ #
     def init_state(self) -> NetworkState:
@@ -199,20 +325,31 @@ class Program:
         """Execute once from ``state`` (fresh :meth:`init_state` if None).
 
         Legacy ``{"fifos": ..., "actors": ...}`` dict states are accepted.
-        With ``plan.donate`` the input state's buffers are consumed.
+        With an explicit ``plan.donate=True`` a passed-in state's buffers
+        are consumed; under the default ``"auto"`` only runs that create
+        their own state donate (a private copy), so caller-held arrays
+        stay valid.
         """
         st = self.init_state() if state is None else state
-        if state is None and self.plan.donate:
-            # init_state() may alias arrays staged in the graph closure
-            # (e.g. a source's signal slab); donating those would poison
-            # every later init_state() of the network.  When run() creates
-            # the state itself, donate a private copy instead.
-            st = jax.tree.map(jnp.copy, st)
-        if self.plan.mode == "dynamic":
-            final, counts, sweeps = self._runner(st)
+        if state is None:
+            donate_now = self.donate
+            if donate_now:
+                # init_state() may alias arrays staged in the graph closure
+                # (e.g. a source's signal slab); donating those would
+                # poison every later init_state() of the network.  When
+                # run() creates the state itself, donate a private copy.
+                st = jax.tree.map(jnp.copy, st)
+        else:
+            # A caller-passed state is consumed only under an *explicit*
+            # donate=True plan; the "auto" heuristic never invalidates
+            # arrays the caller may still hold.
+            donate_now = self.plan.donate is True
+        runner = self._runners[donate_now]
+        if self.plan.mode in ("dynamic", "megakernel"):
+            final, counts, sweeps = runner(st)
             result = RunResult(final, fire_counts=counts, sweeps=sweeps)
         else:  # static and interpreted runners both return the bare state
-            result = RunResult(self._runner(st))
+            result = RunResult(runner(st))
         self._last = result
         self._last_is_stream_chunk = False
         return result
@@ -358,6 +495,18 @@ class Program:
         intensity = {n: (flops[n] / byts[n] if byts[n] else 0.0)
                      for n in net.actors}
         last = self._last
+        scratch = transient = hbm = None
+        if self._layout is not None:
+            from repro.core.megakernel import state_hbm_bytes
+            scratch = self._layout.scratch_bytes
+            transient = self._layout.transient_scratch_bytes
+            if last is not None:
+                # State pytree (rings, cursors, actor states) plus the
+                # hoisted closure arrays — every HBM operand the kernel
+                # touches.
+                hbm = (state_hbm_bytes(last.state)
+                       + getattr(self._runners[False],
+                                 "hoisted_const_bytes", 0))
         return ProgramStats(
             mode=self.plan.mode,
             n_actors=len(net.actors),
@@ -373,4 +522,8 @@ class Program:
             last_fire_counts=({k: int(v) for k, v in last.fire_counts.items()}
                               if last is not None
                               and last.fire_counts is not None else None),
+            resolved_donate=self.donate,
+            scratch_bytes=scratch,
+            transient_scratch_bytes=transient,
+            hbm_state_bytes=hbm,
         )

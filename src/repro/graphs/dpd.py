@@ -244,7 +244,11 @@ def bench_workload(n_firings: int, block_l: int = BLOCK_L, seed: int = 1,
     Shared by benchmarks/bench_executors.py and tests/test_perf_smoke.py so
     the measured workload (and its Msamples accounting: ``n_firings *
     block_l`` complex samples end to end) is defined in one place.
+    Delegates the signal staging to ``repro.graphs.factories.make_dpd``
+    (single source of truth), keeping this module's historical
+    ``default_active_schedule`` reconfiguration pattern.
     """
-    rng = np.random.default_rng(seed)
-    sig = jnp.asarray(rng.normal(size=(2, n_firings * block_l)).astype(np.float32))
-    return build_dpd(n_firings, block_l=block_l, signal=sig, **build_kw)
+    from repro.graphs.factories import make_dpd
+    build_kw.setdefault("active_schedule", default_active_schedule(n_firings))
+    net, _ = make_dpd(n_firings, block_l=block_l, seed=seed, **build_kw)
+    return net

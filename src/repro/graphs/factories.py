@@ -1,0 +1,76 @@
+"""Shared paper-graph factories: one definition of each benchmark/test
+workload, with reproducible staged data.
+
+Grew out of ``tests/_graph_factories.py`` (which now re-exports from
+here): the same builders were being re-implemented inline by
+``benchmarks/bench_paper_tables.py`` / ``bench_executors.py`` /
+``bench_megakernel.py``, and benchmarks must not import from ``tests/``.
+Callers pick sizes; every factory returns ``(network, n_iterations)``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Network, NetworkState
+
+#: Active-filter counts exercising rate-0 firings on most branches
+#: (2..10 active of 10) — the equivalence suites' DPD schedule.
+DPD_SCHEDULE = np.array([2, 10, 5, 7, 3, 9], np.int32)
+
+
+def states_identical(a: NetworkState, b: NetworkState) -> bool:
+    """Bit-identity of two network states (structure and every leaf)."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return (jax.tree.structure(a) == jax.tree.structure(b)
+            and all(np.array_equal(np.asarray(x), np.asarray(y))
+                    for x, y in zip(la, lb)))
+
+
+def make_dpd(n_firings: int = 6, block_l: int = 256, seed: int = 0,
+             active_schedule: Optional[np.ndarray] = None,
+             **build_kw) -> Tuple[Network, int]:
+    """DPD (paper §4.2) with a reproducible random signal staged.
+
+    Defaults to :data:`DPD_SCHEDULE` truncated to ``n_firings`` so rate-0
+    firings hit most branches; pass ``active_schedule`` (or
+    ``static_all_active=True``) for the benchmark variants.
+    """
+    from repro.graphs.dpd import build_dpd
+    if active_schedule is None:
+        active_schedule = DPD_SCHEDULE[:n_firings]
+    rng = np.random.default_rng(seed)
+    sig = jnp.asarray(rng.normal(size=(2, n_firings * block_l))
+                      .astype(np.float32))
+    return build_dpd(n_firings, active_schedule=active_schedule,
+                     block_l=block_l, signal=sig, **build_kw), n_firings
+
+
+def make_motion_detection(n_frames: int = 12, rate: int = 4,
+                          frame_hw: Tuple[int, int] = (240, 320),
+                          seed: int = 1) -> Tuple[Network, int]:
+    """Motion detection (paper §4.1) with a reproducible random video —
+    the delay-channel (Fig. 4 dotted edge) workload."""
+    from repro.graphs.motion_detection import build_motion_detection
+    rng = np.random.default_rng(seed)
+    video = jnp.asarray(rng.uniform(0, 255, (n_frames,) + tuple(frame_hw))
+                        .astype(np.float32))
+    return build_motion_detection(n_frames, rate=rate, frame_hw=frame_hw,
+                                  video=video), n_frames // rate
+
+
+def make_moe(n_firings: int = 3, n_tokens: int = 16, d_model: int = 32,
+             n_experts: int = 4, top_k: int = 2, d_ff: int = 64,
+             capacity_factor: float = 2.0, seed: int = 0
+             ) -> Tuple[Network, int]:
+    """MoE-as-actors (idle experts = rate-0 firings on the compiled path)."""
+    from repro.graphs.moe_as_actors import build_moe_network
+    from repro.models.moe import moe_init
+    key = jax.random.PRNGKey(seed)
+    params = moe_init(key, d_model, n_experts, d_ff)
+    xs = jax.random.normal(key, (n_firings * n_tokens, d_model), jnp.float32)
+    return build_moe_network(params, n_tokens, d_model, top_k,
+                             capacity_factor, n_firings, xs), n_firings

@@ -1,45 +1,21 @@
-"""Shared paper-graph factories + state comparators for the executor,
-program-API and equivalence tests (one definition; callers pick sizes)."""
+"""Test-side shim over the shared graph factories.
+
+The builders moved to ``repro.graphs.factories`` so benchmarks can use
+them without importing from ``tests/``; this module keeps the historical
+import path for the test suite and adds the asserting state comparator.
+"""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import NetworkState
+from repro.graphs.factories import (DPD_SCHEDULE, make_dpd, make_moe,
+                                    make_motion_detection, states_identical)
 
-DPD_SCHEDULE = np.array([2, 10, 5, 7, 3, 9], np.int32)
+__all__ = ["DPD_SCHEDULE", "assert_states_identical", "make_dpd",
+           "make_moe", "make_motion_detection", "states_identical"]
 
 
 def assert_states_identical(a: NetworkState, b: NetworkState) -> None:
     assert jax.tree.structure(a) == jax.tree.structure(b)
     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
-
-
-def make_dpd(n_firings=6, block_l=256, seed=0):
-    """DPD with rate-0 firings on most branches (active counts 2..10)."""
-    from repro.graphs.dpd import build_dpd
-    sched = DPD_SCHEDULE[:n_firings]
-    rng = np.random.default_rng(seed)
-    sig = jnp.asarray(rng.normal(size=(2, n_firings * block_l))
-                      .astype(np.float32))
-    return build_dpd(n_firings, active_schedule=sched, block_l=block_l,
-                     signal=sig), n_firings
-
-
-def make_motion_detection(n_frames=12, rate=4, frame_hw=(240, 320), seed=1):
-    from repro.graphs.motion_detection import build_motion_detection
-    rng = np.random.default_rng(seed)
-    video = jnp.asarray(rng.uniform(0, 255, (n_frames,) + tuple(frame_hw))
-                        .astype(np.float32))
-    return build_motion_detection(n_frames, rate=rate, frame_hw=frame_hw,
-                                  video=video), n_frames // rate
-
-
-def make_moe(n_firings=3):
-    from repro.graphs.moe_as_actors import build_moe_network
-    from repro.models.moe import moe_init
-    key = jax.random.PRNGKey(0)
-    D, E, K, N = 32, 4, 2, 16
-    params = moe_init(key, D, E, 64)
-    xs = jax.random.normal(key, (n_firings * N, D), jnp.float32)
-    return build_moe_network(params, N, D, K, 2.0, n_firings, xs), n_firings

@@ -1,0 +1,168 @@
+"""Megakernel backend: bit-identity with the dynamic executor + Program
+integration.
+
+The acceptance bar of the megakernel PR: running a network as one
+persistent Pallas kernel (``ExecutionPlan(mode=Mode.MEGAKERNEL)``, rings
+in scratch, in-kernel sweep loop) must be *bit-identical* to the
+token-driven dynamic executor — final actor states, every ring buffer
+byte (stale slots included), cursors, fire counts AND sweep counts — on
+the graphs with genuinely dynamic rates: DPD (rate-0 firings on most
+branches), MoE-as-actors (idle experts), and motion detection (the Fig. 4
+delay channel with its initial token and copy-back).  All runs use Pallas
+interpret mode on CPU (the tier-1 fallback; ``interpret=None``
+auto-selects it off-TPU).
+"""
+import jax
+import numpy as np
+import pytest
+
+from _graph_factories import (assert_states_identical, make_dpd, make_moe,
+                              make_motion_detection)
+from repro.core import (MEGAKERNEL, ExecutionPlan, Mode, compile_megakernel,
+                        lower_network)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+GRAPHS = {
+    "dpd": lambda: make_dpd(n_firings=4, block_l=128),
+    "moe_as_actors": lambda: make_moe(3),
+    "motion_detection": lambda: make_motion_detection(
+        n_frames=12, rate=4, frame_hw=(48, 64)),
+}
+
+
+def _run_both(net):
+    dyn = net.compile(ExecutionPlan(mode="dynamic")).run()
+    mega = net.compile(ExecutionPlan(mode=Mode.MEGAKERNEL)).run()
+    return dyn, mega
+
+
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_megakernel_bit_identical_to_dynamic(graph):
+    net, _ = GRAPHS[graph]()
+    dyn, mega = _run_both(net)
+    assert_states_identical(dyn.state, mega.state)
+    assert ({k: int(v) for k, v in dyn.fire_counts.items()}
+            == {k: int(v) for k, v in mega.fire_counts.items()})
+    assert int(dyn.sweeps) == int(mega.sweeps)
+
+
+def test_megakernel_single_firing_sweeps_match_baseline():
+    """multi_firing=False mirrors the one-firing-per-visit baseline
+    scheduler: more sweeps, same final state (Kahn determinism)."""
+    net, _ = make_dpd(n_firings=4, block_l=128)
+    dyn = net.compile(ExecutionPlan(mode="dynamic", multi_firing=False)).run()
+    mega = net.compile(ExecutionPlan(mode=MEGAKERNEL,
+                                     multi_firing=False)).run()
+    assert_states_identical(dyn.state, mega.state)
+    assert int(dyn.sweeps) == int(mega.sweeps)
+    mf = net.compile(ExecutionPlan(mode=MEGAKERNEL)).run()
+    assert int(mf.sweeps) < int(mega.sweeps)
+    assert_states_identical(mf.state, mega.state)
+
+
+def test_megakernel_resumes_from_partial_state():
+    """The kernel is a pure state transformer: feeding a quiescent state
+    back in fires nothing (one empty sweep), and resuming a fresh source
+    continues exactly like the dynamic executor would."""
+    net, _ = make_moe(2)
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL))
+    r1 = prog.run()
+    r2 = prog.run(r1.state)
+    assert int(r2.sweeps) == 1                      # quiescent: empty sweep
+    assert all(int(v) == 0 for v in r2.fire_counts.values())
+    assert_states_identical(r1.state, r2.state)
+
+
+def test_megakernel_collect_and_output_match_dynamic():
+    net, _ = GRAPHS["motion_detection"]()
+    dyn_prog = net.compile(ExecutionPlan(mode="dynamic"))
+    mega_prog = net.compile(ExecutionPlan(mode=MEGAKERNEL))
+    want = np.asarray(dyn_prog.collect("sink", dyn_prog.run().state))
+    mega_prog.run()
+    got = np.asarray(mega_prog.collect("sink"))
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------- #
+# Lowering pass.
+# --------------------------------------------------------------------------- #
+def test_lowering_layout_tables():
+    net, _ = make_dpd(n_firings=4, block_l=128)
+    layout = lower_network(net)
+    assert layout.fifo_names == tuple(net.fifos)
+    assert len(layout.firing_table) == len(net.actors)
+    # Firing table preserves the dynamic executor's visit order and
+    # resolves every port to its flat channel index.
+    for row, (name, a) in zip(layout.firing_table, net.actors.items()):
+        assert row.name == name
+        assert row.is_dynamic == a.is_dynamic
+        assert [pb.port for pb in row.inputs] == list(a.in_ports)
+        assert [pb.port for pb in row.outputs] == list(a.out_ports)
+        for pb in row.inputs:
+            assert layout.fifo_names[pb.fifo] == net.in_fifo[(name, pb.port)]
+        if a.control_port is not None:
+            assert (layout.fifo_names[row.control]
+                    == net.in_fifo[(name, a.control_port)])
+        else:
+            assert row.control is None
+    # Scratch layout is the Eq. 1 capacity law verbatim.
+    for i, spec in enumerate(layout.fifo_specs):
+        assert layout.scratch_shape(i) == ((spec.capacity_tokens,)
+                                           + tuple(spec.token_shape))
+    assert layout.ring_scratch_bytes == net.buffer_bytes()
+    assert layout.transient_fifos == net.register_fifos
+    assert layout.scratch_bytes == (layout.ring_scratch_bytes
+                                    + 3 * 4 * len(net.fifos))
+
+
+def test_megakernel_stats_scratch_vs_hbm():
+    net, _ = make_moe(2)
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL))
+    st = prog.stats()
+    assert st.mode == "megakernel"
+    assert st.scratch_bytes == lower_network(net).scratch_bytes
+    assert st.scratch_bytes > net.buffer_bytes()      # rings + cursor block
+    assert st.hbm_state_bytes is None                 # nothing ran yet
+    assert st.resolved_donate is False                # scratch-staged anyway
+    prog.run()
+    st = prog.stats()
+    # HBM operands carry the ring copies plus actor states (source/sink
+    # slabs), so they dominate the scratch-resident footprint here.
+    assert st.hbm_state_bytes > st.scratch_bytes - lower_network(
+        net).cursor_bytes
+    assert st.last_sweeps >= 1
+    assert st.transient_scratch_bytes == sum(
+        net.fifos[n].capacity_bytes for n in net.register_fifos)
+
+
+# --------------------------------------------------------------------------- #
+# Plan plumbing.
+# --------------------------------------------------------------------------- #
+def test_mode_enum_and_string_interchangeable():
+    assert ExecutionPlan(mode=Mode.MEGAKERNEL).mode == "megakernel"
+    assert ExecutionPlan(mode="megakernel").mode == MEGAKERNEL.value
+    assert ExecutionPlan(mode=Mode.DYNAMIC).mode == "dynamic"
+    # Megakernel runs to quiescence: no n_iterations required.
+    ExecutionPlan(mode=MEGAKERNEL)
+
+
+def test_megakernel_rejected_under_static_dal():
+    """The reference framework cannot put dynamic actors on the
+    accelerator; the megakernel IS the accelerator path."""
+    from repro.core import RuntimeMode
+    net, _ = make_dpd(n_firings=4, block_l=128)
+    with pytest.raises(ValueError, match="STATIC_DAL"):
+        net.compile(ExecutionPlan(mode=MEGAKERNEL,
+                                  runtime_mode=RuntimeMode.STATIC_DAL))
+
+
+def test_compile_megakernel_accepts_legacy_dict_state():
+    net, _ = make_moe(2)
+    state = net.init_state()
+    legacy = {"fifos": state["fifos"], "actors": state["actors"]}
+    runner = compile_megakernel(net)
+    s_legacy, _, _ = runner(legacy)
+    s_new, _, _ = runner(state)
+    assert_states_identical(s_legacy, s_new)

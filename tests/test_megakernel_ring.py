@@ -1,0 +1,169 @@
+"""Property tests: the megakernel's scratch ring-buffer ops vs the
+``repro.core.fifo`` functional API and the unbounded-queue oracle.
+
+The in-kernel helpers (``_ring_read_masked`` / ``_ring_write_masked`` /
+``_ring_peek`` in ``repro.core.megakernel.kernel``) re-express
+``FifoSpec``'s masked API on a Pallas ref plus a packed cursor row; the
+bit-identity of the whole backend rests on them matching *exactly* —
+offsets, masked no-op writes, the Fig. 2 delay copy-back.  Each drawn op
+sequence is applied twice: through a tiny interpret-mode ``pallas_call``
+driving the ring helpers on a scratch buffer, and through the functional
+``FifoSpec`` state — final buffers, cursors and every read window must be
+byte-identical, and both must agree with a plain Python queue.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container image ships no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import FifoSpec
+from repro.core.megakernel.kernel import (_ring_peek, _ring_read,
+                                          _ring_read_masked,
+                                          _ring_write_masked)
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Op codes for the driver kernel (mirrors test_core_fifo's masked oracle
+# test): 0 = enabled write, 1 = enabled read, 2 = disabled write,
+# 3 = disabled read.
+W_ON, R_ON, W_OFF, R_OFF = 0, 1, 2, 3
+
+
+def _drive_ring(spec: FifoSpec, ops, tokens):
+    """Apply ``ops`` to one scratch ring inside a pallas_call; return
+    (final buf, final cursors, read windows log)."""
+    n_ops = len(ops)
+    cap = spec.capacity_tokens
+    tok = tuple(spec.token_shape)
+
+    def kernel(buf_in, cur_in, toks_in, buf_out, cur_out, reads_out, ring):
+        ring[...] = buf_in[...]
+        cursors = cur_in[...]
+        for t, op in enumerate(ops):           # static unroll: ops are data
+            enabled = jnp.bool_(op in (W_ON, R_ON))
+            if op in (W_ON, W_OFF):
+                cursors = _ring_write_masked(
+                    spec, ring, cursors, 0, toks_in[t], enabled)
+            else:
+                win, cursors = _ring_read_masked(
+                    spec, ring, cursors, 0, enabled)
+                reads_out[t] = win
+        buf_out[...] = ring[...]
+        cur_out[...] = cursors
+
+    buf0 = spec.init_state().buf
+    cur0 = jnp.zeros((1, 3), jnp.int32).at[0, 2].set(spec.delay)
+    buf, cur, reads = pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((cap,) + tok, spec.dtype),
+                   jax.ShapeDtypeStruct((1, 3), jnp.int32),
+                   jax.ShapeDtypeStruct((n_ops, spec.rate) + tok,
+                                        spec.dtype)],
+        scratch_shapes=[pltpu.VMEM((cap,) + tok, spec.dtype)],
+        interpret=True,
+    )(buf0, cur0, tokens)
+    return buf, cur, reads
+
+
+@settings(max_examples=30, deadline=None)
+@given(rate=st.integers(1, 4), delay=st.integers(0, 1),
+       raw_ops=st.lists(st.integers(0, 3), min_size=1, max_size=30))
+def test_scratch_ring_matches_fifo_api_and_queue_oracle(rate, delay, raw_ops):
+    spec = FifoSpec("f", rate, (1,), jnp.float32, delay=delay)
+    # Pre-filter the drawn ops exactly like the fifo oracle test: enabled
+    # ops that would violate blocking semantics are dropped (the MoC
+    # schedulers never issue them), disabled ops always pass through.
+    fs = spec.init_state()
+    ops, oracle, counter = [], [0.0] * delay, 1.0
+    expected_reads = []
+    for op in raw_ops:
+        if op == W_ON and not bool(spec.can_write(fs)):
+            continue
+        if op == R_ON and not bool(spec.can_read(fs)):
+            continue
+        if op in (W_ON, W_OFF):
+            toks = np.arange(rate, dtype=np.float32).reshape(rate, 1) + counter
+            fs = spec.write_masked(fs, jnp.asarray(toks),
+                                   jnp.bool_(op == W_ON))
+            if op == W_ON:
+                counter += rate
+                oracle.extend(toks[:, 0].tolist())
+        else:
+            win, fs = spec.read_masked(fs, jnp.bool_(op == R_ON))
+            expected_reads.append((len(ops), np.asarray(win)))
+            if op == R_ON:
+                expect = [oracle.pop(0) for _ in range(rate)]
+                # functional API vs queue oracle (re-pins fifo.py)
+                np.testing.assert_allclose(np.asarray(win)[:, 0], expect)
+        ops.append(op)
+    if not ops:
+        return  # every drawn op was blocking-illegal; nothing to drive
+    # Token streams for the kernel: the write at step t uses tokens[t].
+    tokens = np.zeros((len(ops), rate, 1), np.float32)
+    c = 1.0
+    for t, op in enumerate(ops):
+        if op in (W_ON, W_OFF):
+            tokens[t] = np.arange(rate, dtype=np.float32).reshape(rate, 1) + c
+            if op == W_ON:
+                c += rate
+    buf, cur, reads = _drive_ring(spec, ops, jnp.asarray(tokens))
+    # Ring scratch state == functional FifoState, byte for byte.
+    np.testing.assert_array_equal(np.asarray(buf), np.asarray(fs.buf))
+    assert int(cur[0, 0]) == int(fs.rd)
+    assert int(cur[0, 1]) == int(fs.wr)
+    assert int(cur[0, 2]) == int(fs.occ)
+    assert int(fs.occ) == len(oracle)          # and both match the queue
+    # Every read window (enabled AND disabled/stale) byte-identical.
+    for t, want in expected_reads:
+        np.testing.assert_array_equal(np.asarray(reads)[t], want)
+
+
+@pytest.mark.parametrize("delay", [0, 1])
+@pytest.mark.parametrize("tok_shape", [(1,), (2, 3)])
+def test_ring_peek_and_unconditional_read(delay, tok_shape):
+    """_ring_peek/_ring_read (the control-port path) vs FifoSpec.peek/read
+    across whole phase cycles, on multi-dimensional tokens."""
+    r = 2
+    spec = FifoSpec("f", r, tok_shape, jnp.float32, delay=delay)
+    n_steps = 2 * spec.n_write_phases
+
+    def kernel(buf_in, cur_in, toks_in, peeks_out, wins_out, cur_out, ring):
+        ring[...] = buf_in[...]
+        cursors = cur_in[...]
+        for t in range(n_steps):
+            cursors = _ring_write_masked(spec, ring, cursors, 0,
+                                         toks_in[t], jnp.bool_(True))
+            peeks_out[t] = _ring_peek(spec, ring, cursors, 0)
+            win, cursors = _ring_read(spec, ring, cursors, 0)
+            wins_out[t] = win
+        cur_out[...] = cursors
+
+    toks = jnp.asarray(
+        np.arange(n_steps * r * int(np.prod(tok_shape)), dtype=np.float32)
+        .reshape((n_steps, r) + tok_shape))
+    fs = spec.init_state()
+    cap = spec.capacity_tokens
+    peeks, wins, cur = pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((n_steps,) + tok_shape, jnp.float32),
+                   jax.ShapeDtypeStruct((n_steps, r) + tok_shape, jnp.float32),
+                   jax.ShapeDtypeStruct((1, 3), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((cap,) + tok_shape, jnp.float32)],
+        interpret=True,
+    )(fs.buf, jnp.zeros((1, 3), jnp.int32).at[0, 2].set(spec.delay), toks)
+    for t in range(n_steps):
+        fs = spec.write(fs, toks[t])
+        np.testing.assert_array_equal(np.asarray(peeks)[t],
+                                      np.asarray(spec.peek(fs)))
+        win, fs = spec.read(fs)
+        np.testing.assert_array_equal(np.asarray(wins)[t], np.asarray(win))
+    assert (int(cur[0, 0]), int(cur[0, 1]), int(cur[0, 2])) \
+        == (int(fs.rd), int(fs.wr), int(fs.occ))

@@ -69,6 +69,30 @@ def test_bench_executors_fast(tmp_path):
         assert r["tokens_per_s"] > 0
 
 
+def test_bench_megakernel_fast(tmp_path):
+    from benchmarks.bench_megakernel import bench_megakernel
+    json_path = str(tmp_path / "BENCH_megakernel.json")
+    rows = bench_megakernel(fast=True, json_path=json_path)
+    check_rows(rows)
+    # The megakernel acceptance claim must hold at tiny sizes too:
+    # bit-identical states/counts/sweeps vs the host dynamic scheduler.
+    ident = [d for n, _, d in rows if n.endswith("_vs_dynamic")]
+    assert len(ident) == 2
+    for derived in ident:
+        assert "bit-identical: True" in derived, derived
+    scratch = [d for n, _, d in rows if n.endswith("_scratch_bytes")]
+    assert len(scratch) == 2 and all("scratch" in d for d in scratch)
+    with open(json_path) as f:
+        records = json.load(f)
+    names = {r["name"] for r in records}
+    for g in ("dpd", "moe"):
+        for e in ("dynamic_host", "megakernel", "static_specialized"):
+            assert f"mega_{g}_{e}" in names, sorted(names)
+    for r in records:
+        assert r["us_per_call"] > 0
+        assert r["tokens_per_s"] > 0
+
+
 def test_bench_kernels():
     from benchmarks.bench_kernels import bench_kernels
     check_rows(bench_kernels())

@@ -26,6 +26,15 @@ def make_motion_detection(n_frames=12, rate=4):
 GRAPHS = {"dpd": make_dpd, "motion_detection": make_motion_detection}
 
 
+@pytest.fixture(autouse=True)
+def _rearm_deprecation_warnings():
+    """Shim warnings fire once per process; re-arm so every test (and
+    every parametrization) can still assert on the first warning."""
+    from repro.core.executor import reset_deprecation_warnings
+    reset_deprecation_warnings()
+    yield
+
+
 # --------------------------------------------------------------------------- #
 # Shim equivalence (the deprecation is transparent).
 # --------------------------------------------------------------------------- #
@@ -58,6 +67,58 @@ def test_interpreted_shim_bit_identical_to_program():
         s_old = run_interpreted(net, net.init_state(), n_iter)
     s_new = net.compile(mode="interpreted", n_iterations=n_iter).run().state
     assert_states_identical(s_old, s_new)
+
+
+def test_shims_warn_once_per_process():
+    """Benchmark loops rebuild shim runners thousands of times; the
+    deprecation warning must fire on the first call only."""
+    import warnings
+
+    net, n_iter = make_dpd()
+    with pytest.warns(DeprecationWarning, match="compile_static"):
+        compile_static(net, n_iter)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        compile_static(net, n_iter)
+    assert not [r for r in rec if issubclass(r.category, DeprecationWarning)]
+
+
+# --------------------------------------------------------------------------- #
+# donate="auto": the per-graph heuristic behind the MD donate regression.
+# --------------------------------------------------------------------------- #
+def test_donate_auto_resolves_per_graph():
+    from repro.core.program import _DONATE_AUTO_BUFFERED_BYTES_MAX
+
+    dpd_net, n_iter = make_dpd()
+    # DPD registerizes its bulk channels: buffered bytes are tiny ->
+    # donation on.  Full-size MD keeps MBs of frames ring-buffered ->
+    # donation off (the measured 707 -> 415 tok/s regression).
+    prog = dpd_net.compile(mode="static", n_iterations=n_iter)
+    assert prog.donate is True
+    assert prog.stats().resolved_donate is True
+    from repro.graphs.motion_detection import build_motion_detection
+    md_full = build_motion_detection(8, rate=4)   # QVGA frames, 3.46 MB
+    buffered = sum(s.capacity_bytes for n, s in md_full.fifos.items()
+                   if n not in md_full.register_fifos)
+    assert buffered > _DONATE_AUTO_BUFFERED_BYTES_MAX
+    assert md_full.compile(mode="static", n_iterations=2).donate is False
+    # Explicit bools always win over the heuristic.
+    assert md_full.compile(mode="static", n_iterations=2,
+                           donate=True).donate is True
+    assert dpd_net.compile(mode="static", n_iterations=n_iter,
+                           donate=False).donate is False
+    with pytest.raises(ValueError, match="donate"):
+        ExecutionPlan(mode="dynamic", donate="always")
+    # register_fifos are "free" only under the specialized static
+    # executor; the same full-size DPD (11.5 MB of data rings) must
+    # auto-donate there and must NOT under dynamic / unspecialized
+    # static, where those rings stay live.
+    from repro.graphs.dpd import build_dpd
+    full_dpd = build_dpd(4)
+    assert full_dpd.compile(mode="static", n_iterations=4).donate is True
+    assert full_dpd.compile(ExecutionPlan(mode="dynamic")).donate is False
+    assert full_dpd.compile(mode="static", n_iterations=4,
+                            specialize=False).donate is False
 
 
 # --------------------------------------------------------------------------- #
