@@ -1,28 +1,38 @@
 """Megakernel benchmarks: the device-resident scheduler vs the host-built
-executors.
+executors, including the grid-parallel multi-core sweeps.
 
 For the two genuinely dynamic-rate paper graphs — DPD (rate-0 branch
 firings) and MoE-as-actors (idle experts) — times the persistent-Pallas
 megakernel (``ExecutionPlan(mode=MEGAKERNEL)``, interpret mode on CPU)
 against the token-driven dynamic executor it is bit-identical to and the
-specialized static executor, and records the device-residency split
-(scratch vs HBM bytes) from ``Program.stats``.
+specialized static executor, then sweeps the grid partition counts
+(``cores`` in 1/2/4): per-core-count round (sweep) counts, tok/s, and
+the private-vs-shared ring byte split from ``Program.stats``.
 
-Bit-identity is *checked inline* (states, fire counts, sweeps) so a
-silent divergence fails the bench contract, exactly like the dynamic
-sweep-reduction rows in bench_executors.  Besides the CSV rows, writes
-``BENCH_megakernel.json``: ``{name, us_per_call, tokens_per_s}`` per
-executor x graph.
+Bit-identity is *checked inline* (states, fire counts — and sweeps for
+the single-core kernel) so a silent divergence fails the bench contract,
+exactly like the dynamic sweep-reduction rows in bench_executors.
+Besides the CSV rows, writes ``BENCH_megakernel.json``: ``{name,
+us_per_call, tokens_per_s}`` per executor x graph, with ``sweeps`` /
+``cores`` structure fields on the kernel rows (compared exactly by
+``benchmarks/check_regression.py``).
 
 Caveat printed with the numbers: on CPU the megakernel runs in Pallas
 *interpret* mode — the comparison measures the scheduling structure, not
-a compiled-kernel win; the Mosaic TPU path is a ROADMAP open item.
+a compiled-kernel win, and the grid partition loop runs sequentially
+(fixed partition-order tie-break), so multi-core rows measure the
+partitioned schedule's overhead, not a parallel speedup; the Mosaic /
+Megacore path is a ROADMAP open item.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 from typing import Dict, List, Tuple
+
+if __package__ in (None, ""):   # script invocation: PYTHONPATH=src is enough
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 
@@ -30,6 +40,8 @@ from repro.core import MEGAKERNEL, ExecutionPlan
 from repro.graphs.factories import make_dpd, make_moe, states_identical
 
 Row = Tuple[str, float, str]
+
+GRID_CORES = (1, 2, 4)
 
 JSON_PATH = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -44,10 +56,11 @@ def bench_megakernel(fast: bool = False,
     rows: List[Row] = []
     records: List[Dict] = []
 
-    def record(name: str, dt: float, tokens: int, derived: str) -> None:
+    def record(name: str, dt: float, tokens: int, derived: str,
+               **structure) -> None:
         rows.append((name, dt * 1e6, derived))
         records.append({"name": name, "us_per_call": round(dt * 1e6, 1),
-                        "tokens_per_s": round(tokens / dt, 1)})
+                        "tokens_per_s": round(tokens / dt, 1), **structure})
 
     if fast:
         workloads = [
@@ -64,36 +77,71 @@ def bench_megakernel(fast: bool = False,
     for gname, net, n_iter, tokens in workloads:
         # donate=False: time the executors, not the auto-donation copy.
         dyn = net.compile(ExecutionPlan(mode="dynamic", donate=False))
-        mega = net.compile(ExecutionPlan(mode=MEGAKERNEL))
         static = net.compile(mode="static", n_iterations=n_iter,
                              donate=False)
+        grid = {c: net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=c))
+                for c in GRID_CORES}
+        mega = grid[1]
 
-        rd, rm = dyn.run(), mega.run()
+        rd = dyn.run()
+        grid_runs = {c: p.run() for c, p in grid.items()}
+        rm = grid_runs[1]
         identical = (states_identical(rd.state, rm.state)
                      and {k: int(v) for k, v in rd.fire_counts.items()}
                      == {k: int(v) for k, v in rm.fire_counts.items()}
                      and int(rd.sweeps) == int(rm.sweeps))
+        # Grid bit-identity: states + fire counts for every core count
+        # (rounds may differ from host sweeps only under a custom assign).
+        grid_identical = all(
+            states_identical(rd.state, r.state)
+            and {k: int(v) for k, v in rd.fire_counts.items()}
+            == {k: int(v) for k, v in r.fire_counts.items()}
+            for r in grid_runs.values())
 
-        med = _interleaved_medians({
-            "dyn": lambda: jax.block_until_ready(dyn.run().state),
-            "mega": lambda: jax.block_until_ready(mega.run().state),
-            "static": lambda: jax.block_until_ready(static.run().state),
-        }, reps)
+        candidates = {
+            "dyn": lambda dyn=dyn: jax.block_until_ready(dyn.run().state),
+            "static": lambda static=static: jax.block_until_ready(
+                static.run().state),
+        }
+        for c, p in grid.items():
+            candidates[f"grid{c}"] = (
+                lambda p=p: jax.block_until_ready(p.run().state))
+        med = _interleaved_medians(candidates, reps)
+
         record(f"mega_{gname}_dynamic_host", med["dyn"], tokens,
                f"{int(rd.sweeps)} sweeps")
-        record(f"mega_{gname}_megakernel", med["mega"], tokens,
-               f"{int(rm.sweeps)} sweeps, interpret mode")
+        record(f"mega_{gname}_megakernel", med["grid1"], tokens,
+               f"{int(rm.sweeps)} sweeps, interpret mode",
+               sweeps=int(rm.sweeps), cores=1)
         record(f"mega_{gname}_static_specialized", med["static"], tokens,
                "fused scan reference")
+        for c in GRID_CORES[1:]:
+            st = grid[c].stats()
+            record(
+                f"mega_{gname}_grid{c}", med[f"grid{c}"], tokens,
+                f"{int(grid_runs[c].sweeps)} rounds, {c} cores, "
+                f"{st.shared_scratch_bytes} B shared rings+semaphores",
+                sweeps=int(grid_runs[c].sweeps), cores=c)
         rows.append((f"mega_{gname}_vs_dynamic", 0.0,
-                     f"{med['dyn'] / med['mega']:.2f}x vs host dynamic "
+                     f"{med['dyn'] / med['grid1']:.2f}x vs host dynamic "
                      f"(interpret-mode CPU; structure not kernel perf), "
                      f"bit-identical: {identical}"))
+        rows.append((f"mega_{gname}_grid_vs_single", 0.0,
+                     f"grid2 {med['grid1'] / med['grid2']:.2f}x / grid4 "
+                     f"{med['grid1'] / med['grid4']:.2f}x vs 1-core "
+                     f"(sequential partition loop; parity expected), "
+                     f"grid bit-identical: {grid_identical}"))
         st = mega.stats()
         rows.append((f"mega_{gname}_scratch_bytes", 0.0,
                      f"{st.scratch_bytes} scratch ({st.transient_scratch_bytes}"
                      f" transient-reclaimable) vs {st.hbm_state_bytes} HBM "
                      f"operands"))
+        splits = []
+        for c in GRID_CORES[1:]:
+            s = grid[c].stats()
+            splits.append(f"{c}c: {list(s.core_scratch_bytes)} private / "
+                          f"{s.shared_scratch_bytes} shared")
+        rows.append((f"mega_{gname}_grid_ring_split", 0.0, "; ".join(splits)))
 
     with open(json_path, "w") as f:
         json.dump(records, f, indent=2)
@@ -103,7 +151,6 @@ def bench_megakernel(fast: bool = False,
 
 
 if __name__ == "__main__":
-    import sys
     fast = "--fast" in sys.argv
     print("name,us_per_call,derived")
     for name, us, derived in bench_megakernel(fast=fast):

@@ -1,10 +1,19 @@
 """Benchmark harness: one section per paper table + kernels + roofline.
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+Invocation (the one used by CI, EXPERIMENTS.md and the verify skill):
+``PYTHONPATH=src python benchmarks/run.py`` — the scripts bootstrap the
+repo root onto ``sys.path`` themselves, so ``PYTHONPATH=src`` alone is
+enough for every bench entrypoint.
 """
 from __future__ import annotations
 
+import os
 import sys
+
+if __package__ in (None, ""):   # script invocation: PYTHONPATH=src is enough
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:

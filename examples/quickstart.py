@@ -89,6 +89,18 @@ def main():
           f"{stats.scratch_bytes} B scratch vs "
           f"{stats.hbm_state_bytes} B HBM state")
 
+    # And grid-parallel: the firing table split across 2 cores (paper
+    # §3.3 actor-to-core mapping), partition-crossing channels guarded
+    # by shared cursor semaphores.  Still bit-identical — for any core
+    # count.
+    grid = net.compile(ExecutionPlan(mode=Mode.MEGAKERNEL, cores=2))
+    gresult = grid.run()
+    gstats = grid.stats()
+    assert np.array_equal(np.asarray(grid.collect("sink")), out)
+    print(f"grid x2: partitions {gstats.partition_actors}, "
+          f"{int(gresult.sweeps)} rounds, "
+          f"{gstats.shared_scratch_bytes} B shared rings+semaphores")
+
     # Note on donation: ExecutionPlan.donate defaults to "auto" — donate
     # only when the ring-buffered bytes are small enough that copy
     # elision wins (full-size motion detection measured 1.7x SLOWER

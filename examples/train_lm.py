@@ -11,7 +11,6 @@ Presets:
     PYTHONPATH=src python examples/train_lm.py --preset tiny
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

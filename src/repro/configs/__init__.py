@@ -1,7 +1,7 @@
 """Config registry: ``--arch <id>`` resolves here."""
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import (ArchConfig, EncoderConfig, MoEConfig,
                                 RGLRUConfig, SSMConfig, SHAPES, DECODE_SHAPES,

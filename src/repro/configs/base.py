@@ -8,7 +8,7 @@ for each of the four assigned input shapes (no allocation — dry-run safe).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -30,8 +30,10 @@ from repro.core.program import (MEGAKERNEL, ExecutionPlan, Mode, Program,
 # Megakernel names resolve lazily (module __getattr__ below): the backend
 # imports jax.experimental.pallas(+tpu), ~1 s of import cost every
 # non-megakernel consumer of repro.core should not pay.
-_MEGAKERNEL_EXPORTS = ("MegakernelLayout", "compile_megakernel",
-                       "lower_network", "state_hbm_bytes")
+_MEGAKERNEL_EXPORTS = ("GridPartition", "MegakernelLayout",
+                       "compile_megakernel", "default_assignment",
+                       "lower_network", "partition_layout",
+                       "state_hbm_bytes")
 
 
 def __getattr__(name: str):
@@ -58,7 +60,8 @@ __all__ = [
     "NetworkBuilder", "derive_matched_rates",
     "ExecutionPlan", "MEGAKERNEL", "Mode", "Program", "ProgramStats",
     "RunResult",
-    "MegakernelLayout", "compile_megakernel", "lower_network",
+    "GridPartition", "MegakernelLayout", "compile_megakernel",
+    "default_assignment", "lower_network", "partition_layout",
     "state_hbm_bytes",
     "RuntimeMode", "assert_mode_allows", "collect_sink", "compile_dynamic",
     "compile_static", "fire_actor", "make_iteration_step", "run_interpreted",

@@ -312,7 +312,13 @@ class NetworkBuilder:
         * ``capacity`` is **derived** from the Eq. 1 law (``2r`` / ``3r+1``)
           — pass it to assert the expected value, mismatches raise;
         * ``matched_rates=None`` defers to :func:`derive_matched_rates` at
-          ``build()`` time; ``True``/``False`` overrides the derivation.
+          ``build()`` time; ``True``/``False`` overrides the derivation;
+        * ``delay=1`` with ``rate > 1`` additionally glues the two
+          endpoint actors to one core under grid-partitioned megakernel
+          plans (``ExecutionPlan(cores=k)``): the Fig. 2 copy-back
+          cannot cross a partition boundary unless the initial tokens
+          cover a whole read window
+          (``Network.validate_partition`` / ``delay_partition_constraints``).
 
         Returns the channel name.
         """

@@ -59,7 +59,6 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.actor import ActorSpec
 from repro.core.fifo import FifoSpec, FifoState
 from repro.core.network import Network, NetworkState
 from repro.core.schedule import phase_unroll_period

@@ -17,7 +17,7 @@ mapping) or to the OpenCL/GPU device.  On a TPU pod the analogue is:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

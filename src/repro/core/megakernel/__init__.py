@@ -8,11 +8,13 @@ token-driven sweep loop runs on the device (paper §3.3).  See
 for the kernel itself.
 """
 from repro.core.megakernel.kernel import compile_megakernel
-from repro.core.megakernel.lower import (FiringRow, MegakernelLayout,
-                                         PortBinding, lower_network,
-                                         state_hbm_bytes)
+from repro.core.megakernel.lower import (SHARED, FiringRow, GridPartition,
+                                         MegakernelLayout, PortBinding,
+                                         default_assignment, lower_network,
+                                         partition_layout, state_hbm_bytes)
 
 __all__ = [
-    "FiringRow", "MegakernelLayout", "PortBinding",
-    "compile_megakernel", "lower_network", "state_hbm_bytes",
+    "SHARED", "FiringRow", "GridPartition", "MegakernelLayout",
+    "PortBinding", "compile_megakernel", "default_assignment",
+    "lower_network", "partition_layout", "state_hbm_bytes",
 ]

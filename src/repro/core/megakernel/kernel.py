@@ -56,8 +56,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.executor import (_MAX_FIRINGS_PER_VISIT, RuntimeMode,
                                  _is_concrete, assert_mode_allows)
 from repro.core.fifo import FifoSpec, FifoState
-from repro.core.megakernel.lower import (FiringRow, MegakernelLayout,
-                                         lower_network)
+from repro.core.megakernel.lower import (FiringRow, GridPartition,
+                                         MegakernelLayout, lower_network,
+                                         partition_layout)
 from repro.core.network import Network, NetworkState
 
 # Cursor row layout inside the packed (n_fifos, 3) block.
@@ -369,7 +370,8 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
                   fns: Dict[str, _ActorFns],
                   actor_treedef, scalar_leaf: List[bool],
                   scalar_const: List[bool],
-                  multi_firing: bool, max_sweeps: int) -> Callable:
+                  multi_firing: bool, max_sweeps: int,
+                  partition: GridPartition) -> Callable:
     n_fifos = len(layout.fifo_specs)
     n_actors = len(network.actors)
     n_leaves = len(scalar_leaf)
@@ -419,27 +421,45 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
                 ready, do, lambda c: c, (cursors, actors, counts))
             return cursors, actors, counts, ready
 
+        # The grid-parallel sweep (paper §3.3 actor-to-core mapping): each
+        # core runs its own occupancy-bounded firing loop over its
+        # partition slice of the firing table; `cursors` is the SHARED
+        # cursor block, so a cross-partition `_can_fire` polls the remote
+        # ring's monotonic rd/wr counters — the in-kernel semaphore
+        # analogue of `heterogeneous_split`'s boundary actors.  The core
+        # loop is traced in fixed partition order (the interpret-mode /
+        # sequential-grid tie-break, which makes the schedule — and thus
+        # every ring byte — deterministic by construction); a genuinely
+        # parallel grid mapping only changes the interleaving, which Kahn
+        # determinism keeps invisible in the final state.  Quiescence is
+        # global: the sweep ends when ALL partitions report no progress.
         def sweep(carry):
             cursors, actors, counts, _, sweeps = carry
-            fired_any = jnp.bool_(False)
-            for row in layout.firing_table:
-                if multi_firing:
-                    k = _max_fireable(layout, row, cursors)
+            core_progress = []
+            for rows_ix in partition.core_rows:
+                core_fired = jnp.bool_(False)
+                for ri in rows_ix:
+                    row = layout.firing_table[ri]
+                    if multi_firing:
+                        k = _max_fireable(layout, row, cursors)
 
-                    def body(_, c, row=row):
-                        cursors, actors, counts, fired = c
-                        cursors, actors, counts, ready = attempt(
+                        def body(_, c, row=row):
+                            cursors, actors, counts, fired = c
+                            cursors, actors, counts, ready = attempt(
+                                row, cursors, actors, counts)
+                            return (cursors, actors, counts,
+                                    jnp.logical_or(fired, ready))
+
+                        cursors, actors, counts, fired = jax.lax.fori_loop(
+                            0, k, body,
+                            (cursors, actors, counts, jnp.bool_(False)))
+                    else:
+                        cursors, actors, counts, fired = attempt(
                             row, cursors, actors, counts)
-                        return (cursors, actors, counts,
-                                jnp.logical_or(fired, ready))
-
-                    cursors, actors, counts, fired = jax.lax.fori_loop(
-                        0, k, body,
-                        (cursors, actors, counts, jnp.bool_(False)))
-                else:
-                    cursors, actors, counts, fired = attempt(
-                        row, cursors, actors, counts)
-                fired_any = jnp.logical_or(fired_any, fired)
+                    core_fired = jnp.logical_or(core_fired, fired)
+                core_progress.append(core_fired)
+            fired_any = functools.reduce(jnp.logical_or, core_progress,
+                                         jnp.bool_(False))
             return cursors, actors, counts, fired_any, sweeps + 1
 
         def cond(carry):
@@ -474,7 +494,10 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                        mode: RuntimeMode = RuntimeMode.PROPOSED,
                        multi_firing: bool = True,
                        interpret: Optional[bool] = None,
-                       layout: Optional[MegakernelLayout] = None) -> Callable:
+                       layout: Optional[MegakernelLayout] = None,
+                       cores: int = 1,
+                       assign: Optional[Dict[str, int]] = None,
+                       partition: Optional[GridPartition] = None) -> Callable:
     """Compile the network into one persistent Pallas kernel.
 
     Returns ``runner(state) -> (final_state, fire_counts, n_sweeps)`` with
@@ -486,10 +509,22 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
     either path.  ``layout`` lets a caller that already lowered the
     network (``Program``) pass its :class:`MegakernelLayout` instead of
     lowering twice.
+
+    ``cores`` > 1 partitions the firing table across grid partitions
+    (:func:`partition_layout`; ``assign`` pins actors to cores, default
+    is the load-balanced contiguous cut): each core sweeps only its
+    slice and quiescence becomes global (no partition fired).  Final
+    states, ring bytes, cursors and fire counts stay bit-identical to
+    the single-core kernel for every core count (Kahn determinism plus
+    the fixed partition-order tie-break); the sweep count is the number
+    of global rounds.  ``partition`` lets ``Program`` pass a prebuilt
+    :class:`GridPartition` instead of partitioning twice.
     """
     assert_mode_allows(network, mode)
     if layout is None:
         layout = lower_network(network)
+    if partition is None:
+        partition = partition_layout(network, layout, cores, assign)
     fns, const_arrays = _hoist_consts(network, layout)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -516,7 +551,8 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                          for leaf, s in zip(leaves, scalar_leaf)]
 
         kernel = _build_kernel(network, layout, fns, treedef, scalar_leaf,
-                               scalar_const, multi_firing, max_sweeps)
+                               scalar_const, multi_firing, max_sweeps,
+                               partition)
         out_shape = (
             [jax.ShapeDtypeStruct(b.shape, b.dtype) for b in bufs]
             + [jax.ShapeDtypeStruct((n_fifos, 3), jnp.int32)]
@@ -559,7 +595,9 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
         return jitted(state)
 
     # Exposed for Program.stats: the hoisted closure arrays are kernel
-    # operands living in HBM alongside the state pytree.
+    # operands living in HBM alongside the state pytree, and the grid
+    # partition drives the per-core scratch/occupancy telemetry.
     runner.hoisted_const_bytes = int(sum(
         c.size * c.dtype.itemsize for c in const_arrays))
+    runner.grid_partition = partition
     return runner

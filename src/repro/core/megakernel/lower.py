@@ -33,7 +33,7 @@ Outputs of :func:`lower_network`:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, List, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
@@ -45,6 +45,11 @@ from repro.core.schedule import phase_unroll_period
 # One packed cursor row per channel: (rd, wr, occ) int32.
 CURSOR_FIELDS = 3
 _CURSOR_ITEMSIZE = 4
+
+#: ``GridPartition.fifo_cores`` value for a partition-crossing channel:
+#: its ring lives in the shared block and its cursor row acts as the
+#: cross-core semaphore (monotonic rd/wr counters polled in-kernel).
+SHARED = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +158,192 @@ def lower_network(network: Network) -> MegakernelLayout:
         transient_fifos=frozenset(network.register_fifos),
         unroll_period=period,
     )
+
+
+# --------------------------------------------------------------------------- #
+# Grid partitioning: actors -> cores (paper §3.3 actor-to-core mapping).
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class GridPartition:
+    """Actor-to-core mapping of one lowered network (paper §3.3).
+
+    ``assignment[i]`` is the core owning actor ``i`` (firing-table
+    index); ``core_rows[c]`` are core ``c``'s firing-table indices in
+    visit order — each core's occupancy-bounded firing loop iterates
+    exactly that slice.  ``fifo_cores[f]`` is the core whose *private*
+    scratch block holds channel ``f``'s ring (both endpoints on that
+    core), or :data:`SHARED` for a partition-crossing channel: its ring
+    lives in the shared block and its packed cursor row (monotonic
+    rd / wr / occ counters) doubles as the cross-core semaphore the
+    remote ``_can_fire`` polls — the device-resident analogue of
+    ``heterogeneous_split``'s boundary feed/fetch actors.
+
+    Built by :func:`partition_layout`; the default assignment is a
+    load-balanced contiguous cut of the dynamic visit order with the
+    endpoints of window-uncovered delay channels glued together
+    (``Network.delay_partition_constraints``).
+    """
+
+    n_cores: int
+    assignment: Tuple[int, ...]
+    core_rows: Tuple[Tuple[int, ...], ...]
+    fifo_cores: Tuple[int, ...]
+
+    @property
+    def shared_fifos(self) -> Tuple[int, ...]:
+        """Flat indices of partition-crossing channels (semaphore-guarded)."""
+        return tuple(i for i, c in enumerate(self.fifo_cores) if c == SHARED)
+
+    def private_fifos(self, core: int) -> Tuple[int, ...]:
+        return tuple(i for i, c in enumerate(self.fifo_cores) if c == core)
+
+    # -- scratch accounting (per-core Table 1, device-side) ------------- #
+    def private_ring_bytes(self, layout: "MegakernelLayout") -> Tuple[int, ...]:
+        """Ring bytes held in each core's private scratch block."""
+        return tuple(
+            sum(layout.fifo_specs[i].capacity_bytes
+                for i in self.private_fifos(core))
+            for core in range(self.n_cores))
+
+    def shared_ring_bytes(self, layout: "MegakernelLayout") -> int:
+        """Ring bytes of the shared (partition-crossing) block."""
+        return sum(layout.fifo_specs[i].capacity_bytes
+                   for i in self.shared_fifos)
+
+    def semaphore_bytes(self) -> int:
+        """Bytes of shared cursor rows polled as cross-core semaphores."""
+        return len(self.shared_fifos) * CURSOR_FIELDS * _CURSOR_ITEMSIZE
+
+
+def _glued_units(network: Network) -> List[List[int]]:
+    """Actor indices grouped into partition units, in first-member order.
+
+    Union-find over :meth:`Network.delay_partition_constraints`: the two
+    endpoints of a delay channel whose initial tokens do not cover a
+    read window must land on one core, so they form one indivisible
+    unit in the contiguous cut.
+    """
+    names = list(network.actors)
+    idx = {n: i for i, n in enumerate(names)}
+    parent = list(range(len(names)))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for _, src, dst in network.delay_partition_constraints():
+        a, b = find(idx[src]), find(idx[dst])
+        if a != b:
+            parent[max(a, b)] = min(a, b)
+    units: List[List[int]] = []
+    unit_of_root: dict = {}
+    for i in range(len(names)):
+        r = find(i)
+        if r not in unit_of_root:
+            unit_of_root[r] = len(units)
+            units.append([])
+        units[unit_of_root[r]].append(i)
+    return units
+
+
+def _balanced_cut(weights: List[int], cores: int) -> List[int]:
+    """Contiguous cut of ``weights`` into ``cores`` groups minimizing the
+    maximum group weight (classic linear-partition DP; deterministic —
+    ties break toward earlier cuts).  Returns the group index per unit.
+    """
+    n = len(weights)
+    prefix = [0]
+    for w in weights:
+        prefix.append(prefix[-1] + w)
+
+    def span(i: int, j: int) -> int:          # weight of units [i, j)
+        return prefix[j] - prefix[i]
+
+    INF = float("inf")
+    # best[c][j]: minimal max-group-weight cutting units [0, j) into c groups.
+    best = [[INF] * (n + 1) for _ in range(cores + 1)]
+    cut = [[0] * (n + 1) for _ in range(cores + 1)]
+    best[0][0] = 0
+    for c in range(1, cores + 1):
+        for j in range(c, n + 1):
+            for i in range(c - 1, j):
+                cand = max(best[c - 1][i], span(i, j))
+                if cand < best[c][j]:
+                    best[c][j] = cand
+                    cut[c][j] = i
+    groups = [0] * n
+    j = n
+    for c in range(cores, 0, -1):
+        i = cut[c][j]
+        for u in range(i, j):
+            groups[u] = c - 1
+        j = i
+    return groups
+
+
+def default_assignment(network: Network, cores: int) -> dict:
+    """Load-balanced actor -> core map: a contiguous cut of the dynamic
+    visit order (declaration order), weighted by ``cost_flops`` (floor 1
+    per actor so zero-cost sources/sinks still count as schedulable
+    work), with window-uncovered delay-channel endpoints glued into one
+    unit.  Contiguity keeps the multi-core visit order equal to the
+    single-core sweep's, so the interpret-mode tie-break (partition
+    order) reproduces the single-core schedule exactly.
+    """
+    names = list(network.actors)
+    units = _glued_units(network)
+    if cores > len(units):
+        raise ValueError(
+            f"cores={cores} exceeds the {len(units)} partition units of "
+            f"this network ({len(names)} actors after gluing delay-channel "
+            "endpoints); pass fewer cores or an explicit assign= that "
+            "leaves no core empty")
+    weights = [
+        sum(max(1, int(network.actors[names[i]].cost_flops)) for i in u)
+        for u in units
+    ]
+    groups = _balanced_cut(weights, cores)
+    out = {}
+    for ui, unit in enumerate(units):
+        for i in unit:
+            out[names[i]] = groups[ui]
+    return out
+
+
+def partition_layout(network: Network, layout: MegakernelLayout,
+                     cores: int = 1,
+                     assign: Optional[Mapping[str, int]] = None
+                     ) -> GridPartition:
+    """Partition the firing table across ``cores`` grid partitions.
+
+    ``assign`` (actor name -> core) overrides the default load-balanced
+    cut; it must cover every actor and respect the delay-channel
+    constraint (``Network.validate_partition``).  Intra-partition
+    channels are placed in the owning core's private scratch block;
+    partition-crossing channels go :data:`SHARED` with their cursor rows
+    acting as the polled semaphores.
+    """
+    if cores < 1:
+        raise ValueError(f"cores must be >= 1, got {cores}")
+    if assign is None:
+        assign = default_assignment(network, cores)
+    network.validate_partition(assign, cores)
+    names = list(network.actors)
+    assignment = tuple(int(assign[n]) for n in names)
+    core_rows = tuple(
+        tuple(i for i, n in enumerate(names) if assignment[i] == core)
+        for core in range(cores))
+    fifo_cores = []
+    for fname in layout.fifo_names:
+        e = network.edge_of(fname)
+        src = assignment[names.index(e.src_actor)]
+        dst = assignment[names.index(e.dst_actor)]
+        fifo_cores.append(src if src == dst else SHARED)
+    return GridPartition(n_cores=cores, assignment=assignment,
+                         core_rows=core_rows,
+                         fifo_cores=tuple(fifo_cores))
 
 
 def state_hbm_bytes(state: Any) -> int:

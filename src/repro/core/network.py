@@ -18,7 +18,6 @@ import types
 from typing import TYPE_CHECKING, Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
-import numpy as np
 
 from repro.core.actor import ActorSpec
 from repro.core.fifo import FifoSpec, FifoState, total_buffer_bytes
@@ -417,6 +416,73 @@ class Network:
                     f"{occ[name]} != initial {spec.delay}; single-appearance "
                     "schedule would grow without bound"
                 )
+
+
+    # ------------------------------------------------------------------ #
+    # Grid partitioning (megakernel multi-core sweeps, paper §3.3).        #
+    # ------------------------------------------------------------------ #
+    def delay_partition_constraints(self) -> List[Tuple[str, str, str]]:
+        """Delay channels whose endpoints must share a grid partition.
+
+        Returns ``(fifo, src_actor, dst_actor)`` for every delay channel
+        whose initial tokens do NOT cover a whole read window
+        (``delay < rate``).  Such a channel's Fig. 2 copy-back (the
+        writer's slot-``3r`` -> slot-``0`` rewrite) lands while the
+        reader may legally hold a window overlapping slot 0 — on one
+        core the sequential sweep orders the two accesses, but across
+        cores the monotonic cursor "semaphores" give the remote reader
+        no way to tell a copied-back slot 0 from a stale one mid-cycle.
+        With ``delay >= rate`` the initial tokens keep the reader a full
+        window behind the copy-back point and the blocking bound
+        (``occ + r <= 2r + 1``) covers the crossing.
+        """
+        out = []
+        for e in self.edges:
+            f = self.fifos[e.fifo]
+            if f.delay and f.delay < f.rate:
+                out.append((e.fifo, e.src_actor, e.dst_actor))
+        return out
+
+    def validate_partition(self, assignment: Mapping[str, int],
+                           cores: int) -> None:
+        """Check an actor -> core map against the grid-partition rules.
+
+        The map must cover every actor exactly (the megakernel firing
+        table is partitioned, not filtered), name only known actors, use
+        cores in ``[0, cores)``, and keep both endpoints of every
+        delay channel with ``delay < rate`` on one core (see
+        :meth:`delay_partition_constraints`).  Raises ``ValueError``
+        with the offending actors/channels otherwise.
+        """
+        unknown = set(assignment) - set(self.actors)
+        if unknown:
+            raise ValueError(
+                f"partition assignment names unknown actors "
+                f"{sorted(unknown)}; known: {sorted(self.actors)}")
+        missing = set(self.actors) - set(assignment)
+        if missing:
+            raise ValueError(
+                "partition assignment must map every actor to a core "
+                f"(the firing table is partitioned, not filtered); "
+                f"missing {sorted(missing)}")
+        bad = {n: c for n, c in assignment.items()
+               if not isinstance(c, int) or not 0 <= c < cores}
+        if bad:
+            raise ValueError(
+                f"partition assignment maps actors to cores outside "
+                f"[0, {cores}): {dict(sorted(bad.items()))}")
+        for fifo, src, dst in self.delay_partition_constraints():
+            if assignment[src] != assignment[dst]:
+                spec = self.fifos[fifo]
+                raise ValueError(
+                    f"delay channel {fifo!r} ({src} -> {dst}, rate "
+                    f"{spec.rate}, delay {spec.delay}) may not cross "
+                    f"partitions (cores {assignment[src]} vs "
+                    f"{assignment[dst]}): its initial tokens do not "
+                    "cover a whole read window (delay < rate), so the "
+                    "Fig. 2 copy-back races the remote reader's phase-0 "
+                    "window under cursor-semaphore sync; assign both "
+                    "endpoints to one core")
 
 
 def repetition_vector(network: Network) -> Dict[str, int]:

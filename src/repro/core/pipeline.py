@@ -14,7 +14,6 @@ model axes of the production mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
@@ -23,7 +22,7 @@ try:
     from jax import shard_map
 except ImportError:  # older jax
     from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def pipeline_spmd(stage_fn: Callable[[Any, jax.Array], jax.Array],

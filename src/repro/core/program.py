@@ -118,6 +118,19 @@ class ExecutionPlan:
       interpret:     megakernel mode: force Pallas interpret mode on
                      (True) or off (False); ``None`` auto-selects
                      interpret off-TPU (the tier-1 CPU fallback).
+      cores:         megakernel mode: number of grid partitions for the
+                     multi-core sweep (paper §3.3 actor-to-core
+                     mapping).  Each core runs its own occupancy-bounded
+                     firing loop over its slice of the firing table;
+                     partition-crossing channels are guarded by shared
+                     cursor semaphores and quiescence is global.  Final
+                     states / ring bytes / cursors / fire counts are
+                     bit-identical for every core count.
+      assign:        optional explicit actor -> core map (must cover
+                     every actor; validated by
+                     ``Network.validate_partition``).  Default is a
+                     load-balanced contiguous cut of the visit order
+                     with delay-channel endpoints glued.
       accelerated:   optional actor subset mapped to the accelerator: the
                      network is split (``heterogeneous_split``) and the
                      plan executes the accelerator subnetwork, with
@@ -135,6 +148,8 @@ class ExecutionPlan:
     max_sweeps: int = 1_000_000
     unroll_bound: int = 6
     interpret: Optional[bool] = None
+    cores: int = 1
+    assign: Optional[Mapping[str, int]] = None
     accelerated: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self) -> None:
@@ -144,6 +159,24 @@ class ExecutionPlan:
             raise ValueError(
                 f"ExecutionPlan.mode must be one of {_MODES}, got "
                 f"{self.mode!r}")
+        if not isinstance(self.cores, int) or self.cores < 1:
+            raise ValueError(
+                f"ExecutionPlan.cores must be an int >= 1, got "
+                f"{self.cores!r}")
+        if self.assign is not None:
+            # Freeze to a sorted pair tuple so the frozen plan stays
+            # immutable (callers may pass any mapping).
+            object.__setattr__(
+                self, "assign",
+                tuple(sorted((str(k), int(v))
+                             for k, v in dict(self.assign).items())))
+        if (self.cores != 1 or self.assign is not None) \
+                and self.mode != "megakernel":
+            raise ValueError(
+                f"ExecutionPlan(mode={self.mode!r}): cores=/assign= are "
+                "grid-partition knobs of the megakernel backend; the host "
+                "executors have no core axis (use mode=Mode.MEGAKERNEL, "
+                "or accelerated=[...] for host/accelerator placement)")
         if not (isinstance(self.donate, bool) or self.donate == "auto"):
             raise ValueError(
                 f"ExecutionPlan.donate must be True, False or 'auto', got "
@@ -198,6 +231,15 @@ class ProgramStats:
     ``hbm_state_bytes`` (the kernel's HBM operands — ring copies, actor
     states, hoisted closure arrays — measured from the last run's state).
     ``resolved_donate`` is the per-graph outcome of ``donate="auto"``.
+
+    Grid-partitioned megakernel programs (``plan.cores``) add the
+    per-partition telemetry: ``grid_cores``, ``partition_actors`` (actor
+    names per core, visit order), ``core_scratch_bytes`` (each core's
+    private ring block), ``shared_scratch_bytes`` (partition-crossing
+    rings plus their semaphore cursor rows), ``shared_fifos`` (the
+    crossing channels), and ``partition_fire_counts`` (firings per core
+    in the last run — the occupancy telemetry of each core's bounded
+    firing loop).
     """
 
     mode: str
@@ -215,6 +257,12 @@ class ProgramStats:
     scratch_bytes: Optional[int] = None
     transient_scratch_bytes: Optional[int] = None
     hbm_state_bytes: Optional[int] = None
+    grid_cores: Optional[int] = None
+    partition_actors: Optional[Tuple[Tuple[str, ...], ...]] = None
+    core_scratch_bytes: Optional[Tuple[int, ...]] = None
+    shared_scratch_bytes: Optional[int] = None
+    shared_fifos: Optional[Tuple[str, ...]] = None
+    partition_fire_counts: Optional[Tuple[int, ...]] = None
 
 
 class Program:
@@ -244,9 +292,13 @@ class Program:
             self.network = network
         self.donate = self._resolve_donate(plan, self.network)
         self._layout = None
+        self._partition = None
         if plan.mode == "megakernel":
-            from repro.core.megakernel import lower_network
+            from repro.core.megakernel import lower_network, partition_layout
             self._layout = lower_network(self.network)
+            self._partition = partition_layout(
+                self.network, self._layout, plan.cores,
+                dict(plan.assign) if plan.assign is not None else None)
         # donate="auto" must never consume a state the *caller* passed in
         # (donated inputs are invalidated; callers legitimately reuse
         # states across runs), so auto donation applies only to run(None),
@@ -284,7 +336,8 @@ class Program:
             return compile_megakernel(
                 self.network, max_sweeps=plan.max_sweeps,
                 mode=plan.runtime_mode, multi_firing=plan.multi_firing,
-                interpret=plan.interpret, layout=self._layout)
+                interpret=plan.interpret, layout=self._layout,
+                partition=self._partition)
         return functools.partial(
             _run_interpreted, self.network,
             n_iterations=plan.n_iterations, order=order, donate=donate)
@@ -496,6 +549,8 @@ class Program:
                      for n in net.actors}
         last = self._last
         scratch = transient = hbm = None
+        grid_cores = part_actors = core_bytes = None
+        shared_bytes = shared_names = part_counts = None
         if self._layout is not None:
             from repro.core.megakernel import state_hbm_bytes
             scratch = self._layout.scratch_bytes
@@ -507,6 +562,21 @@ class Program:
                 hbm = (state_hbm_bytes(last.state)
                        + getattr(self._runners[False],
                                  "hoisted_const_bytes", 0))
+            part = self._partition
+            if part is not None:
+                names = tuple(net.actors)
+                grid_cores = part.n_cores
+                part_actors = tuple(
+                    tuple(names[i] for i in rows) for rows in part.core_rows)
+                core_bytes = part.private_ring_bytes(self._layout)
+                shared_bytes = (part.shared_ring_bytes(self._layout)
+                                + part.semaphore_bytes())
+                shared_names = tuple(self._layout.fifo_names[i]
+                                     for i in part.shared_fifos)
+                if last is not None and last.fire_counts is not None:
+                    part_counts = tuple(
+                        sum(int(last.fire_counts[names[i]]) for i in rows)
+                        for rows in part.core_rows)
         return ProgramStats(
             mode=self.plan.mode,
             n_actors=len(net.actors),
@@ -526,4 +596,10 @@ class Program:
             scratch_bytes=scratch,
             transient_scratch_bytes=transient,
             hbm_state_bytes=hbm,
+            grid_cores=grid_cores,
+            partition_actors=part_actors,
+            core_scratch_bytes=core_bytes,
+            shared_scratch_bytes=shared_bytes,
+            shared_fifos=shared_names,
+            partition_fire_counts=part_counts,
         )

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core import Network, NetworkBuilder, dynamic_actor, static_actor
 from repro.core.actor import apply_rate_gate
-from repro.kernels.dyn_fir import N_BRANCHES, N_TAPS, branch_ref
+from repro.kernels.dyn_fir import N_BRANCHES, N_TAPS
 from repro.kernels.dyn_fir.ops import dpd_branch
 
 BLOCK_L = 32768                 # complex samples per token (256 KB)

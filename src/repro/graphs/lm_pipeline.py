@@ -10,7 +10,7 @@ building block for PP × DP × TP meshes at >2 pods.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

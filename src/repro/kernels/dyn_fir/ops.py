@@ -4,11 +4,9 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.dyn_fir.kernel import dpd_branch_pallas
-from repro.kernels.dyn_fir.ref import (N_BRANCHES, N_TAPS, basis_ref,
-                                       branch_ref, dpd_bank_ref, fir_ref)
+from repro.kernels.dyn_fir.ref import branch_ref
 
 
 @functools.partial(jax.jit, static_argnames=("order", "impl", "block", "interpret"))

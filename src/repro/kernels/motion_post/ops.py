@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.motion_post.kernel import motion_post_pallas
-from repro.kernels.motion_post.ref import (DEFAULT_THRESHOLD, med_ref,
-                                           motion_post_ref, thres_ref)
+from repro.kernels.motion_post.ref import DEFAULT_THRESHOLD, motion_post_ref
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "threshold", "block_h", "interpret"))

@@ -39,7 +39,6 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

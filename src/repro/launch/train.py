@@ -13,8 +13,7 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, smoke_config
 from repro.data import DataConfig, SyntheticLM

@@ -6,7 +6,7 @@ for the dry-run without allocating 72B parameters.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

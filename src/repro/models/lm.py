@@ -18,8 +18,6 @@ attention), ``enc`` (whisper encoder, bidirectional).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -30,7 +28,7 @@ from repro.models import attention as att
 from repro.models import moe as moe_mod
 from repro.models import rglru as rg_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (BATCH_AXES, DTYPE, F32, cross_entropy,
+from repro.models.layers import (BATCH_AXES, DTYPE, cross_entropy,
                                  embed_init, embed_lookup, gelu_mlp,
                                  gelu_mlp_init, maybe_constrain, rmsnorm,
                                  rmsnorm_init, split, swiglu, swiglu_init,

@@ -20,7 +20,7 @@ branch, the RG-LRU, and a gated output projection.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ axis) are a spec change only (``repro.train.sharding.zero1_specs``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ under the static schedule.  Requests are grouped into fixed-size batches
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

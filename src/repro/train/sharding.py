@@ -11,7 +11,7 @@ by rule, not by fallback).
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -1,5 +1,4 @@
 """FIFO channel unit + property tests (paper Eq. 1 + Fig. 2)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

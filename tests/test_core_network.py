@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (ActorSpec, Edge, FifoSpec, Network, map_fire,
+from repro.core import (Edge, FifoSpec, Network, map_fire,
                         repetition_vector, static_actor)
 
 

@@ -1,0 +1,224 @@
+"""Grid-parallel megakernel sweeps: bit-identity for every core count.
+
+The acceptance bar of the grid PR: ``ExecutionPlan(mode=Mode.MEGAKERNEL,
+cores=k)`` for k in {1, 2, 4} must be *bit-identical* — final actor
+states, every ring buffer byte (stale slots included), cursors and fire
+counts — to the host dynamic executor on the three paper graphs (DPD,
+motion detection, MoE-as-actors).  In interpret mode the core loop is
+traced in fixed partition order (the sequential-grid tie-break on the
+shared cursor block), so determinism holds by construction; with the
+default *contiguous* cut the multi-core visit order equals the
+single-core sweep's and even the sweep (round) counts match.  A
+scrambled explicit ``assign`` changes the schedule — more rounds — but
+Kahn determinism keeps the final state byte-for-byte equal, which is
+exactly what a genuinely parallel grid mapping would be allowed to do.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _graph_factories import (assert_states_identical, make_dpd, make_moe,
+                              make_motion_detection)
+from repro.core import (MEGAKERNEL, ExecutionPlan, GridPartition, Mode,
+                        lower_network, partition_layout)
+from repro.core.megakernel import SHARED, default_assignment
+
+jax.config.update("jax_platform_name", "cpu")
+
+CORE_COUNTS = (1, 2, 4)
+
+GRAPHS = {
+    "dpd": lambda: make_dpd(n_firings=4, block_l=128),
+    "moe_as_actors": lambda: make_moe(3),
+    "motion_detection": lambda: make_motion_detection(
+        n_frames=12, rate=4, frame_hw=(48, 64)),
+}
+
+#: A deliberately non-contiguous actor -> core map per graph (round-robin
+#: over the parallel middle stage), exercising shared-ring semaphores in
+#: both directions between the cores.
+SCRAMBLED = {
+    "dpd": lambda net: {n: (i % 2) for i, n in enumerate(net.actors)},
+    "moe_as_actors": lambda net: {n: (i % 2) for i, n in enumerate(net.actors)},
+    # MD's delay channel glues gauss+thres; scramble the rest.
+    "motion_detection": lambda net: {"source": 1, "gauss": 0, "thres": 0,
+                                     "med": 1, "sink": 0},
+}
+
+
+def _fire_counts(result):
+    return {k: int(v) for k, v in result.fire_counts.items()}
+
+
+@pytest.fixture(scope="module")
+def runs():
+    """One dynamic-reference run per graph, shared across the suite."""
+    out = {}
+    for gname, factory in GRAPHS.items():
+        net, _ = factory()
+        out[gname] = (net, net.compile(ExecutionPlan(mode="dynamic")).run())
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Bit-identity: every core count vs the host dynamic executor.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("cores", CORE_COUNTS)
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_grid_bit_identical_to_dynamic(graph, cores, runs):
+    net, dyn = runs[graph]
+    r = net.compile(ExecutionPlan(mode=Mode.MEGAKERNEL, cores=cores)).run()
+    # States cover actor states, every ring byte (stale slots included)
+    # and all three cursors per channel (FifoState rd/wr/occ).
+    assert_states_identical(dyn.state, r.state)
+    assert _fire_counts(dyn) == _fire_counts(r)
+
+
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_grid_contiguous_cut_preserves_sweep_counts(graph, runs):
+    """The default cut is contiguous in visit order, so iterating cores
+    then rows reproduces the single-core visit order exactly — rounds
+    equal single-core sweeps (the determinism-by-construction claim)."""
+    net, dyn = runs[graph]
+    sweeps = {
+        cores: int(net.compile(
+            ExecutionPlan(mode=MEGAKERNEL, cores=cores)).run().sweeps)
+        for cores in CORE_COUNTS
+    }
+    assert sweeps[2] == sweeps[1] == int(dyn.sweeps)
+    assert sweeps[4] == sweeps[1]
+
+
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_grid_scrambled_assign_kahn_identical(graph, runs):
+    """A non-contiguous assignment changes the schedule (round count may
+    grow — tokens cross partitions backwards) but never the final bytes:
+    the Kahn-determinism guarantee a parallel grid mapping relies on."""
+    net, dyn = runs[graph]
+    assign = SCRAMBLED[graph](net)
+    r = net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=2,
+                                  assign=assign)).run()
+    assert_states_identical(dyn.state, r.state)
+    assert _fire_counts(dyn) == _fire_counts(r)
+
+
+def test_grid_resumes_quiescent_state():
+    net, _ = GRAPHS["moe_as_actors"]()
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=2))
+    r1 = prog.run()
+    r2 = prog.run(r1.state)
+    assert int(r2.sweeps) == 1          # one empty round: global quiescence
+    assert all(int(v) == 0 for v in r2.fire_counts.values())
+    assert_states_identical(r1.state, r2.state)
+
+
+# --------------------------------------------------------------------------- #
+# Partitioner: default heuristic, channel placement, validation.
+# --------------------------------------------------------------------------- #
+def test_default_assignment_glues_delay_channel_endpoints():
+    net, _ = GRAPHS["motion_detection"]()
+    for cores in (2, 4):
+        assign = default_assignment(net, cores)
+        assert assign["gauss"] == assign["thres"]   # delay < rate: glued
+        assert set(assign.values()) == set(range(cores))  # no empty core
+
+
+def test_partition_layout_channel_placement():
+    net, _ = GRAPHS["dpd"]()
+    layout = lower_network(net)
+    part = partition_layout(net, layout, cores=2)
+    assert isinstance(part, GridPartition)
+    names = list(net.actors)
+    # Every actor appears in exactly one core slice, in visit order.
+    flat = [i for rows in part.core_rows for i in rows]
+    assert sorted(flat) == list(range(len(names)))
+    for rows in part.core_rows:
+        assert list(rows) == sorted(rows)
+    # A channel is private to core c iff both endpoints live on c.
+    for fi, fname in enumerate(layout.fifo_names):
+        e = net.edge_of(fname)
+        src = part.assignment[names.index(e.src_actor)]
+        dst = part.assignment[names.index(e.dst_actor)]
+        if src == dst:
+            assert part.fifo_cores[fi] == src
+        else:
+            assert part.fifo_cores[fi] == SHARED
+    # Byte accounting: private blocks + shared block = all rings.
+    assert (sum(part.private_ring_bytes(layout))
+            + part.shared_ring_bytes(layout)) == layout.ring_scratch_bytes
+    assert part.semaphore_bytes() == 12 * len(part.shared_fifos)
+
+
+def test_partition_rejects_delay_channel_crossing():
+    net, _ = GRAPHS["motion_detection"]()
+    layout = lower_network(net)
+    assign = {"source": 0, "gauss": 0, "thres": 1, "med": 1, "sink": 1}
+    with pytest.raises(ValueError, match="may not cross partitions"):
+        partition_layout(net, layout, cores=2, assign=assign)
+    with pytest.raises(ValueError, match="may not cross partitions"):
+        net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=2, assign=assign))
+
+
+def test_partition_rejects_partial_or_out_of_range_assign():
+    net, _ = GRAPHS["moe_as_actors"]()
+    layout = lower_network(net)
+    with pytest.raises(ValueError, match="must map every actor"):
+        partition_layout(net, layout, cores=2, assign={"source": 0})
+    bad = {n: 0 for n in net.actors}
+    bad["sink"] = 2
+    with pytest.raises(ValueError, match=r"outside \[0, 2\)"):
+        partition_layout(net, layout, cores=2, assign=bad)
+    with pytest.raises(ValueError, match="unknown actors"):
+        partition_layout(net, layout, cores=2,
+                         assign={**{n: 0 for n in net.actors}, "ghost": 1})
+
+
+def test_partition_rejects_more_cores_than_units():
+    net, _ = GRAPHS["motion_detection"]()    # 5 actors, 4 units after glue
+    layout = lower_network(net)
+    with pytest.raises(ValueError, match="partition units"):
+        partition_layout(net, layout, cores=5)
+
+
+def test_plan_rejects_grid_knobs_off_megakernel():
+    with pytest.raises(ValueError, match="grid-partition knobs"):
+        ExecutionPlan(mode="dynamic", cores=2)
+    with pytest.raises(ValueError, match="grid-partition knobs"):
+        ExecutionPlan(mode="static", n_iterations=4, assign={"a": 0})
+    with pytest.raises(ValueError, match="cores must be"):
+        ExecutionPlan(mode=MEGAKERNEL, cores=0)
+
+
+# --------------------------------------------------------------------------- #
+# Per-partition telemetry (Program.stats).
+# --------------------------------------------------------------------------- #
+def test_grid_stats_telemetry():
+    net, _ = GRAPHS["motion_detection"]()
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=4))
+    st = prog.stats()
+    assert st.grid_cores == 4
+    assert [a for core in st.partition_actors for a in core] \
+        == list(net.actors)
+    layout = lower_network(net)
+    assert (sum(st.core_scratch_bytes)
+            + st.shared_scratch_bytes) \
+        == layout.ring_scratch_bytes + 12 * len(st.shared_fifos)
+    assert st.partition_fire_counts is None        # nothing ran yet
+    r = prog.run()
+    st = prog.stats()
+    assert sum(st.partition_fire_counts) == sum(_fire_counts(r).values())
+    # Single-core programs report the degenerate partition, not None —
+    # the telemetry shape is stable across core counts.
+    st1 = net.compile(ExecutionPlan(mode=MEGAKERNEL)).stats()
+    assert st1.grid_cores == 1
+    assert st1.shared_fifos == ()
+    assert st1.shared_scratch_bytes == 0
+
+
+def test_grid_collect_matches_dynamic(runs):
+    net, dyn = runs["motion_detection"]
+    dyn_prog = net.compile(ExecutionPlan(mode="dynamic"))
+    want = np.asarray(dyn_prog.collect("sink", dyn.state))
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=4))
+    prog.run()
+    np.testing.assert_array_equal(np.asarray(prog.collect("sink")), want)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import REGISTRY, get_config, smoke_config
-from repro.configs.base import SHAPES, input_specs
+from repro.configs.base import input_specs
 from repro.models import decode_step, init_params, prefill, train_loss
 
 ARCHS = sorted(REGISTRY)

@@ -12,8 +12,6 @@ import json
 import os
 import sys
 
-import pytest
-
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if REPO_ROOT not in sys.path:
     sys.path.insert(0, REPO_ROOT)  # benchmarks/ is a plain directory
@@ -80,17 +78,72 @@ def test_bench_megakernel_fast(tmp_path):
     assert len(ident) == 2
     for derived in ident:
         assert "bit-identical: True" in derived, derived
+    # Grid-parallel sweeps: every core count must stay bit-identical.
+    grid = [d for n, _, d in rows if n.endswith("_grid_vs_single")]
+    assert len(grid) == 2
+    for derived in grid:
+        assert "grid bit-identical: True" in derived, derived
     scratch = [d for n, _, d in rows if n.endswith("_scratch_bytes")]
     assert len(scratch) == 2 and all("scratch" in d for d in scratch)
+    splits = [d for n, _, d in rows if n.endswith("_grid_ring_split")]
+    assert len(splits) == 2 and all("shared" in d for d in splits)
     with open(json_path) as f:
         records = json.load(f)
     names = {r["name"] for r in records}
     for g in ("dpd", "moe"):
-        for e in ("dynamic_host", "megakernel", "static_specialized"):
+        for e in ("dynamic_host", "megakernel", "static_specialized",
+                  "grid2", "grid4"):
             assert f"mega_{g}_{e}" in names, sorted(names)
     for r in records:
         assert r["us_per_call"] > 0
         assert r["tokens_per_s"] > 0
+    # Kernel rows carry the structure fields the regression gate compares
+    # exactly (sweep/round counts and the core count).
+    by_name = {r["name"]: r for r in records}
+    for g in ("dpd", "moe"):
+        for e, cores in (("megakernel", 1), ("grid2", 2), ("grid4", 4)):
+            rec = by_name[f"mega_{g}_{e}"]
+            assert rec["cores"] == cores and rec["sweeps"] >= 1, rec
+
+
+def test_check_regression_compare_logic():
+    """The gate's verdict logic, on synthetic records (no bench run)."""
+    from benchmarks.check_regression import _merge, compare
+
+    base = {"a": {"name": "a", "tokens_per_s": 100.0, "sweeps": 3},
+            "b": {"name": "b", "tokens_per_s": 100.0},
+            "c": {"name": "c", "tokens_per_s": 100.0}}
+    # Machine 2x faster across the board; "b" relatively 2.5x slower.
+    fresh = {"a": {"name": "a", "tokens_per_s": 200.0, "sweeps": 3},
+             "b": {"name": "b", "tokens_per_s": 80.0},
+             "c": {"name": "c", "tokens_per_s": 200.0},
+             "d": {"name": "d", "tokens_per_s": 50.0}}
+    v = compare(base, fresh, floor=0.85)
+    assert v["a"]["status"] == "ok"           # calibrated 1.0x
+    assert v["b"]["status"] == "slow"
+    assert v["d"]["status"] == "new"
+    # Structure drift fails even when throughput looks fine.
+    drift = dict(fresh, a={"name": "a", "tokens_per_s": 200.0, "sweeps": 4})
+    assert compare(base, drift, floor=0.85)["a"]["status"] == "structure"
+    # Missing row.
+    gone = {k: r for k, r in fresh.items() if k != "c"}
+    assert compare(base, gone, floor=0.85)["c"]["status"] == "missing"
+    # Retry semantics: a row that recovers in any attempt merges to ok;
+    # a persistent slow row keeps its best (highest-ratio) verdict.
+    slow1 = compare(base, fresh, floor=0.85)
+    ok2 = compare(base, dict(fresh, b={"name": "b", "tokens_per_s": 200.0}),
+                  floor=0.85)
+    assert _merge([slow1, ok2])["b"]["status"] == "ok"
+    assert _merge([slow1, slow1])["b"]["status"] == "slow"
+    # Structure/missing verdicts are STICKY: a later lucky attempt must
+    # not launder a deterministic drift back to ok (in either order).
+    drifted = compare(base, drift, floor=0.85)
+    clean = compare(base, dict(fresh, b={"name": "b", "tokens_per_s": 200.0}),
+                    floor=0.85)
+    assert _merge([drifted, clean])["a"]["status"] == "structure"
+    assert _merge([clean, drifted])["a"]["status"] == "structure"
+    lost = compare(base, gone, floor=0.85)
+    assert _merge([lost, clean])["c"]["status"] == "missing"
 
 
 def test_bench_kernels():

@@ -4,7 +4,6 @@ validation.  The acceptance pin of the API redesign: the deprecated
 produce bit-identical ``NetworkState``s on the paper graphs."""
 import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

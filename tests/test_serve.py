@@ -1,6 +1,5 @@
 """Batched serving engine tests."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config
