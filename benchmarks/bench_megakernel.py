@@ -14,8 +14,10 @@ the single-core kernel) so a silent divergence fails the bench contract,
 exactly like the dynamic sweep-reduction rows in bench_executors.
 Besides the CSV rows, writes ``BENCH_megakernel.json``: ``{name,
 us_per_call, tokens_per_s}`` per executor x graph, with ``sweeps`` /
-``cores`` structure fields on the kernel rows (compared exactly by
-``benchmarks/check_regression.py``).
+``cores`` / ``scratch_bytes`` / ``shared_scratch_bytes`` /
+``forwarded_fifos`` structure fields on the kernel rows (compared
+exactly by ``benchmarks/check_regression.py`` — a scratch or
+forwarding regression fails CI like a sweep-count drift does).
 
 Caveat printed with the numbers: on CPU the megakernel runs in Pallas
 *interpret* mode — the comparison measures the scheduling structure, not
@@ -108,11 +110,16 @@ def bench_megakernel(fast: bool = False,
                 lambda p=p: jax.block_until_ready(p.run().state))
         med = _interleaved_medians(candidates, reps)
 
+        st1 = grid[1].stats()
         record(f"mega_{gname}_dynamic_host", med["dyn"], tokens,
                f"{int(rd.sweeps)} sweeps")
         record(f"mega_{gname}_megakernel", med["grid1"], tokens,
-               f"{int(rm.sweeps)} sweeps, interpret mode",
-               sweeps=int(rm.sweeps), cores=1)
+               f"{int(rm.sweeps)} sweeps, interpret mode, "
+               f"{len(st1.forwarded_fifos)} forwarded",
+               sweeps=int(rm.sweeps), cores=1,
+               scratch_bytes=int(st1.scratch_bytes),
+               shared_scratch_bytes=int(st1.shared_scratch_bytes),
+               forwarded_fifos=len(st1.forwarded_fifos))
         record(f"mega_{gname}_static_specialized", med["static"], tokens,
                "fused scan reference")
         for c in GRID_CORES[1:]:
@@ -121,7 +128,10 @@ def bench_megakernel(fast: bool = False,
                 f"mega_{gname}_grid{c}", med[f"grid{c}"], tokens,
                 f"{int(grid_runs[c].sweeps)} rounds, {c} cores, "
                 f"{st.shared_scratch_bytes} B shared rings+semaphores",
-                sweeps=int(grid_runs[c].sweeps), cores=c)
+                sweeps=int(grid_runs[c].sweeps), cores=c,
+                scratch_bytes=int(st.scratch_bytes),
+                shared_scratch_bytes=int(st.shared_scratch_bytes),
+                forwarded_fifos=len(st.forwarded_fifos))
         rows.append((f"mega_{gname}_vs_dynamic", 0.0,
                      f"{med['dyn'] / med['grid1']:.2f}x vs host dynamic "
                      f"(interpret-mode CPU; structure not kernel perf), "
@@ -133,9 +143,10 @@ def bench_megakernel(fast: bool = False,
                      f"grid bit-identical: {grid_identical}"))
         st = mega.stats()
         rows.append((f"mega_{gname}_scratch_bytes", 0.0,
-                     f"{st.scratch_bytes} scratch ({st.transient_scratch_bytes}"
-                     f" transient-reclaimable) vs {st.hbm_state_bytes} HBM "
-                     f"operands"))
+                     f"{st.scratch_bytes} scratch after forwarding "
+                     f"({st.reclaimed_scratch_bytes} reclaimed from "
+                     f"{len(st.forwarded_fifos)} transient rings) vs "
+                     f"{st.hbm_state_bytes} HBM operands"))
         splits = []
         for c in GRID_CORES[1:]:
             s = grid[c].stats()

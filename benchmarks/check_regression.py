@@ -4,10 +4,12 @@
 Two kinds of comparison, per record (keyed by ``name``):
 
   * **structure fields** — everything except the timing pair
-    (``sweeps``, ``cores``, and any future field) — compared **exactly**:
-    a sweep-count change is a scheduler-semantics change, not noise, and
-    fails the gate outright, as does a baseline row missing from the
-    fresh run;
+    (``sweeps``, ``cores``, ``scratch_bytes``, ``shared_scratch_bytes``,
+    ``forwarded_fifos``, and any future field) — compared **exactly**:
+    a sweep-count change is a scheduler-semantics change and a scratch /
+    forwarding-count drift is a memory-footprint regression, not noise;
+    either fails the gate outright, as does a baseline row missing from
+    the fresh run;
   * **tokens_per_s** — compared against a ``--floor`` (default 0.85x)
     after machine-speed calibration: the committed baselines were
     produced on one container and CI runners differ in absolute speed,

@@ -78,9 +78,12 @@ def main():
     assert np.allclose(out[0:RATE], 10.0 * np.arange(RATE * 4).reshape(RATE, 4))
     print("OK — dynamic data rates on the compiled path.")
 
-    # Same network as ONE persistent Pallas kernel: ring buffers live in
-    # kernel scratch, the token-driven sweep loop runs on the device
-    # (interpret mode off-TPU).  Bit-identical to the dynamic executor.
+    # Same network as ONE persistent Pallas kernel: buffered ring
+    # buffers live in kernel scratch, the token-driven sweep loop runs
+    # on the device (interpret mode off-TPU).  Bit-identical to the
+    # dynamic executor — and transient channels (provably drained every
+    # iteration) are FORWARDED as loop-carried windows instead of
+    # scratch rings: the scratch diet, visible in the stats.
     mega = net.compile(ExecutionPlan(mode=Mode.MEGAKERNEL))
     mresult = mega.run()
     stats = mega.stats()
@@ -88,6 +91,10 @@ def main():
     print(f"megakernel: {int(mresult.sweeps)} sweeps on-device, "
           f"{stats.scratch_bytes} B scratch vs "
           f"{stats.hbm_state_bytes} B HBM state")
+    print(f"  transient forwarding: {len(stats.forwarded_fifos)} of "
+          f"{stats.n_fifos} channels -> loop-carried windows, "
+          f"{stats.reclaimed_scratch_bytes} B of rings reclaimed "
+          f"({', '.join(stats.forwarded_fifos)})")
 
     # And grid-parallel: the firing table split across 2 cores (paper
     # §3.3 actor-to-core mapping), partition-crossing channels guarded
@@ -99,7 +106,9 @@ def main():
     assert np.array_equal(np.asarray(grid.collect("sink")), out)
     print(f"grid x2: partitions {gstats.partition_actors}, "
           f"{int(gresult.sweeps)} rounds, "
-          f"{gstats.shared_scratch_bytes} B shared rings+semaphores")
+          f"{gstats.shared_scratch_bytes} B shared rings+semaphores "
+          f"({gstats.cut_objective} cut), per-core cursor rows "
+          f"{gstats.core_cursor_rows} + {len(gstats.shared_fifos)} shared")
 
     # Note on donation: ExecutionPlan.donate defaults to "auto" — donate
     # only when the ring-buffered bytes are small enough that copy

@@ -2,19 +2,23 @@
 
 The third real execution backend (``ExecutionPlan(mode=Mode.MEGAKERNEL)``):
 the whole accelerated subnetwork lowers into a single persistent Pallas
-kernel whose Eq. 1 ring buffers live in scratch memory and whose
-token-driven sweep loop runs on the device (paper §3.3).  See
-``lower.py`` for the build-time layout/firing-table pass and ``kernel.py``
-for the kernel itself.
+kernel whose buffered Eq. 1 rings live in scratch memory — transient
+channels forward as loop-carried token windows instead — and whose
+token-driven sweep loop runs on the device (paper §3.3), with cursors
+split into per-core blocks plus a shared semaphore block under grid
+partitioning.  See ``lower.py`` for the build-time layout / firing-table
+/ partition-cut pass and ``kernel.py`` for the kernel itself.
 """
 from repro.core.megakernel.kernel import compile_megakernel
-from repro.core.megakernel.lower import (SHARED, FiringRow, GridPartition,
-                                         MegakernelLayout, PortBinding,
-                                         default_assignment, lower_network,
-                                         partition_layout, state_hbm_bytes)
+from repro.core.megakernel.lower import (CUT_OBJECTIVES, SHARED, FiringRow,
+                                         GridPartition, MegakernelLayout,
+                                         PortBinding, default_assignment,
+                                         lower_network, partition_layout,
+                                         state_hbm_bytes)
 
 __all__ = [
-    "SHARED", "FiringRow", "GridPartition", "MegakernelLayout",
-    "PortBinding", "compile_megakernel", "default_assignment",
-    "lower_network", "partition_layout", "state_hbm_bytes",
+    "CUT_OBJECTIVES", "SHARED", "FiringRow", "GridPartition",
+    "MegakernelLayout", "PortBinding", "compile_megakernel",
+    "default_assignment", "lower_network", "partition_layout",
+    "state_hbm_bytes",
 ]

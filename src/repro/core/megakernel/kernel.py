@@ -2,16 +2,27 @@
 
 One ``pl.pallas_call`` executes the whole network to quiescence:
 
-  * every Eq. 1 ring buffer is staged into a **scratch** allocation
+  * every **buffered** Eq. 1 ring is staged into a **scratch** allocation
     (``pltpu.VMEM`` shapes from :meth:`MegakernelLayout.scratch_shape`)
     at kernel entry and copied back to the HBM outputs at exit — between
     those two copies no channel traffic leaves the device's fast memory;
+  * **forwarded** channels (``GridPartition.forwarded_fifos``: the
+    core-private subset of the ``register_fifos`` transient analysis) get
+    no scratch ring and no HBM input operand at all — their Eq. 1
+    capacity lives as a **loop-carried token window** of the sweep loop,
+    written and read with the same masked offset arithmetic as the ring
+    path, initialized to the dead-slot zeros of ``init_state``;
   * FIFO cursors (rd / wr / occ per channel) and actor states are
     **loop-carried values** of the in-kernel sweep ``lax.while_loop`` —
-    the register-resident analogue of ``FifoState``'s scalars;
+    the register-resident analogue of ``FifoState``'s scalars.  The
+    cursor block is **split per core** (``GridPartition.cursor_rows``):
+    each core's private channels pack into that core's own block and only
+    partition-crossing channels share the semaphore block, so the
+    coherence surface a parallel grid mapping must fence is exactly the
+    shared block;
   * the sweep loop itself is the paper's §3.3 device-resident scheduler:
     each sweep visits every actor in declaration order, peeks its control
-    token straight out of scratch, and predicates up to
+    token straight out of channel storage, and predicates up to
     ``_max_fireable``-many firings on ring occupancy via ``lax.cond`` —
     the exact blocking semantics of the host-side token-driven executor,
     with no host round trip per dispatch decision.
@@ -25,8 +36,8 @@ out of the jaxpr, and the runner passes them as extra kernel inputs —
 weights enter the megakernel the same way they would enter any other
 accelerator kernel.
 
-**Bit-identity contract.**  The ring helpers (``_ring_read_masked``,
-``_ring_write_masked``, ``_ring_peek``) mirror ``FifoSpec.read_masked`` /
+**Bit-identity contract.**  The channel helpers (``_chan_read_masked``,
+``_chan_write_masked``, ``_chan_peek``) mirror ``FifoSpec.read_masked`` /
 ``write_masked`` / ``peek`` operation for operation — same offsets, same
 masked-window rewrite (disabled writes rewrite the current bytes, no
 ``lax.cond`` identity arm), same predicated slot-0 delay copy-back — and
@@ -34,7 +45,17 @@ masked-window rewrite (disabled writes rewrite the current bytes, no
 ``repro.core.executor`` namesakes.  Final states, fire counts and sweep
 counts are therefore bit-identical to ``compile_dynamic`` (pinned by
 ``tests/test_megakernel.py``; the ring helpers alone are pinned against
-the queue oracle in ``tests/test_megakernel_ring.py``).
+the queue oracle in ``tests/test_megakernel_ring.py``) — with ONE
+carve-out, mirroring the static specializer's dead-slot rule: a
+*forwarded* channel's loop-carried window starts from ``init_state``'s
+zeros instead of the incoming HBM buffer, so its **stale** ring bytes
+are no longer part of the contract (from a fresh ``init_state`` even
+those coincide — the masked updates evolve identical bytes from an
+identical zero start).  Live tokens, cursors, actor states, fire counts
+and sweeps remain exact; like the static specializer, forwarded
+channels must enter **drained** (occupancy 0 — checked per run when
+cursors are concrete), else compile with ``specialize=False`` to keep
+every ring in scratch.
 
 **Interpret fallback.**  ``interpret=None`` auto-selects Pallas interpret
 mode off-TPU so tier-1 runs the kernel on CPU; the Mosaic (non-interpret)
@@ -56,69 +77,138 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.executor import (_MAX_FIRINGS_PER_VISIT, RuntimeMode,
                                  _is_concrete, assert_mode_allows)
 from repro.core.fifo import FifoSpec, FifoState
-from repro.core.megakernel.lower import (FiringRow, GridPartition,
-                                         MegakernelLayout, lower_network,
-                                         partition_layout)
+from repro.core.megakernel.lower import (CURSOR_FIELDS, FiringRow,
+                                         GridPartition, MegakernelLayout,
+                                         lower_network, partition_layout)
 from repro.core.network import Network, NetworkState
 
-# Cursor row layout inside the packed (n_fifos, 3) block.
+# Cursor row layout inside each packed (rows, 3) cursor block.
 _RD, _WR, _OCC = 0, 1, 2
 
 
 # --------------------------------------------------------------------------- #
-# Scratch ring-buffer ops — FifoSpec's masked API, re-expressed on a Pallas
-# ref + a packed cursor row.  Each mirrors its fifo.py namesake bit for bit;
-# the phase-offset arithmetic is *shared* with FifoSpec (_read_offset /
-# _write_offset) so a future phase-scheme change cannot diverge silently.
+# Channel storage — scratch ring refs for buffered channels, loop-carried
+# token windows for forwarded ones, and the per-core cursor-block split.
 # --------------------------------------------------------------------------- #
-def _ring_peek(spec: FifoSpec, ring, cursors: jax.Array,
-               fi: int) -> jax.Array:
+@dataclasses.dataclass(frozen=True)
+class _ChannelStore:
+    """Trace-time view of the kernel's channel storage.
+
+    ``rings`` holds the scratch refs of buffered channels (indexed via
+    ``ring_pos``); forwarded channels live in the ``wins`` tuple threaded
+    through the sweep carry (indexed via ``fwd_pos``).  ``cursor_slot``
+    maps a flat channel index to its ``(block, row)`` in the split
+    cursor-block tuple (``GridPartition.cursor_rows``: one private block
+    per core, then the shared semaphore block).
+    """
+
+    specs: Tuple[FifoSpec, ...]
+    rings: Tuple[Any, ...]
+    ring_pos: Dict[int, int]
+    fwd_pos: Dict[int, int]
+    cursor_slot: Tuple[Tuple[int, int], ...]
+
+
+def _cur(curs: Tuple[jax.Array, ...], slot: Tuple[int, int],
+         field: int) -> jax.Array:
+    block, row = slot
+    return curs[block][row, field]
+
+
+def _cur_advance(curs: Tuple[jax.Array, ...], slot: Tuple[int, int],
+                 rd=None, wr=None, occ=None) -> Tuple[jax.Array, ...]:
+    block, row = slot
+    blk = curs[block]
+    if rd is not None:
+        blk = blk.at[row, _RD].add(rd)
+    if wr is not None:
+        blk = blk.at[row, _WR].add(wr)
+    if occ is not None:
+        blk = blk.at[row, _OCC].add(occ)
+    return curs[:block] + (blk,) + curs[block + 1:]
+
+
+# --------------------------------------------------------------------------- #
+# Channel ops — FifoSpec's masked API, re-expressed on the channel store.
+# Each mirrors its fifo.py namesake bit for bit; the phase-offset
+# arithmetic is *shared* with FifoSpec (_read_offset / _write_offset) so a
+# future phase-scheme change cannot diverge silently.  The forwarded path
+# runs the same offsets and the same masked-window rewrite on the carried
+# window value, so from identical initial bytes every byte evolves
+# identically to a ring.
+# --------------------------------------------------------------------------- #
+def _window_slice(store: _ChannelStore, wins: Tuple[jax.Array, ...],
+                  fi: int, off: jax.Array, size: int) -> jax.Array:
+    p = store.fwd_pos.get(fi)
+    if p is not None:
+        return jax.lax.dynamic_slice_in_dim(wins[p], off, size, axis=0)
+    return store.rings[store.ring_pos[fi]][pl.ds(off, size)]
+
+
+def _chan_peek(store: _ChannelStore, wins, curs, fi: int) -> jax.Array:
     """``FifoSpec.peek``: next single token, cursor untouched."""
-    off = spec._read_offset(cursors[fi, _RD])
-    return ring[pl.ds(off, 1)][0]
+    spec = store.specs[fi]
+    off = spec._read_offset(_cur(curs, store.cursor_slot[fi], _RD))
+    return _window_slice(store, wins, fi, off, 1)[0]
 
 
-def _ring_read(spec: FifoSpec, ring, cursors: jax.Array,
-               fi: int) -> Tuple[jax.Array, jax.Array]:
+def _chan_read(store: _ChannelStore, wins, curs,
+               fi: int) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
     """``FifoSpec.read``: unconditional window consume (control ports)."""
-    off = spec._read_offset(cursors[fi, _RD])
-    window = ring[pl.ds(off, spec.rate)]
-    cursors = (cursors.at[fi, _RD].add(1)
-                      .at[fi, _OCC].add(-spec.rate))
-    return window, cursors
+    spec = store.specs[fi]
+    slot = store.cursor_slot[fi]
+    off = spec._read_offset(_cur(curs, slot, _RD))
+    window = _window_slice(store, wins, fi, off, spec.rate)
+    curs = _cur_advance(curs, slot, rd=1, occ=-spec.rate)
+    return window, curs
 
 
-def _ring_read_masked(spec: FifoSpec, ring, cursors: jax.Array, fi: int,
-                      enabled: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _chan_read_masked(store: _ChannelStore, wins, curs, fi: int,
+                      enabled: jax.Array
+                      ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
     """``FifoSpec.read_masked``: static-shaped window, masked cursor
     advance; disabled reads return the current (stale) slots exactly as
     the functional API does, so gated consumers see identical bytes."""
-    off = spec._read_offset(cursors[fi, _RD])
-    window = ring[pl.ds(off, spec.rate)]
+    spec = store.specs[fi]
+    slot = store.cursor_slot[fi]
+    off = spec._read_offset(_cur(curs, slot, _RD))
+    window = _window_slice(store, wins, fi, off, spec.rate)
     e = enabled.astype(jnp.int32)
-    cursors = (cursors.at[fi, _RD].add(e)
-                      .at[fi, _OCC].add(-e * spec.rate))
-    return window, cursors
+    curs = _cur_advance(curs, slot, rd=e, occ=-e * spec.rate)
+    return window, curs
 
 
-def _ring_write_masked(spec: FifoSpec, ring, cursors: jax.Array, fi: int,
-                       tokens: jax.Array, enabled: jax.Array) -> jax.Array:
+def _chan_write_masked(store: _ChannelStore, wins, curs, fi: int,
+                       tokens: jax.Array, enabled: jax.Array
+                       ) -> Tuple[Tuple[jax.Array, ...],
+                                  Tuple[jax.Array, ...]]:
     """``FifoSpec.write_masked``: the window slot is rewritten
     unconditionally with either the new tokens or its current content
     (no cond identity arm), and delay channels fold the Fig. 2 copy-back
-    into a predicated single-token rewrite of slot 0."""
+    into a predicated single-token rewrite of slot 0 (forwarded channels
+    are delay-free by construction, so only the ring path carries it)."""
+    spec = store.specs[fi]
+    slot = store.cursor_slot[fi]
     e = enabled.astype(jnp.int32)
-    off = spec._write_offset(cursors[fi, _WR])
-    cur = ring[pl.ds(off, spec.rate)]
-    eff = jnp.where(enabled, jnp.asarray(tokens, spec.dtype), cur)
-    ring[pl.ds(off, spec.rate)] = eff
-    if spec.delay:
-        do_copy = jnp.logical_and(
-            enabled, (cursors[fi, _WR] % spec.n_write_phases) == 2)
-        slot0 = jnp.where(do_copy, ring[3 * spec.rate], ring[0])
-        ring[pl.ds(0, 1)] = slot0[None]
-    return (cursors.at[fi, _WR].add(e)
-                   .at[fi, _OCC].add(e * spec.rate))
+    off = spec._write_offset(_cur(curs, slot, _WR))
+    p = store.fwd_pos.get(fi)
+    if p is not None:
+        cur = jax.lax.dynamic_slice_in_dim(wins[p], off, spec.rate, axis=0)
+        eff = jnp.where(enabled, jnp.asarray(tokens, spec.dtype), cur)
+        w = jax.lax.dynamic_update_slice_in_dim(wins[p], eff, off, axis=0)
+        wins = wins[:p] + (w,) + wins[p + 1:]
+    else:
+        ring = store.rings[store.ring_pos[fi]]
+        cur = ring[pl.ds(off, spec.rate)]
+        eff = jnp.where(enabled, jnp.asarray(tokens, spec.dtype), cur)
+        ring[pl.ds(off, spec.rate)] = eff
+        if spec.delay:
+            do_copy = jnp.logical_and(
+                enabled, (_cur(curs, slot, _WR) % spec.n_write_phases) == 2)
+            slot0 = jnp.where(do_copy, ring[3 * spec.rate], ring[0])
+            ring[pl.ds(0, 1)] = slot0[None]
+    curs = _cur_advance(curs, slot, wr=e, occ=e * spec.rate)
+    return wins, curs
 
 
 # --------------------------------------------------------------------------- #
@@ -244,76 +334,81 @@ def _rates_for(a, fns: _ActorFns, consts: List[jax.Array],
 
 
 def _can_fire(network: Network, layout: MegakernelLayout, row: FiringRow,
-              fns: _ActorFns, consts: List[jax.Array], rings,
-              cursors: jax.Array, actors: Tuple[Any, ...]) -> jax.Array:
-    """Blocking predicate of paper §2.2 on scratch occupancies — mirrors
-    ``executor._can_fire`` (same and-tree order, control token peeked)."""
+              fns: _ActorFns, consts: List[jax.Array], store: _ChannelStore,
+              wins: Tuple[jax.Array, ...], curs: Tuple[jax.Array, ...],
+              actors: Tuple[Any, ...]) -> jax.Array:
+    """Blocking predicate of paper §2.2 on channel-store occupancies —
+    mirrors ``executor._can_fire`` (same and-tree order, control token
+    peeked).  Occupancies of crossing channels come from the shared
+    cursor block — the in-kernel semaphore poll."""
     a = network.actors[row.name]
     specs = layout.fifo_specs
+    slot = store.cursor_slot
     ok = jnp.bool_(True)
     if row.has_ready:
         ok = jnp.logical_and(ok, fns.ready.call(
             (actors[row.index],), [consts[i] for i in fns.ready.const_ids]))
     if row.control is not None:
         ci = row.control
-        ok = jnp.logical_and(ok, cursors[ci, _OCC] >= 1)  # can_peek
-        rates = _rates_for(a, fns, consts,
-                           _ring_peek(specs[ci], rings[ci], cursors, ci))
+        ok = jnp.logical_and(ok, _cur(curs, slot[ci], _OCC) >= 1)  # can_peek
+        rates = _rates_for(a, fns, consts, _chan_peek(store, wins, curs, ci))
     else:
         rates = _rates_for(a, fns, consts, None)
     for pb in row.inputs:
         spec = specs[pb.fifo]
-        have = cursors[pb.fifo, _OCC] >= spec.rate
+        have = _cur(curs, slot[pb.fifo], _OCC) >= spec.rate
         ok = jnp.logical_and(ok, jnp.logical_or(rates[pb.port] == 0, have))
     for pb in row.outputs:
         spec = specs[pb.fifo]
-        room = (cursors[pb.fifo, _OCC] + spec.rate
+        room = (_cur(curs, slot[pb.fifo], _OCC) + spec.rate
                 <= spec.writable_occupancy_bound)
         ok = jnp.logical_and(ok, jnp.logical_or(rates[pb.port] == 0, room))
     return ok
 
 
 def _max_fireable(layout: MegakernelLayout, row: FiringRow,
-                  cursors: jax.Array) -> jax.Array:
+                  store: _ChannelStore,
+                  curs: Tuple[jax.Array, ...]) -> jax.Array:
     """Occupancy-derived multi-firing bound — mirrors
     ``executor._max_fireable`` (PRUNE-style decidable bound)."""
+    slot = store.cursor_slot
     if row.control is not None:
         return jnp.minimum(jnp.int32(_MAX_FIRINGS_PER_VISIT),
-                           cursors[row.control, _OCC])
+                           _cur(curs, slot[row.control], _OCC))
     specs = layout.fifo_specs
     k = jnp.int32(_MAX_FIRINGS_PER_VISIT)
     for pb in row.inputs:
-        k = jnp.minimum(k, cursors[pb.fifo, _OCC] // specs[pb.fifo].rate)
+        k = jnp.minimum(k, _cur(curs, slot[pb.fifo], _OCC)
+                        // specs[pb.fifo].rate)
     for pb in row.outputs:
         spec = specs[pb.fifo]
-        room = spec.writable_occupancy_bound - cursors[pb.fifo, _OCC]
+        room = spec.writable_occupancy_bound - _cur(curs, slot[pb.fifo], _OCC)
         k = jnp.minimum(k, room // spec.rate)
     return k
 
 
 def _fire(network: Network, layout: MegakernelLayout, row: FiringRow,
-          fns: _ActorFns, consts: List[jax.Array], rings,
-          cursors: jax.Array,
-          actors: Tuple[Any, ...]) -> Tuple[jax.Array, Tuple[Any, ...]]:
-    """One firing against the scratch rings — mirrors
+          fns: _ActorFns, consts: List[jax.Array], store: _ChannelStore,
+          wins: Tuple[jax.Array, ...], curs: Tuple[jax.Array, ...],
+          actors: Tuple[Any, ...]
+          ) -> Tuple[Tuple[jax.Array, ...], Tuple[jax.Array, ...],
+                     Tuple[Any, ...]]:
+    """One firing against the channel store — mirrors
     ``executor.fire_actor``'s masked (phase=None) path step for step:
     control consume, rates, masked input reads, predicated body, masked
     output writes."""
     a = network.actors[row.name]
-    specs = layout.fifo_specs
 
     ctrl_tok = None
     if row.control is not None:
-        ci = row.control
-        ctok, cursors = _ring_read(specs[ci], rings[ci], cursors, ci)
+        ctok, curs = _chan_read(store, wins, curs, row.control)
         ctrl_tok = ctok[0]
     rates = _rates_for(a, fns, consts, ctrl_tok)
 
     windows: Dict[str, jax.Array] = {}
     for pb in row.inputs:
-        windows[pb.port], cursors = _ring_read_masked(
-            specs[pb.fifo], rings[pb.fifo], cursors, pb.fifo,
-            rates[pb.port] > 0)
+        windows[pb.port], curs = _chan_read_masked(
+            store, wins, curs, pb.fifo, rates[pb.port] > 0)
 
     enabled_list = [rates[p] for p in (*a.in_ports, *a.out_ports)]
     concrete_on = any(_is_concrete(e) and int(e) > 0 for e in enabled_list)
@@ -323,7 +418,7 @@ def _fire(network: Network, layout: MegakernelLayout, row: FiringRow,
     else:
         any_enabled = jnp.bool_(True)
 
-    out_specs = {pb.port: specs[pb.fifo] for pb in row.outputs}
+    out_specs = {pb.port: layout.fifo_specs[pb.fifo] for pb in row.outputs}
 
     def run_body(operand):
         st, wins = operand
@@ -355,12 +450,12 @@ def _fire(network: Network, layout: MegakernelLayout, row: FiringRow,
         new_actor_state, outputs = run_body((actors[row.index], windows))
 
     for pb in row.outputs:
-        cursors = _ring_write_masked(
-            specs[pb.fifo], rings[pb.fifo], cursors, pb.fifo,
-            outputs[pb.port], rates[pb.port] > 0)
+        wins, curs = _chan_write_masked(
+            store, wins, curs, pb.fifo, outputs[pb.port],
+            rates[pb.port] > 0)
 
     actors = actors[:row.index] + (new_actor_state,) + actors[row.index + 1:]
-    return cursors, actors
+    return wins, curs, actors
 
 
 # --------------------------------------------------------------------------- #
@@ -371,33 +466,71 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
                   actor_treedef, scalar_leaf: List[bool],
                   scalar_const: List[bool],
                   multi_firing: bool, max_sweeps: int,
-                  partition: GridPartition) -> Callable:
+                  partition: GridPartition,
+                  fwd_list: Tuple[int, ...],
+                  buffered: Tuple[int, ...]) -> Callable:
     n_fifos = len(layout.fifo_specs)
     n_actors = len(network.actors)
     n_leaves = len(scalar_leaf)
     n_consts = len(scalar_const)
+    # Channel storage split: forwarded channels (loop-carried windows,
+    # no HBM input / no scratch) vs buffered ones (staged scratch rings).
+    # `fwd_list`/`buffered` come from compile_megakernel — the SAME
+    # tuples that ordered the pallas_call's input operands and scratch
+    # shapes, so ring_pos indexing cannot drift from the operand order.
+    fwd_pos = {fi: p for p, fi in enumerate(fwd_list)}
+    ring_pos = {fi: p for p, fi in enumerate(buffered)}
+    # Per-core cursor blocks + the shared semaphore block; `cursor_order`
+    # flattens the blocks, `inv_order` scatters them back into the packed
+    # (n_fifos, 3) HBM layout at exit.
+    cursor_rows = partition.cursor_rows
+    cursor_slot = [None] * n_fifos
+    for b, rows in enumerate(cursor_rows):
+        for r, fi in enumerate(rows):
+            cursor_slot[fi] = (b, r)
+    cursor_slot = tuple(cursor_slot)
 
     def kernel(*refs):
-        buf_in = refs[:n_fifos]
-        cur_in = refs[n_fifos]
-        leaf_in = refs[n_fifos + 1:n_fifos + 1 + n_leaves]
-        const_in = refs[n_fifos + 1 + n_leaves:
-                        n_fifos + 1 + n_leaves + n_consts]
-        o = n_fifos + 1 + n_leaves + n_consts
+        n_bufs = len(buffered)
+        buf_in = refs[:n_bufs]
+        cur_in = refs[n_bufs]
+        leaf_in = refs[n_bufs + 1:n_bufs + 1 + n_leaves]
+        const_in = refs[n_bufs + 1 + n_leaves:
+                        n_bufs + 1 + n_leaves + n_consts]
+        o = n_bufs + 1 + n_leaves + n_consts
         buf_out = refs[o:o + n_fifos]
         cur_out = refs[o + n_fifos]
         leaf_out = refs[o + n_fifos + 1:o + n_fifos + 1 + n_leaves]
         counts_ref = refs[o + n_fifos + 1 + n_leaves]
         sweeps_ref = refs[o + n_fifos + 2 + n_leaves]
         rings = refs[o + n_fifos + 3 + n_leaves:]
-        assert len(rings) == n_fifos
+        assert len(rings) == n_bufs
 
-        # 1. Stage every Eq. 1 ring buffer into device scratch; read the
-        #    cursor block, actor states and hoisted closure arrays into
-        #    loop-carried / trace-bound values.
-        for i in range(n_fifos):
-            rings[i][...] = buf_in[i][...]
-        cursors0 = cur_in[...]
+        # 1. Stage the buffered Eq. 1 rings into device scratch; read the
+        #    packed cursor block and split it into the per-core blocks +
+        #    the shared semaphore block; actor states and hoisted closure
+        #    arrays become loop-carried / trace-bound values.  Forwarded
+        #    channels start from init_state's zeros (the dead-slot
+        #    carve-out): their HBM buffers are not kernel inputs at all.
+        for p in range(n_bufs):
+            rings[p][...] = buf_in[p][...]
+        store = _ChannelStore(specs=layout.fifo_specs, rings=tuple(rings),
+                              ring_pos=ring_pos, fwd_pos=fwd_pos,
+                              cursor_slot=cursor_slot)
+        # Static per-row stacking (NOT a fancy-index gather: a constant
+        # index array would become a captured jaxpr const, which
+        # pallas_call rejects — the same constraint _hoist_consts works
+        # around for actor closures).
+        cursors_packed = cur_in[...]
+        curs0 = tuple(
+            jnp.stack([cursors_packed[fi] for fi in rows]) if rows
+            else jnp.zeros((0, CURSOR_FIELDS), jnp.int32)
+            for rows in cursor_rows)
+        wins0 = tuple(
+            jnp.zeros((layout.fifo_specs[fi].capacity_tokens,)
+                      + tuple(layout.fifo_specs[fi].token_shape),
+                      layout.fifo_specs[fi].dtype)
+            for fi in fwd_list)
         leaves0 = [leaf_in[j][...].reshape(()) if scalar_leaf[j]
                    else leaf_in[j][...] for j in range(n_leaves)]
         actors0 = tuple(jax.tree.unflatten(actor_treedef, leaves0))
@@ -407,26 +540,30 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         # 2. Device-resident sweep loop (mirrors executor._compile_dynamic:
         #    same visit order, same per-visit multi-firing bound, same
         #    quiescence condition, same sweep accounting).
-        def attempt(row, cursors, actors, counts):
+        def attempt(row, wins, curs, actors, counts):
             ready = _can_fire(network, layout, row, fns[row.name], consts,
-                              rings, cursors, actors)
+                              store, wins, curs, actors)
 
             def do(c):
-                cursors, actors, counts = c
-                cursors, actors = _fire(network, layout, row, fns[row.name],
-                                        consts, rings, cursors, actors)
-                return cursors, actors, counts.at[row.index].add(1)
+                wins, curs, actors, counts = c
+                wins, curs, actors = _fire(network, layout, row,
+                                           fns[row.name], consts, store,
+                                           wins, curs, actors)
+                return wins, curs, actors, counts.at[row.index].add(1)
 
-            cursors, actors, counts = jax.lax.cond(
-                ready, do, lambda c: c, (cursors, actors, counts))
-            return cursors, actors, counts, ready
+            wins, curs, actors, counts = jax.lax.cond(
+                ready, do, lambda c: c, (wins, curs, actors, counts))
+            return wins, curs, actors, counts, ready
 
         # The grid-parallel sweep (paper §3.3 actor-to-core mapping): each
         # core runs its own occupancy-bounded firing loop over its
-        # partition slice of the firing table; `cursors` is the SHARED
-        # cursor block, so a cross-partition `_can_fire` polls the remote
-        # ring's monotonic rd/wr counters — the in-kernel semaphore
-        # analogue of `heterogeneous_split`'s boundary actors.  The core
+        # partition slice of the firing table.  A core's private channels
+        # keep their cursor rows in that core's own block; only crossing
+        # channels sit in the shared block, so a cross-partition
+        # `_can_fire` polls the remote ring's monotonic rd/wr counters
+        # there — the in-kernel semaphore analogue of
+        # `heterogeneous_split`'s boundary actors, now isolated to
+        # exactly `GridPartition.semaphore_bytes()` of state.  The core
         # loop is traced in fixed partition order (the interpret-mode /
         # sequential-grid tie-break, which makes the schedule — and thus
         # every ring byte — deterministic by construction); a genuinely
@@ -434,48 +571,61 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         # determinism keeps invisible in the final state.  Quiescence is
         # global: the sweep ends when ALL partitions report no progress.
         def sweep(carry):
-            cursors, actors, counts, _, sweeps = carry
+            wins, curs, actors, counts, _, sweeps = carry
             core_progress = []
             for rows_ix in partition.core_rows:
                 core_fired = jnp.bool_(False)
                 for ri in rows_ix:
                     row = layout.firing_table[ri]
                     if multi_firing:
-                        k = _max_fireable(layout, row, cursors)
+                        k = _max_fireable(layout, row, store, curs)
 
                         def body(_, c, row=row):
-                            cursors, actors, counts, fired = c
-                            cursors, actors, counts, ready = attempt(
-                                row, cursors, actors, counts)
-                            return (cursors, actors, counts,
+                            wins, curs, actors, counts, fired = c
+                            wins, curs, actors, counts, ready = attempt(
+                                row, wins, curs, actors, counts)
+                            return (wins, curs, actors, counts,
                                     jnp.logical_or(fired, ready))
 
-                        cursors, actors, counts, fired = jax.lax.fori_loop(
-                            0, k, body,
-                            (cursors, actors, counts, jnp.bool_(False)))
+                        wins, curs, actors, counts, fired = \
+                            jax.lax.fori_loop(
+                                0, k, body,
+                                (wins, curs, actors, counts,
+                                 jnp.bool_(False)))
                     else:
-                        cursors, actors, counts, fired = attempt(
-                            row, cursors, actors, counts)
+                        wins, curs, actors, counts, fired = attempt(
+                            row, wins, curs, actors, counts)
                     core_fired = jnp.logical_or(core_fired, fired)
                 core_progress.append(core_fired)
             fired_any = functools.reduce(jnp.logical_or, core_progress,
                                          jnp.bool_(False))
-            return cursors, actors, counts, fired_any, sweeps + 1
+            return wins, curs, actors, counts, fired_any, sweeps + 1
 
         def cond(carry):
-            _, _, _, fired_any, sweeps = carry
+            _, _, _, _, fired_any, sweeps = carry
             return jnp.logical_and(fired_any, sweeps < max_sweeps)
 
-        carry = (cursors0, actors0, jnp.zeros((n_actors,), jnp.int32),
+        carry = (wins0, curs0, actors0,
+                 jnp.zeros((n_actors,), jnp.int32),
                  jnp.bool_(True), jnp.int32(0))
-        cursors, actors, counts, _, sweeps = jax.lax.while_loop(
+        wins, curs, actors, counts, _, sweeps = jax.lax.while_loop(
             cond, sweep, carry)
 
-        # 3. Copy the rings back out of scratch; emit cursors, actor
-        #    states, fire counts and the sweep count.
+        # 3. Copy the buffered rings back out of scratch and the carried
+        #    windows of forwarded channels into their buffer outputs;
+        #    repack the split cursor blocks; emit actor states, fire
+        #    counts and the sweep count.
         for i in range(n_fifos):
-            buf_out[i][...] = rings[i][...]
-        cur_out[...] = cursors
+            p = fwd_pos.get(i)
+            if p is not None:
+                buf_out[i][...] = wins[p]
+            else:
+                buf_out[i][...] = rings[ring_pos[i]][...]
+        packed_rows = [None] * n_fifos
+        for b, rows in enumerate(cursor_rows):
+            for r, fi in enumerate(rows):
+                packed_rows[fi] = curs[b][r]
+        cur_out[...] = jnp.stack(packed_rows)
         leaves = jax.tree.leaves(actors)
         assert len(leaves) == n_leaves
         for j in range(n_leaves):
@@ -497,12 +647,15 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                        layout: Optional[MegakernelLayout] = None,
                        cores: int = 1,
                        assign: Optional[Dict[str, int]] = None,
-                       partition: Optional[GridPartition] = None) -> Callable:
+                       partition: Optional[GridPartition] = None,
+                       cut_objective: str = "crossing",
+                       forward_transients: bool = True) -> Callable:
     """Compile the network into one persistent Pallas kernel.
 
     Returns ``runner(state) -> (final_state, fire_counts, n_sweeps)`` with
     the exact signature and bit-exact results of the token-driven dynamic
-    executor (``executor._compile_dynamic(..., return_sweeps=True)``).
+    executor (``executor._compile_dynamic(..., return_sweeps=True)``) —
+    modulo the forwarded-channel dead-slot carve-out (module docstring).
 
     ``interpret=None`` auto-selects Pallas interpret mode on non-TPU
     backends (the tier-1 CPU fallback); pass an explicit bool to force
@@ -512,25 +665,37 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
 
     ``cores`` > 1 partitions the firing table across grid partitions
     (:func:`partition_layout`; ``assign`` pins actors to cores, default
-    is the load-balanced contiguous cut): each core sweeps only its
+    is the contiguous ``cut_objective`` cut): each core sweeps only its
     slice and quiescence becomes global (no partition fired).  Final
-    states, ring bytes, cursors and fire counts stay bit-identical to
-    the single-core kernel for every core count (Kahn determinism plus
+    states, live ring bytes, cursors and fire counts stay bit-identical
+    to the single-core kernel for every core count (Kahn determinism plus
     the fixed partition-order tie-break); the sweep count is the number
     of global rounds.  ``partition`` lets ``Program`` pass a prebuilt
-    :class:`GridPartition` instead of partitioning twice.
+    :class:`GridPartition` instead of partitioning twice (in which case
+    ``cut_objective`` / ``forward_transients`` are already baked in).
+
+    ``forward_transients=False`` disables the transient-forwarding pass:
+    every channel keeps a scratch ring and the kernel is bit-identical
+    to the dynamic executor with no carve-out at all (the pre-forwarding
+    behaviour; also the escape hatch for resuming states whose transient
+    channels are not drained).
     """
     assert_mode_allows(network, mode)
     if layout is None:
         layout = lower_network(network)
     if partition is None:
-        partition = partition_layout(network, layout, cores, assign)
+        partition = partition_layout(network, layout, cores, assign,
+                                     objective=cut_objective,
+                                     forward_transients=forward_transients)
     fns, const_arrays = _hoist_consts(network, layout)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n_fifos = len(layout.fifo_specs)
     n_actors = len(network.actors)
     actor_names = tuple(network.actors)
+    fwd_list = tuple(partition.forwarded_fifos)
+    fwd_set = frozenset(fwd_list)
+    buffered = tuple(i for i in range(n_fifos) if i not in fwd_set)
     scalar_const = [c.ndim == 0 for c in const_arrays]
     kernel_consts = [c.reshape(1) if s else c
                      for c, s in zip(const_arrays, scalar_const)]
@@ -538,7 +703,9 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
     def run(state):
         if not isinstance(state, NetworkState):
             state = network.state_from_dict(state)
-        bufs = [f.buf for f in state.fifos]
+        # Forwarded channels enter as loop-carried windows, not HBM
+        # operands: only the buffered rings are kernel inputs.
+        bufs = [state.fifos[i].buf for i in buffered]
         cursors = jnp.stack(
             [jnp.stack([jnp.asarray(f.rd, jnp.int32),
                         jnp.asarray(f.wr, jnp.int32),
@@ -552,9 +719,10 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
 
         kernel = _build_kernel(network, layout, fns, treedef, scalar_leaf,
                                scalar_const, multi_firing, max_sweeps,
-                               partition)
+                               partition, fwd_list, buffered)
         out_shape = (
-            [jax.ShapeDtypeStruct(b.shape, b.dtype) for b in bufs]
+            [jax.ShapeDtypeStruct(f.buf.shape, f.buf.dtype)
+             for f in state.fifos]
             + [jax.ShapeDtypeStruct((n_fifos, 3), jnp.int32)]
             + [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in kernel_leaves]
             + [jax.ShapeDtypeStruct((n_actors,), jnp.int32),
@@ -562,7 +730,7 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
         )
         scratch_shapes = [
             pltpu.VMEM(layout.scratch_shape(i), layout.fifo_specs[i].dtype)
-            for i in range(n_fifos)
+            for i in buffered
         ]
         outs = pl.pallas_call(
             kernel,
@@ -592,6 +760,24 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
     jitted = jax.jit(run)
 
     def runner(state):
+        if fwd_list:
+            st = (state if isinstance(state, NetworkState)
+                  else network.state_from_dict(state))
+            # The static specializer's drained-entry rule, per run: a
+            # forwarded channel's window starts from dead-slot zeros, so
+            # live tokens entering on it would be dropped.  Checked only
+            # when cursors are concrete (callers jitting the runner keep
+            # the contract by construction of the states they thread).
+            for fi in fwd_list:
+                occ = st.fifos[fi].occ
+                if _is_concrete(occ) and int(occ):
+                    raise ValueError(
+                        f"megakernel transient forwarding: fifo "
+                        f"{layout.fifo_names[fi]!r} enters with occupancy "
+                        f"{int(occ)}; forwarded channels must be drained "
+                        "(start from Network.init_state, or compile with "
+                        "ExecutionPlan(specialize=False) to keep every "
+                        "ring in scratch)")
         return jitted(state)
 
     # Exposed for Program.stats: the hoisted closure arrays are kernel

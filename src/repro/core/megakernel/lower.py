@@ -23,12 +23,20 @@ Outputs of :func:`lower_network`:
     channel indices at build time so the traced kernel never touches a
     name-keyed dict;
   * reused analyses — ``Network.register_fifos`` (channels the static
-    specializer proves transient; the megakernel keeps them ring-buffered
-    for bit-identity with the dynamic executor but reports them as the
-    candidates a future in-kernel forwarding pass would keep VMEM-only)
-    and :func:`~repro.core.schedule.phase_unroll_period` (the unroll
-    period a static in-kernel prologue would use; recorded for the stats
-    table and the ROADMAP follow-on, not yet acted on).
+    specializer proves transient; :func:`partition_layout` promotes the
+    core-private subset of them to **in-kernel forwarding**: their rings
+    become loop-carried token windows instead of scratch allocations, see
+    ``kernel.py``) and :func:`~repro.core.schedule.phase_unroll_period`
+    (the unroll period a static in-kernel prologue would use; recorded
+    for the stats table and the ROADMAP follow-on, not yet acted on).
+
+Grid partitioning (:func:`partition_layout`) additionally classifies each
+channel as core-private or :data:`SHARED` and, by default, picks the
+actor-to-core cut with the **crossing-bytes objective**: among contiguous
+cuts of the visit order whose ``cost_flops`` bottleneck stays within
+:data:`_CUT_BALANCE_SLACK` of the optimum, minimize the ring bytes of
+partition-crossing channels — keeping fork/adder fan-outs core-local so
+their rings stay private (and their transient subset stays forwardable).
 """
 from __future__ import annotations
 
@@ -50,6 +58,21 @@ _CURSOR_ITEMSIZE = 4
 #: its ring lives in the shared block and its cursor row acts as the
 #: cross-core semaphore (monotonic rd/wr counters polled in-kernel).
 SHARED = -1
+
+#: Partition-cut objectives accepted by :func:`partition_layout` /
+#: :func:`default_assignment`.  ``"crossing"`` (default) minimizes the
+#: ring bytes of partition-crossing channels among contiguous cuts whose
+#: ``cost_flops`` bottleneck stays within :data:`_CUT_BALANCE_SLACK` of
+#: the flops-only optimum; ``"flops"`` is the legacy pure load-balance
+#: cut (linear-partition DP over ``cost_flops`` alone).
+CUT_OBJECTIVES = ("crossing", "flops")
+
+#: How far above the flops-only optimal bottleneck the crossing-bytes
+#: cut may trade load balance for locality.  1.25 keeps every core
+#: within 25% of the best achievable max-load while letting the cut
+#: move off a fan-out boundary (measured on DPD: the flops cut lands
+#: mid-fork and shares 23 of 34 channels at 4 cores).
+_CUT_BALANCE_SLACK = 1.25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +111,10 @@ class MegakernelLayout:
     fifo_specs: Tuple[FifoSpec, ...]
     firing_table: Tuple[FiringRow, ...]
     # Channels the specialized static executor would register-allocate
-    # (Network.register_fifos).  Kept ring-buffered here for bit-identity
-    # with compile_dynamic; reported so stats can show how much of the
-    # scratch footprint a forwarding pass would reclaim.
+    # (Network.register_fifos).  partition_layout promotes the
+    # core-private subset to in-kernel forwarding
+    # (GridPartition.forwarded_fifos): loop-carried token windows, zero
+    # ring scratch; crossing transients stay semaphore-guarded rings.
     transient_fifos: frozenset
     # phase_unroll_period over the buffered channels — the unroll a static
     # in-kernel prologue would use (ROADMAP follow-on; diagnostic today).
@@ -112,8 +136,10 @@ class MegakernelLayout:
 
     @property
     def transient_scratch_bytes(self) -> int:
-        """Scratch bytes a forwarding pass over transient channels would
-        reclaim (they would become traced values, not buffers)."""
+        """Ring bytes of the transient channels — the upper bound on what
+        forwarding reclaims (``GridPartition.reclaimed_ring_bytes`` is
+        the realized cut-dependent value: crossing transients stay
+        buffered)."""
         return sum(s.capacity_bytes for s in self.fifo_specs
                    if s.name in self.transient_fifos)
 
@@ -178,16 +204,30 @@ class GridPartition:
     remote ``_can_fire`` polls — the device-resident analogue of
     ``heterogeneous_split``'s boundary feed/fetch actors.
 
+    ``forwarded_fifos`` are the channels the kernel lowers to
+    **loop-carried token windows** instead of scratch rings: the
+    core-private subset of ``MegakernelLayout.transient_fifos`` (a
+    crossing channel cannot be forwarded — a loop-carried value has no
+    cross-core visibility, so it must stay a semaphore-guarded shared
+    ring).  Forwarded channels keep their cursor rows (still part of the
+    bit-identity contract) but contribute zero ring scratch; their
+    buffer content follows the static specializer's dead-slot rule (see
+    ``kernel.py``).
+
     Built by :func:`partition_layout`; the default assignment is a
-    load-balanced contiguous cut of the dynamic visit order with the
-    endpoints of window-uncovered delay channels glued together
-    (``Network.delay_partition_constraints``).
+    contiguous cut of the dynamic visit order with the endpoints of
+    window-uncovered delay channels glued together
+    (``Network.delay_partition_constraints``), minimizing crossing ring
+    bytes within a load-balance slack (``objective="crossing"``) or the
+    ``cost_flops`` bottleneck alone (``objective="flops"``).
     """
 
     n_cores: int
     assignment: Tuple[int, ...]
     core_rows: Tuple[Tuple[int, ...], ...]
     fifo_cores: Tuple[int, ...]
+    forwarded_fifos: Tuple[int, ...] = ()
+    objective: str = "crossing"
 
     @property
     def shared_fifos(self) -> Tuple[int, ...]:
@@ -197,18 +237,52 @@ class GridPartition:
     def private_fifos(self, core: int) -> Tuple[int, ...]:
         return tuple(i for i, c in enumerate(self.fifo_cores) if c == core)
 
+    # -- cursor-block split (per-core private blocks + shared block) ---- #
+    @property
+    def cursor_rows(self) -> Tuple[Tuple[int, ...], ...]:
+        """Channel indices per cursor block: ``n_cores`` private blocks
+        (each core's own channels, forwarded included — forwarding
+        reclaims the ring, never the cursors) followed by the shared
+        block (the crossing channels' semaphore rows).  Every channel
+        appears in exactly one block; the kernel loop-carries one packed
+        ``(len(rows), 3)`` array per block, so a core's firing loop only
+        touches its own block plus the shared one — the coherence surface
+        a parallel grid mapping must fence is exactly the last block.
+        """
+        return tuple(self.private_fifos(core)
+                     for core in range(self.n_cores)) + (self.shared_fifos,)
+
+    @property
+    def core_cursor_rows(self) -> Tuple[int, ...]:
+        """Number of private cursor rows per core (the per-core split)."""
+        return tuple(len(self.private_fifos(c)) for c in range(self.n_cores))
+
     # -- scratch accounting (per-core Table 1, device-side) ------------- #
     def private_ring_bytes(self, layout: "MegakernelLayout") -> Tuple[int, ...]:
-        """Ring bytes held in each core's private scratch block."""
+        """Ring bytes held in each core's private scratch block
+        (forwarded channels contribute nothing — they have no ring)."""
+        fwd = set(self.forwarded_fifos)
         return tuple(
             sum(layout.fifo_specs[i].capacity_bytes
-                for i in self.private_fifos(core))
+                for i in self.private_fifos(core) if i not in fwd)
             for core in range(self.n_cores))
 
     def shared_ring_bytes(self, layout: "MegakernelLayout") -> int:
         """Ring bytes of the shared (partition-crossing) block."""
         return sum(layout.fifo_specs[i].capacity_bytes
                    for i in self.shared_fifos)
+
+    def reclaimed_ring_bytes(self, layout: "MegakernelLayout") -> int:
+        """Ring bytes transient forwarding reclaims from scratch (the
+        forwarded channels' Eq. 1 capacities)."""
+        return sum(layout.fifo_specs[i].capacity_bytes
+                   for i in self.forwarded_fifos)
+
+    def scratch_bytes(self, layout: "MegakernelLayout") -> int:
+        """Effective kernel scratch under this partition: buffered rings
+        (private + shared) plus the full cursor block — i.e. the layout's
+        no-forwarding footprint minus the reclaimed ring bytes."""
+        return layout.scratch_bytes - self.reclaimed_ring_bytes(layout)
 
     def semaphore_bytes(self) -> int:
         """Bytes of shared cursor rows polled as cross-core semaphores."""
@@ -248,10 +322,11 @@ def _glued_units(network: Network) -> List[List[int]]:
     return units
 
 
-def _balanced_cut(weights: List[int], cores: int) -> List[int]:
+def _balanced_cut(weights: List[int], cores: int) -> Tuple[List[int], int]:
     """Contiguous cut of ``weights`` into ``cores`` groups minimizing the
     maximum group weight (classic linear-partition DP; deterministic —
-    ties break toward earlier cuts).  Returns the group index per unit.
+    ties break toward earlier cuts).  Returns ``(group index per unit,
+    optimal bottleneck weight)``.
     """
     n = len(weights)
     prefix = [0]
@@ -280,18 +355,91 @@ def _balanced_cut(weights: List[int], cores: int) -> List[int]:
         for u in range(i, j):
             groups[u] = c - 1
         j = i
+    return groups, int(best[cores][n])
+
+
+def _crossing_cut(weights: List[int], spans: List[Tuple[int, int, int]],
+                  cores: int, bottleneck_cap: int) -> List[int]:
+    """Contiguous cut minimizing total crossing ring bytes subject to a
+    ``cost_flops`` bottleneck cap.
+
+    ``spans`` lists each channel as ``(umin, umax, capacity_bytes)`` over
+    unit indices.  A channel crosses iff its endpoints land in different
+    groups — for contiguous groups, iff some group boundary falls inside
+    ``(umin, umax]``.  Counting it once, attributed to the group holding
+    its left endpoint: define ``X(i, j)`` as the bytes of channels with
+    ``i <= umin < j <= umax`` (left endpoint inside the group ``[i, j)``,
+    right endpoint beyond its end) — summing ``X`` over the groups of any
+    contiguous cut counts every crossing channel exactly once.  The DP
+    then minimizes ``(total crossing bytes, bottleneck)``
+    lexicographically over cuts whose every group weight stays within
+    ``bottleneck_cap`` (the flops-only optimum times the slack, so the
+    flops-optimal cut is always feasible and the DP cannot come up
+    empty).  Deterministic: ties break toward earlier cuts.
+    """
+    n = len(weights)
+    prefix = [0]
+    for w in weights:
+        prefix.append(prefix[-1] + w)
+
+    def span_w(i: int, j: int) -> int:
+        return prefix[j] - prefix[i]
+
+    # cross[i][j] = X(i, j): channels leaving group [i, j) to the right.
+    cross = [[0] * (n + 1) for _ in range(n + 1)]
+    for i in range(n):
+        for j in range(i + 1, n + 1):
+            cross[i][j] = sum(b for a, z, b in spans if i <= a < j <= z)
+
+    INF = (float("inf"), float("inf"))
+    best = [[INF] * (n + 1) for _ in range(cores + 1)]
+    cut = [[0] * (n + 1) for _ in range(cores + 1)]
+    best[0][0] = (0, 0)
+    for c in range(1, cores + 1):
+        for j in range(c, n + 1):
+            for i in range(c - 1, j):
+                if best[c - 1][i] == INF or span_w(i, j) > bottleneck_cap:
+                    continue
+                cand = (best[c - 1][i][0] + cross[i][j],
+                        max(best[c - 1][i][1], span_w(i, j)))
+                if cand < best[c][j]:
+                    best[c][j] = cand
+                    cut[c][j] = i
+    assert best[cores][n] != INF, "bottleneck_cap below the flops optimum"
+    groups = [0] * n
+    j = n
+    for c in range(cores, 0, -1):
+        i = cut[c][j]
+        for u in range(i, j):
+            groups[u] = c - 1
+        j = i
     return groups
 
 
-def default_assignment(network: Network, cores: int) -> dict:
-    """Load-balanced actor -> core map: a contiguous cut of the dynamic
-    visit order (declaration order), weighted by ``cost_flops`` (floor 1
-    per actor so zero-cost sources/sinks still count as schedulable
-    work), with window-uncovered delay-channel endpoints glued into one
-    unit.  Contiguity keeps the multi-core visit order equal to the
-    single-core sweep's, so the interpret-mode tie-break (partition
-    order) reproduces the single-core schedule exactly.
+def default_assignment(network: Network, cores: int,
+                       layout: Optional[MegakernelLayout] = None,
+                       objective: str = "crossing") -> dict:
+    """Default actor -> core map: a contiguous cut of the dynamic visit
+    order (declaration order), with window-uncovered delay-channel
+    endpoints glued into one unit.  Contiguity keeps the multi-core
+    visit order equal to the single-core sweep's, so the interpret-mode
+    tie-break (partition order) reproduces the single-core schedule
+    exactly — for either objective.
+
+    ``objective="flops"`` balances ``cost_flops`` alone (floor 1 per
+    actor so zero-cost sources/sinks still count as schedulable work).
+    ``objective="crossing"`` (default; needs ``layout`` for the Eq. 1
+    ring bytes, else it degrades to the flops cut) picks, among cuts
+    whose flops bottleneck stays within :data:`_CUT_BALANCE_SLACK` of
+    the optimum, the one minimizing partition-crossing ring bytes — the
+    shared-scratch / semaphore surface, and exactly the bytes transient
+    forwarding would otherwise reclaim (a crossing transient channel
+    falls back to a shared ring).
     """
+    if objective not in CUT_OBJECTIVES:
+        raise ValueError(
+            f"partition cut objective must be one of {CUT_OBJECTIVES}, "
+            f"got {objective!r}")
     names = list(network.actors)
     units = _glued_units(network)
     if cores > len(units):
@@ -304,7 +452,22 @@ def default_assignment(network: Network, cores: int) -> dict:
         sum(max(1, int(network.actors[names[i]].cost_flops)) for i in u)
         for u in units
     ]
-    groups = _balanced_cut(weights, cores)
+    groups, bottleneck = _balanced_cut(weights, cores)
+    if objective == "crossing" and layout is not None and cores > 1:
+        unit_of = {}
+        for ui, unit in enumerate(units):
+            for i in unit:
+                unit_of[i] = ui
+        idx = {n: i for i, n in enumerate(names)}
+        spans = []
+        for fname in layout.fifo_names:
+            e = network.edge_of(fname)
+            a, b = unit_of[idx[e.src_actor]], unit_of[idx[e.dst_actor]]
+            if a != b:
+                spans.append((min(a, b), max(a, b),
+                              network.fifos[fname].capacity_bytes))
+        cap = max(bottleneck, int(bottleneck * _CUT_BALANCE_SLACK))
+        groups = _crossing_cut(weights, spans, cores, cap)
     out = {}
     for ui, unit in enumerate(units):
         for i in unit:
@@ -314,21 +477,35 @@ def default_assignment(network: Network, cores: int) -> dict:
 
 def partition_layout(network: Network, layout: MegakernelLayout,
                      cores: int = 1,
-                     assign: Optional[Mapping[str, int]] = None
-                     ) -> GridPartition:
+                     assign: Optional[Mapping[str, int]] = None,
+                     objective: str = "crossing",
+                     forward_transients: bool = True) -> GridPartition:
     """Partition the firing table across ``cores`` grid partitions.
 
-    ``assign`` (actor name -> core) overrides the default load-balanced
-    cut; it must cover every actor and respect the delay-channel
-    constraint (``Network.validate_partition``).  Intra-partition
-    channels are placed in the owning core's private scratch block;
-    partition-crossing channels go :data:`SHARED` with their cursor rows
-    acting as the polled semaphores.
+    ``assign`` (actor name -> core) overrides the default cut; it must
+    cover every actor and respect the delay-channel constraint
+    (``Network.validate_partition``).  ``objective`` picks the default
+    cut's criterion (see :func:`default_assignment`); under an explicit
+    ``assign`` no heuristic runs and the partition records
+    ``objective="assign"``.  Intra-partition channels are placed in the
+    owning core's private scratch block; partition-crossing channels go
+    :data:`SHARED` with their cursor rows acting as the polled
+    semaphores.  With ``forward_transients`` (default) the core-private
+    subset of ``layout.transient_fifos`` is marked forwarded: the kernel
+    lowers those channels to loop-carried token windows with zero ring
+    scratch (``GridPartition.forwarded_fifos``).
     """
     if cores < 1:
         raise ValueError(f"cores must be >= 1, got {cores}")
+    if objective not in CUT_OBJECTIVES:
+        raise ValueError(
+            f"partition cut objective must be one of {CUT_OBJECTIVES}, "
+            f"got {objective!r}")
     if assign is None:
-        assign = default_assignment(network, cores)
+        assign = default_assignment(network, cores, layout=layout,
+                                    objective=objective)
+    else:
+        objective = "assign"    # explicit map: no cut heuristic ran
     network.validate_partition(assign, cores)
     names = list(network.actors)
     assignment = tuple(int(assign[n]) for n in names)
@@ -341,9 +518,29 @@ def partition_layout(network: Network, layout: MegakernelLayout,
         src = assignment[names.index(e.src_actor)]
         dst = assignment[names.index(e.dst_actor)]
         fifo_cores.append(src if src == dst else SHARED)
+    forwarded = ()
+    if forward_transients:
+        forwarded = tuple(
+            i for i, fname in enumerate(layout.fifo_names)
+            if fname in layout.transient_fifos and fifo_cores[i] != SHARED)
+        # Transient channels are delay-free by construction (FifoSpec
+        # rejects matched_rates+delay; control channels carry no delay),
+        # so the forwarded path never needs the Fig. 2 copy-back.  A
+        # hard error (not an assert): forwarding a delayed channel would
+        # silently corrupt bytes, the copy-back only exists on the ring
+        # path.
+        delayed = [layout.fifo_names[i] for i in forwarded
+                   if layout.fifo_specs[i].delay]
+        if delayed:
+            raise ValueError(
+                f"transient channels {delayed} carry delay tokens; "
+                "register_fifos must never admit delayed channels "
+                "(forwarding has no Fig. 2 copy-back)")
     return GridPartition(n_cores=cores, assignment=assignment,
                          core_rows=core_rows,
-                         fifo_cores=tuple(fifo_cores))
+                         fifo_cores=tuple(fifo_cores),
+                         forwarded_fifos=forwarded,
+                         objective=objective)
 
 
 def state_hbm_bytes(state: Any) -> int:

@@ -265,7 +265,7 @@ class Network:
     # ------------------------------------------------------------------ #
     # Graphviz export (debugging builder-constructed graphs).              #
     # ------------------------------------------------------------------ #
-    def to_dot(self) -> str:
+    def to_dot(self, partition: Optional[Any] = None) -> str:
         """Render the network as a Graphviz ``digraph``.
 
         Actors are nodes (dynamic actors double-bordered, sources/sinks
@@ -274,36 +274,77 @@ class Network:
         output into any dot viewer::
 
             print(net.to_dot())        # | dot -Tsvg > net.svg
+
+        With a ``partition`` (a megakernel ``GridPartition``, e.g. from
+        ``Program``'s plan or ``partition_layout``) each core's actors
+        render as one ``cluster`` subgraph, partition-crossing channels
+        are highlighted red with a ``[shared]`` marker (their rings +
+        cursor semaphores are the cross-core coherence surface) and
+        forwarded transients carry a ``[fwd]`` marker — a cut regression
+        is visible at a glance.
         """
         def q(s: str) -> str:
             return '"' + s.replace('"', '\\"') + '"'
 
+        names = list(self.actors)
         lines = [
             "digraph network {",
             "  rankdir=LR;",
             '  node [shape=box, style=rounded, fontname="Helvetica"];',
         ]
-        for name, a in self.actors.items():
-            attrs = []
-            if a.is_dynamic:
-                attrs.append("peripheries=2")
-                label = f"{name}\\n(dynamic, ctrl={a.control_port})"
-            else:
-                label = name
-            if a.is_source or a.is_sink:
-                attrs.append('style="rounded,filled"')
-                attrs.append('fillcolor="lightgrey"')
-            attrs.insert(0, f"label={q(label)}")
-            lines.append(f"  {q(name)} [{', '.join(attrs)}];")
+
+        def node_lines(subset, indent="  "):
+            out = []
+            for name in subset:
+                a = self.actors[name]
+                attrs = []
+                if a.is_dynamic:
+                    attrs.append("peripheries=2")
+                    label = f"{name}\\n(dynamic, ctrl={a.control_port})"
+                else:
+                    label = name
+                if a.is_source or a.is_sink:
+                    attrs.append('style="rounded,filled"')
+                    attrs.append('fillcolor="lightgrey"')
+                attrs.insert(0, f"label={q(label)}")
+                out.append(f"{indent}{q(name)} [{', '.join(attrs)}];")
+            return out
+
+        if partition is None:
+            lines += node_lines(names)
+        else:
+            if (len(partition.assignment) != len(names)
+                    or len(partition.fifo_cores) != len(self.fifos)):
+                raise ValueError(
+                    f"to_dot: partition covers {len(partition.assignment)} "
+                    f"actors / {len(partition.fifo_cores)} channels but the "
+                    f"network has {len(names)} / {len(self.fifos)}; pass "
+                    "the GridPartition built from this network")
+            for core, rows in enumerate(partition.core_rows):
+                lines.append(f"  subgraph cluster_core{core} {{")
+                lines.append(f'    label="core {core}"; style=dashed;')
+                lines += node_lines([names[i] for i in rows], indent="    ")
+                lines.append("  }")
+        fifo_pos = {n: i for i, n in enumerate(self.fifos)}
+        forwarded = (set(partition.forwarded_fifos)
+                     if partition is not None else set())
         for e in self.edges:
             f = self.fifos[e.fifo]
             label = (f"{f.name}\\n{e.src_port}->{e.dst_port} "
                      f"r={f.rate} cap={f.capacity_tokens}")
             if f.delay:
                 label += f" delay={f.delay}"
-            attrs = [f"label={q(label)}"]
+            attrs = []
             if f.is_control:
                 attrs.append("style=dashed")
+            if partition is not None:
+                fi = fifo_pos[e.fifo]
+                if partition.fifo_cores[fi] < 0:      # SHARED (crossing)
+                    label += " [shared]"
+                    attrs += ["color=red", "penwidth=2.0"]
+                elif fi in forwarded:
+                    label += " [fwd]"
+            attrs.insert(0, f"label={q(label)}")
             lines.append(f"  {q(e.src_actor)} -> {q(e.dst_actor)} "
                          f"[{', '.join(attrs)}];")
         lines.append("}")

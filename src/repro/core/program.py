@@ -64,13 +64,22 @@ MEGAKERNEL = Mode.MEGAKERNEL
 
 _MODES = tuple(m.value for m in Mode)
 
-# donate="auto" threshold: donation is only profitable when the state the
-# call consumes is dominated by register-allocatable traffic; once the
-# *buffered* (ring-resident) channel bytes grow past this, the in-place
-# aliasing constraint costs more than the elided copies (measured on MD:
-# 707 -> 415 tok/s donated, EXPERIMENTS.md §Executor perf — negative
-# result; DPD, whose bulk channels registerize, gains 1.2x).
+# donate="auto" default threshold: donation is only profitable when the
+# state the call consumes is dominated by register-allocatable traffic;
+# once the *buffered* (ring-resident) channel bytes grow past this, the
+# in-place aliasing constraint costs more than the elided copies
+# (measured on MD: 707 -> 415 tok/s donated, EXPERIMENTS.md §Executor
+# perf — negative result; DPD, whose bulk channels registerize, gains
+# 1.2x).  1 MiB was measured on this container's CPU backend; real-TPU
+# HBM economics differ, so ``ExecutionPlan(donate_threshold_bytes=...)``
+# overrides it per plan (the resolved value is reported by
+# ``Program.stats().resolved_donate_threshold``).
 _DONATE_AUTO_BUFFERED_BYTES_MAX = 1 << 20
+
+#: Partition-cut objectives of the megakernel grid backend (mirrors
+#: ``repro.core.megakernel.lower.CUT_OBJECTIVES``, duplicated here so a
+#: plan can validate without importing the Pallas-backed package).
+_CUT_OBJECTIVES = ("crossing", "flops")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,7 +101,13 @@ class ExecutionPlan:
                      and megakernel modes run to quiescence and ignore it
                      unless ``accelerated`` needs it for feed slab sizing.
       specialize:    static mode: trace-time cursor specialization +
-                     transient-channel register allocation.
+                     transient-channel register allocation.  Megakernel
+                     mode: in-kernel transient forwarding — core-private
+                     ``register_fifos`` channels lower to loop-carried
+                     token windows instead of scratch rings (dead-slot
+                     carve-out: their stale ring bytes leave the
+                     bit-identity contract, and they must enter drained;
+                     ``specialize=False`` keeps every ring in scratch).
       multi_firing:  dynamic/megakernel modes: fire each actor up to its
                      occupancy bound per sweep.
       donate:        donate the input state so XLA reuses its buffers.
@@ -109,6 +124,12 @@ class ExecutionPlan:
                      consumed).  Megakernel mode resolves donation to
                      False regardless — buffers are staged through
                      kernel scratch, there is nothing to donate.
+      donate_threshold_bytes:
+                     buffered-bytes ceiling of the ``donate="auto"``
+                     heuristic; ``None`` uses the 1 MiB default measured
+                     on this container's CPU backend (re-measure on real
+                     HBM — ROADMAP).  The resolved value is reported as
+                     ``Program.stats().resolved_donate_threshold``.
       runtime_mode:  ``RuntimeMode.PROPOSED`` (this paper) or
                      ``STATIC_DAL`` (reference framework: SDF-only
                      accelerator, dynamic actors rejected).
@@ -129,8 +150,16 @@ class ExecutionPlan:
       assign:        optional explicit actor -> core map (must cover
                      every actor; validated by
                      ``Network.validate_partition``).  Default is a
-                     load-balanced contiguous cut of the visit order
-                     with delay-channel endpoints glued.
+                     contiguous cut of the visit order with
+                     delay-channel endpoints glued, per
+                     ``cut_objective``.
+      cut_objective: megakernel mode: the default partition cut's
+                     criterion.  ``"crossing"`` (default) minimizes
+                     partition-crossing ring bytes (the shared-scratch /
+                     semaphore surface) among contiguous cuts whose
+                     ``cost_flops`` bottleneck stays within the balance
+                     slack; ``"flops"`` is the legacy pure load-balance
+                     cut.  Ignored under an explicit ``assign``.
       accelerated:   optional actor subset mapped to the accelerator: the
                      network is split (``heterogeneous_split``) and the
                      plan executes the accelerator subnetwork, with
@@ -143,6 +172,7 @@ class ExecutionPlan:
     specialize: bool = True
     multi_firing: bool = True
     donate: Union[bool, str] = "auto"
+    donate_threshold_bytes: Optional[int] = None
     runtime_mode: RuntimeMode = RuntimeMode.PROPOSED
     order: Optional[Tuple[str, ...]] = None
     max_sweeps: int = 1_000_000
@@ -150,6 +180,7 @@ class ExecutionPlan:
     interpret: Optional[bool] = None
     cores: int = 1
     assign: Optional[Mapping[str, int]] = None
+    cut_objective: str = "crossing"
     accelerated: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self) -> None:
@@ -170,17 +201,30 @@ class ExecutionPlan:
                 self, "assign",
                 tuple(sorted((str(k), int(v))
                              for k, v in dict(self.assign).items())))
-        if (self.cores != 1 or self.assign is not None) \
+        if self.cut_objective not in _CUT_OBJECTIVES:
+            raise ValueError(
+                f"ExecutionPlan.cut_objective must be one of "
+                f"{_CUT_OBJECTIVES}, got {self.cut_objective!r}")
+        if (self.cores != 1 or self.assign is not None
+                or self.cut_objective != "crossing") \
                 and self.mode != "megakernel":
             raise ValueError(
-                f"ExecutionPlan(mode={self.mode!r}): cores=/assign= are "
-                "grid-partition knobs of the megakernel backend; the host "
-                "executors have no core axis (use mode=Mode.MEGAKERNEL, "
-                "or accelerated=[...] for host/accelerator placement)")
+                f"ExecutionPlan(mode={self.mode!r}): cores=/assign=/"
+                "cut_objective= are grid-partition knobs of the megakernel "
+                "backend; the host executors have no core axis (use "
+                "mode=Mode.MEGAKERNEL, or accelerated=[...] for "
+                "host/accelerator placement)")
         if not (isinstance(self.donate, bool) or self.donate == "auto"):
             raise ValueError(
                 f"ExecutionPlan.donate must be True, False or 'auto', got "
                 f"{self.donate!r}")
+        if self.donate_threshold_bytes is not None and (
+                not isinstance(self.donate_threshold_bytes, int)
+                or isinstance(self.donate_threshold_bytes, bool)
+                or self.donate_threshold_bytes < 0):
+            raise ValueError(
+                f"ExecutionPlan.donate_threshold_bytes must be None or an "
+                f"int >= 0, got {self.donate_threshold_bytes!r}")
         if self.order is not None:
             object.__setattr__(self, "order", tuple(self.order))
         if self.accelerated is not None:
@@ -225,21 +269,30 @@ class ProgramStats:
     operational-intensity coordinate of a roofline plot.
 
     Megakernel programs additionally report the device-residency split:
-    ``scratch_bytes`` (Eq. 1 rings + cursor block held in kernel scratch
-    for the whole run), ``transient_scratch_bytes`` (the subset a future
-    in-kernel forwarding pass over ``register_fifos`` would reclaim) and
-    ``hbm_state_bytes`` (the kernel's HBM operands — ring copies, actor
-    states, hoisted closure arrays — measured from the last run's state).
-    ``resolved_donate`` is the per-graph outcome of ``donate="auto"``.
+    ``scratch_bytes`` (buffered Eq. 1 rings + cursor block held in kernel
+    scratch for the whole run — forwarded channels contribute nothing),
+    ``transient_scratch_bytes`` (ring bytes of the transient channels,
+    the forwarding upper bound), ``forwarded_fifos`` / ``reclaimed_
+    scratch_bytes`` (the channels actually lowered to loop-carried
+    windows under this plan's partition, and the ring bytes that
+    reclaimed) and ``hbm_state_bytes`` (the kernel's HBM operands — ring
+    copies, actor states, hoisted closure arrays — measured from the
+    last run's state).  ``resolved_donate`` is the per-graph outcome of
+    ``donate="auto"`` and ``resolved_donate_threshold`` the buffered-
+    bytes ceiling it used (``plan.donate_threshold_bytes`` or the
+    measured 1 MiB default).
 
     Grid-partitioned megakernel programs (``plan.cores``) add the
     per-partition telemetry: ``grid_cores``, ``partition_actors`` (actor
     names per core, visit order), ``core_scratch_bytes`` (each core's
-    private ring block), ``shared_scratch_bytes`` (partition-crossing
-    rings plus their semaphore cursor rows), ``shared_fifos`` (the
-    crossing channels), and ``partition_fire_counts`` (firings per core
-    in the last run — the occupancy telemetry of each core's bounded
-    firing loop).
+    private ring block, forwarding excluded), ``shared_scratch_bytes``
+    (partition-crossing rings plus their semaphore cursor rows),
+    ``shared_fifos`` (the crossing channels), ``core_cursor_rows`` (the
+    per-core private cursor-block split — the shared semaphore block
+    holds the remaining ``len(shared_fifos)`` rows), ``cut_objective``
+    (the partition cut's criterion) and ``partition_fire_counts``
+    (firings per core in the last run — the occupancy telemetry of each
+    core's bounded firing loop).
     """
 
     mode: str
@@ -254,14 +307,19 @@ class ProgramStats:
     last_sweeps: Optional[int] = None
     last_fire_counts: Optional[Dict[str, int]] = None
     resolved_donate: Optional[bool] = None
+    resolved_donate_threshold: Optional[int] = None
     scratch_bytes: Optional[int] = None
     transient_scratch_bytes: Optional[int] = None
+    forwarded_fifos: Optional[Tuple[str, ...]] = None
+    reclaimed_scratch_bytes: Optional[int] = None
     hbm_state_bytes: Optional[int] = None
     grid_cores: Optional[int] = None
     partition_actors: Optional[Tuple[Tuple[str, ...], ...]] = None
     core_scratch_bytes: Optional[Tuple[int, ...]] = None
     shared_scratch_bytes: Optional[int] = None
     shared_fifos: Optional[Tuple[str, ...]] = None
+    core_cursor_rows: Optional[Tuple[int, ...]] = None
+    cut_objective: Optional[str] = None
     partition_fire_counts: Optional[Tuple[int, ...]] = None
 
 
@@ -298,7 +356,9 @@ class Program:
             self._layout = lower_network(self.network)
             self._partition = partition_layout(
                 self.network, self._layout, plan.cores,
-                dict(plan.assign) if plan.assign is not None else None)
+                dict(plan.assign) if plan.assign is not None else None,
+                objective=plan.cut_objective,
+                forward_transients=plan.specialize)
         # donate="auto" must never consume a state the *caller* passed in
         # (donated inputs are invalidated; callers legitimately reuse
         # states across runs), so auto donation applies only to run(None),
@@ -366,7 +426,14 @@ class Program:
         buffered = sum(
             spec.capacity_bytes for name, spec in network.fifos.items()
             if name not in registerized)
-        return buffered <= _DONATE_AUTO_BUFFERED_BYTES_MAX
+        return buffered <= Program._donate_threshold(plan)
+
+    @staticmethod
+    def _donate_threshold(plan: ExecutionPlan) -> int:
+        """The buffered-bytes ceiling of the ``donate="auto"`` heuristic."""
+        if plan.donate_threshold_bytes is not None:
+            return plan.donate_threshold_bytes
+        return _DONATE_AUTO_BUFFERED_BYTES_MAX
 
     # ------------------------------------------------------------------ #
     def init_state(self) -> NetworkState:
@@ -549,8 +616,10 @@ class Program:
                      for n in net.actors}
         last = self._last
         scratch = transient = hbm = None
+        forwarded = reclaimed = None
         grid_cores = part_actors = core_bytes = None
         shared_bytes = shared_names = part_counts = None
+        cursor_split = cut_obj = None
         if self._layout is not None:
             from repro.core.megakernel import state_hbm_bytes
             scratch = self._layout.scratch_bytes
@@ -565,6 +634,13 @@ class Program:
             part = self._partition
             if part is not None:
                 names = tuple(net.actors)
+                # Effective scratch under this partition's forwarding set:
+                # the layout's no-forwarding footprint minus the rings
+                # transient forwarding turned into loop-carried windows.
+                scratch = part.scratch_bytes(self._layout)
+                forwarded = tuple(self._layout.fifo_names[i]
+                                  for i in part.forwarded_fifos)
+                reclaimed = part.reclaimed_ring_bytes(self._layout)
                 grid_cores = part.n_cores
                 part_actors = tuple(
                     tuple(names[i] for i in rows) for rows in part.core_rows)
@@ -573,6 +649,8 @@ class Program:
                                 + part.semaphore_bytes())
                 shared_names = tuple(self._layout.fifo_names[i]
                                      for i in part.shared_fifos)
+                cursor_split = part.core_cursor_rows
+                cut_obj = part.objective
                 if last is not None and last.fire_counts is not None:
                     part_counts = tuple(
                         sum(int(last.fire_counts[names[i]]) for i in rows)
@@ -593,13 +671,18 @@ class Program:
                               if last is not None
                               and last.fire_counts is not None else None),
             resolved_donate=self.donate,
+            resolved_donate_threshold=self._donate_threshold(self.plan),
             scratch_bytes=scratch,
             transient_scratch_bytes=transient,
+            forwarded_fifos=forwarded,
+            reclaimed_scratch_bytes=reclaimed,
             hbm_state_bytes=hbm,
             grid_cores=grid_cores,
             partition_actors=part_actors,
             core_scratch_bytes=core_bytes,
             shared_scratch_bytes=shared_bytes,
             shared_fifos=shared_names,
+            core_cursor_rows=cursor_split,
+            cut_objective=cut_obj,
             partition_fire_counts=part_counts,
         )

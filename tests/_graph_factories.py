@@ -15,7 +15,27 @@ __all__ = ["DPD_SCHEDULE", "assert_states_identical", "make_dpd",
            "make_moe", "make_motion_detection", "states_identical"]
 
 
-def assert_states_identical(a: NetworkState, b: NetworkState) -> None:
+def assert_states_identical(a: NetworkState, b: NetworkState,
+                            ignore_fifo_bufs=()) -> None:
+    """Byte-identity of two states.
+
+    ``ignore_fifo_bufs`` names channels whose *buffer* content is
+    excluded (cursors still compared): the megakernel's forwarded-
+    transient dead-slot carve-out — a resumed run re-derives those
+    buffers from init_state zeros, so only live tokens are contractual
+    (and a drained transient has none).
+    """
     assert jax.tree.structure(a) == jax.tree.structure(b)
-    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    skip = set(ignore_fifo_bufs)
+    for name, fa, fb in zip(a.fifo_names, a.fifos, b.fifos):
+        if name not in skip:
+            np.testing.assert_array_equal(np.asarray(fa.buf),
+                                          np.asarray(fb.buf))
+        for field in ("rd", "wr", "occ"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(fa, field)),
+                np.asarray(getattr(fb, field)))
+    for xa, xb in zip(a.actors, b.actors):
+        assert jax.tree.structure(xa) == jax.tree.structure(xb)
+        for x, y in zip(jax.tree.leaves(xa), jax.tree.leaves(xb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

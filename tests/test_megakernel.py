@@ -65,14 +65,64 @@ def test_megakernel_single_firing_sweeps_match_baseline():
 def test_megakernel_resumes_from_partial_state():
     """The kernel is a pure state transformer: feeding a quiescent state
     back in fires nothing (one empty sweep), and resuming a fresh source
-    continues exactly like the dynamic executor would."""
+    continues exactly like the dynamic executor would.  Forwarded
+    (transient) channels carry the dead-slot carve-out: a resumed run
+    re-derives their buffers from init_state zeros, so their stale bytes
+    are excluded — cursors and everything else stay contractual."""
     net, _ = make_moe(2)
     prog = net.compile(ExecutionPlan(mode=MEGAKERNEL))
+    forwarded = prog.stats().forwarded_fifos
+    assert forwarded                                 # moe proves transients
     r1 = prog.run()
     r2 = prog.run(r1.state)
     assert int(r2.sweeps) == 1                      # quiescent: empty sweep
     assert all(int(v) == 0 for v in r2.fire_counts.values())
+    assert_states_identical(r1.state, r2.state, ignore_fifo_bufs=forwarded)
+    for name in forwarded:
+        # The carve-out, pinned: nothing fired, so the resumed run's
+        # forwarded buffers are exactly the dead-slot zeros (and the
+        # channel is drained, so no live token is lost).
+        assert int(r2.state.fifo(name).occ) == 0
+        assert not np.asarray(r2.state.fifo(name).buf).any()
+
+
+def test_megakernel_unspecialized_resume_keeps_every_byte():
+    """specialize=False keeps every ring in scratch: no carve-out at
+    all, resumed states stay byte-identical including transient bufs."""
+    net, _ = make_moe(2)
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL, specialize=False))
+    assert prog.stats().forwarded_fifos == ()
+    assert prog.stats().reclaimed_scratch_bytes == 0
+    r1 = prog.run()
+    r2 = prog.run(r1.state)
+    assert int(r2.sweeps) == 1
     assert_states_identical(r1.state, r2.state)
+
+
+def test_megakernel_forwarding_rejects_undrained_entry():
+    """The static specializer's drained-entry rule, per run: live tokens
+    on a forwarded channel would be dropped by the zeros-initialized
+    window, so the runner rejects them (specialize=False is the escape
+    hatch)."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    net, _ = make_moe(2)
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL))
+    fwd = prog.stats().forwarded_fifos[0]
+    state = net.init_state()
+    fi = net.fifo_index[fwd]
+    spec = net.fifos[fwd]
+    dirty = state.fifos[:fi] + (dataclasses.replace(
+        state.fifos[fi], occ=jnp.int32(spec.rate),
+        wr=jnp.int32(1)),) + state.fifos[fi + 1:]
+    dirty_state = dataclasses.replace(state, fifos=dirty)
+    with pytest.raises(ValueError, match="must be drained"):
+        prog.run(dirty_state)
+    # Escape hatch: the unspecialized kernel accepts the same state.
+    net.compile(ExecutionPlan(mode=MEGAKERNEL,
+                              specialize=False)).run(dirty_state)
 
 
 def test_megakernel_collect_and_output_match_dynamic():
@@ -83,6 +133,20 @@ def test_megakernel_collect_and_output_match_dynamic():
     mega_prog.run()
     got = np.asarray(mega_prog.collect("sink"))
     np.testing.assert_array_equal(got, want)
+
+
+def test_megakernel_forwarding_scratch_reduction_dpd():
+    """Acceptance bar of the scratch-diet PR: transient forwarding
+    shrinks DPD's single-core scratch footprint >= 5x (every DPD channel
+    is provably transient, so only the cursor block survives)."""
+    net, _ = GRAPHS["dpd"]()
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL))
+    st = prog.stats()
+    before = lower_network(net).scratch_bytes
+    assert st.scratch_bytes * 5 <= before
+    assert st.scratch_bytes == before - st.reclaimed_scratch_bytes
+    assert st.scratch_bytes == lower_network(net).cursor_bytes  # rings: 0
+    assert len(st.forwarded_fifos) == len(net.fifos)
 
 
 # --------------------------------------------------------------------------- #
@@ -121,20 +185,28 @@ def test_megakernel_stats_scratch_vs_hbm():
     net, _ = make_moe(2)
     prog = net.compile(ExecutionPlan(mode=MEGAKERNEL))
     st = prog.stats()
+    layout = lower_network(net)
     assert st.mode == "megakernel"
-    assert st.scratch_bytes == lower_network(net).scratch_bytes
-    assert st.scratch_bytes > net.buffer_bytes()      # rings + cursor block
+    # Transient forwarding reclaims every core-private register fifo's
+    # ring from scratch (single core: all of them).
+    assert set(st.forwarded_fifos) == set(net.register_fifos)
+    assert st.reclaimed_scratch_bytes == st.transient_scratch_bytes == sum(
+        net.fifos[n].capacity_bytes for n in net.register_fifos)
+    assert st.scratch_bytes == layout.scratch_bytes - st.reclaimed_scratch_bytes
+    assert st.reclaimed_scratch_bytes > 0
     assert st.hbm_state_bytes is None                 # nothing ran yet
     assert st.resolved_donate is False                # scratch-staged anyway
     prog.run()
     st = prog.stats()
     # HBM operands carry the ring copies plus actor states (source/sink
     # slabs), so they dominate the scratch-resident footprint here.
-    assert st.hbm_state_bytes > st.scratch_bytes - lower_network(
-        net).cursor_bytes
+    assert st.hbm_state_bytes > st.scratch_bytes - layout.cursor_bytes
     assert st.last_sweeps >= 1
-    assert st.transient_scratch_bytes == sum(
-        net.fifos[n].capacity_bytes for n in net.register_fifos)
+    # The unspecialized plan reports the pre-forwarding footprint.
+    st0 = net.compile(ExecutionPlan(mode=MEGAKERNEL,
+                                    specialize=False)).stats()
+    assert st0.scratch_bytes == layout.scratch_bytes
+    assert st0.scratch_bytes > net.buffer_bytes()     # rings + cursor block
 
 
 # --------------------------------------------------------------------------- #

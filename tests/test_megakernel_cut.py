@@ -1,0 +1,149 @@
+"""Crossing-bytes partition cut + cursor-block split: the scratch-diet
+PR's grid-side acceptance tests.
+
+The default megakernel partition cut now minimizes partition-crossing
+ring bytes (the shared-scratch / semaphore coherence surface) among
+contiguous cuts whose ``cost_flops`` bottleneck stays within the balance
+slack — ``ExecutionPlan(cut_objective="flops")`` keeps the legacy pure
+load-balance cut.  Both objectives produce *contiguous* cuts of the
+visit order, so bit-identity with the host dynamic executor (states,
+live ring bytes, cursors, fire counts AND round counts) holds for
+either; the crossing cut must strictly shrink ``shared_scratch_bytes``
+on DPD, whose flops-only cut lands mid-fork/adder fan-out.  A
+property-style sweep of scrambled explicit ``assign`` maps (which
+ring-buffer any crossing transients) pins Kahn determinism under the
+forwarding + split-cursor-block kernel.
+"""
+import jax
+import pytest
+
+from _graph_factories import (assert_states_identical, make_dpd,
+                              make_motion_detection, states_identical)
+from repro.core import (MEGAKERNEL, ExecutionPlan, lower_network,
+                        partition_layout)
+from repro.core.megakernel import CUT_OBJECTIVES, default_assignment
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def dpd():
+    net, _ = make_dpd(n_firings=4, block_l=128)
+    return net, net.compile(ExecutionPlan(mode="dynamic")).run()
+
+
+# --------------------------------------------------------------------------- #
+# Crossing-bytes objective: strictly less shared scratch, same semantics.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("cores", (2, 4))
+def test_crossing_cut_reduces_shared_scratch_on_dpd(cores, dpd):
+    net, dyn = dpd
+    progs = {obj: net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=cores,
+                                            cut_objective=obj))
+             for obj in CUT_OBJECTIVES}
+    stats = {obj: p.stats() for obj, p in progs.items()}
+    assert stats["crossing"].cut_objective == "crossing"
+    assert stats["flops"].cut_objective == "flops"
+    # The acceptance claim: strictly fewer shared ring+semaphore bytes.
+    assert (stats["crossing"].shared_scratch_bytes
+            < stats["flops"].shared_scratch_bytes)
+    assert (len(stats["crossing"].shared_fifos)
+            <= len(stats["flops"].shared_fifos))
+    # Core-local channels stay forwardable: the crossing cut reclaims at
+    # least as much transient scratch as the flops cut.
+    assert (stats["crossing"].reclaimed_scratch_bytes
+            >= stats["flops"].reclaimed_scratch_bytes)
+    # Both cuts are contiguous, so both stay bit-identical to the host
+    # dynamic executor — states, fire counts AND round counts.
+    for obj, prog in progs.items():
+        r = prog.run()
+        assert_states_identical(dyn.state, r.state)
+        assert ({k: int(v) for k, v in r.fire_counts.items()}
+                == {k: int(v) for k, v in dyn.fire_counts.items()})
+        assert int(r.sweeps) == int(dyn.sweeps), obj
+
+
+def test_crossing_cut_is_default_and_validated(dpd):
+    net, _ = dpd
+    assert net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=2)).stats() \
+        .cut_objective == "crossing"
+    with pytest.raises(ValueError, match="cut_objective"):
+        ExecutionPlan(mode=MEGAKERNEL, cut_objective="min-cut")
+    with pytest.raises(ValueError, match="grid-partition knobs"):
+        ExecutionPlan(mode="dynamic", cut_objective="flops")
+    layout = lower_network(net)
+    with pytest.raises(ValueError, match="objective"):
+        partition_layout(net, layout, cores=2, objective="bogus")
+    with pytest.raises(ValueError, match="objective"):
+        default_assignment(net, 2, objective="bogus")
+
+
+def test_default_assignment_without_layout_degrades_to_flops(dpd):
+    """The crossing objective needs ring bytes; with no layout it falls
+    back to the flops cut instead of failing."""
+    net, _ = dpd
+    assert default_assignment(net, 2) == default_assignment(
+        net, 2, objective="flops")
+    layout = lower_network(net)
+    crossing = default_assignment(net, 2, layout=layout)
+    flops = default_assignment(net, 2, objective="flops", layout=layout)
+    assert crossing != flops        # DPD: the cut actually moves
+
+
+def test_crossing_cut_respects_delay_glue():
+    """MD's window-uncovered delay channel glues gauss+thres under the
+    crossing objective exactly as under flops."""
+    net, _ = make_motion_detection(n_frames=12, rate=4, frame_hw=(48, 64))
+    layout = lower_network(net)
+    for cores in (2, 4):
+        assign = default_assignment(net, cores, layout=layout)
+        assert assign["gauss"] == assign["thres"]
+        assert set(assign.values()) == set(range(cores))
+
+
+# --------------------------------------------------------------------------- #
+# Property-style scrambled assigns: Kahn determinism under forwarding +
+# split cursor blocks (crossing transients fall back to shared rings).
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("stride", (1, 2, 3))
+def test_scrambled_assign_kahn_determinism(stride, dpd):
+    net, dyn = dpd
+    names = list(net.actors)
+    assign = {n: ((i * stride) + (i % 2)) % 2 for i, n in enumerate(names)}
+    prog = net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=2,
+                                     assign=assign))
+    st = prog.stats()
+    # An explicit map ran no cut heuristic — stats say so.
+    assert st.cut_objective == "assign"
+    # Non-contiguous scrambles force transient channels across cores:
+    # those must lose forwarding (shared rings), the rest keep it.
+    assert set(st.forwarded_fifos).isdisjoint(st.shared_fifos)
+    r = prog.run()
+    # Schedule changes (rounds may grow); final bytes never do.
+    assert states_identical(dyn.state, r.state)
+    assert ({k: int(v) for k, v in r.fire_counts.items()}
+            == {k: int(v) for k, v in dyn.fire_counts.items()})
+
+
+# --------------------------------------------------------------------------- #
+# to_dot(partition): reviewable cut rendering.
+# --------------------------------------------------------------------------- #
+def test_to_dot_renders_partition_clusters(dpd):
+    net, _ = dpd
+    layout = lower_network(net)
+    part = partition_layout(net, layout, cores=2)
+    dot = net.to_dot(part)
+    for core in range(2):
+        assert f"subgraph cluster_core{core}" in dot
+        assert f'label="core {core}"' in dot
+    # Every crossing channel is highlighted; forwarded ones are marked.
+    assert dot.count("[shared]") == len(part.shared_fifos)
+    assert dot.count("color=red") == len(part.shared_fifos)
+    assert dot.count("[fwd]") == len(part.forwarded_fifos)
+    # The plain render is unchanged by the feature.
+    plain = net.to_dot()
+    assert "cluster_core" not in plain and "[shared]" not in plain
+    # A partition from another network is rejected, not mis-rendered.
+    other, _ = make_motion_detection(n_frames=12, rate=4, frame_hw=(48, 64))
+    with pytest.raises(ValueError, match="GridPartition built from"):
+        other.to_dot(part)

@@ -109,7 +109,10 @@ def test_grid_resumes_quiescent_state():
     r2 = prog.run(r1.state)
     assert int(r2.sweeps) == 1          # one empty round: global quiescence
     assert all(int(v) == 0 for v in r2.fire_counts.values())
-    assert_states_identical(r1.state, r2.state)
+    # Forwarded transients carry the dead-slot carve-out on resume
+    # (drained, so no live tokens are involved).
+    assert_states_identical(r1.state, r2.state,
+                            ignore_fifo_bufs=prog.stats().forwarded_fifos)
 
 
 # --------------------------------------------------------------------------- #
@@ -143,10 +146,25 @@ def test_partition_layout_channel_placement():
             assert part.fifo_cores[fi] == src
         else:
             assert part.fifo_cores[fi] == SHARED
-    # Byte accounting: private blocks + shared block = all rings.
+    # Byte accounting: private blocks + shared block + forwarded
+    # (ring-less) channels = all rings of the no-forwarding layout.
     assert (sum(part.private_ring_bytes(layout))
-            + part.shared_ring_bytes(layout)) == layout.ring_scratch_bytes
+            + part.shared_ring_bytes(layout)
+            + part.reclaimed_ring_bytes(layout)) == layout.ring_scratch_bytes
     assert part.semaphore_bytes() == 12 * len(part.shared_fifos)
+    # Forwarded channels are core-private transients, never crossing.
+    assert set(part.forwarded_fifos) <= set(
+        i for i, c in enumerate(part.fifo_cores) if c != SHARED)
+    assert all(layout.fifo_names[i] in layout.transient_fifos
+               for i in part.forwarded_fifos)
+    # Cursor-block split: every channel's cursor row lives in exactly one
+    # block — its owning core's private block, or the shared semaphore
+    # block for crossing channels.
+    flat_rows = [fi for rows in part.cursor_rows for fi in rows]
+    assert sorted(flat_rows) == list(range(len(layout.fifo_names)))
+    assert part.cursor_rows[-1] == part.shared_fifos
+    assert part.core_cursor_rows == tuple(
+        len(part.private_fifos(c)) for c in range(part.n_cores))
 
 
 def test_partition_rejects_delay_channel_crossing():
@@ -200,8 +218,8 @@ def test_grid_stats_telemetry():
     assert [a for core in st.partition_actors for a in core] \
         == list(net.actors)
     layout = lower_network(net)
-    assert (sum(st.core_scratch_bytes)
-            + st.shared_scratch_bytes) \
+    assert (sum(st.core_scratch_bytes) + st.shared_scratch_bytes
+            + st.reclaimed_scratch_bytes) \
         == layout.ring_scratch_bytes + 12 * len(st.shared_fifos)
     assert st.partition_fire_counts is None        # nothing ran yet
     r = prog.run()

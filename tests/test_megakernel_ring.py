@@ -1,15 +1,21 @@
-"""Property tests: the megakernel's scratch ring-buffer ops vs the
+"""Property tests: the megakernel's channel-storage ops vs the
 ``repro.core.fifo`` functional API and the unbounded-queue oracle.
 
-The in-kernel helpers (``_ring_read_masked`` / ``_ring_write_masked`` /
-``_ring_peek`` in ``repro.core.megakernel.kernel``) re-express
-``FifoSpec``'s masked API on a Pallas ref plus a packed cursor row; the
-bit-identity of the whole backend rests on them matching *exactly* —
-offsets, masked no-op writes, the Fig. 2 delay copy-back.  Each drawn op
-sequence is applied twice: through a tiny interpret-mode ``pallas_call``
-driving the ring helpers on a scratch buffer, and through the functional
-``FifoSpec`` state — final buffers, cursors and every read window must be
-byte-identical, and both must agree with a plain Python queue.
+The in-kernel helpers (``_chan_read_masked`` / ``_chan_write_masked`` /
+``_chan_peek`` in ``repro.core.megakernel.kernel``) re-express
+``FifoSpec``'s masked API on the kernel's channel store — a Pallas
+scratch ref for buffered channels, a **loop-carried token window** for
+forwarded (transient) ones — plus a packed cursor row; the bit-identity
+of the whole backend rests on them matching *exactly*: offsets, masked
+no-op writes, the Fig. 2 delay copy-back.  Each drawn op sequence is
+applied through a tiny interpret-mode ``pallas_call`` driving the
+helpers in BOTH storage modes (forwarded only for delay-free specs —
+transients are delay-free by construction) and through the functional
+``FifoSpec`` state — final buffers, cursors and every read window must
+be byte-identical, and both must agree with a plain Python queue.  The
+forwarded window starts from the same initial buffer, pinning the
+carve-out argument: from identical initial bytes the carried window
+evolves byte-identically to a ring.
 """
 import jax
 import jax.numpy as jnp
@@ -25,9 +31,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import FifoSpec
-from repro.core.megakernel.kernel import (_ring_peek, _ring_read,
-                                          _ring_read_masked,
-                                          _ring_write_masked)
+from repro.core.megakernel.kernel import (_ChannelStore, _chan_peek,
+                                          _chan_read, _chan_read_masked,
+                                          _chan_write_masked)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -37,27 +43,40 @@ jax.config.update("jax_platform_name", "cpu")
 W_ON, R_ON, W_OFF, R_OFF = 0, 1, 2, 3
 
 
-def _drive_ring(spec: FifoSpec, ops, tokens):
-    """Apply ``ops`` to one scratch ring inside a pallas_call; return
+def _store(spec: FifoSpec, ring, forwarded: bool) -> _ChannelStore:
+    """One-channel store: scratch ring or loop-carried window."""
+    if forwarded:
+        return _ChannelStore(specs=(spec,), rings=(), ring_pos={},
+                             fwd_pos={0: 0}, cursor_slot=((0, 0),))
+    return _ChannelStore(specs=(spec,), rings=(ring,), ring_pos={0: 0},
+                         fwd_pos={}, cursor_slot=((0, 0),))
+
+
+def _drive_chan(spec: FifoSpec, ops, tokens, forwarded: bool):
+    """Apply ``ops`` to one channel inside a pallas_call; return
     (final buf, final cursors, read windows log)."""
     n_ops = len(ops)
     cap = spec.capacity_tokens
     tok = tuple(spec.token_shape)
 
-    def kernel(buf_in, cur_in, toks_in, buf_out, cur_out, reads_out, ring):
-        ring[...] = buf_in[...]
-        cursors = cur_in[...]
+    def kernel(buf_in, cur_in, toks_in, buf_out, cur_out, reads_out, *ring):
+        store = _store(spec, ring[0] if ring else None, forwarded)
+        if forwarded:
+            wins = (buf_in[...],)   # same start as the ring path
+        else:
+            ring[0][...] = buf_in[...]
+            wins = ()
+        curs = (cur_in[...],)
         for t, op in enumerate(ops):           # static unroll: ops are data
             enabled = jnp.bool_(op in (W_ON, R_ON))
             if op in (W_ON, W_OFF):
-                cursors = _ring_write_masked(
-                    spec, ring, cursors, 0, toks_in[t], enabled)
+                wins, curs = _chan_write_masked(
+                    store, wins, curs, 0, toks_in[t], enabled)
             else:
-                win, cursors = _ring_read_masked(
-                    spec, ring, cursors, 0, enabled)
+                win, curs = _chan_read_masked(store, wins, curs, 0, enabled)
                 reads_out[t] = win
-        buf_out[...] = ring[...]
-        cur_out[...] = cursors
+        buf_out[...] = wins[0] if forwarded else ring[0][...]
+        cur_out[...] = curs[0]
 
     buf0 = spec.init_state().buf
     cur0 = jnp.zeros((1, 3), jnp.int32).at[0, 2].set(spec.delay)
@@ -67,7 +86,8 @@ def _drive_ring(spec: FifoSpec, ops, tokens):
                    jax.ShapeDtypeStruct((1, 3), jnp.int32),
                    jax.ShapeDtypeStruct((n_ops, spec.rate) + tok,
                                         spec.dtype)],
-        scratch_shapes=[pltpu.VMEM((cap,) + tok, spec.dtype)],
+        scratch_shapes=([] if forwarded
+                        else [pltpu.VMEM((cap,) + tok, spec.dtype)]),
         interpret=True,
     )(buf0, cur0, tokens)
     return buf, cur, reads
@@ -76,7 +96,7 @@ def _drive_ring(spec: FifoSpec, ops, tokens):
 @settings(max_examples=30, deadline=None)
 @given(rate=st.integers(1, 4), delay=st.integers(0, 1),
        raw_ops=st.lists(st.integers(0, 3), min_size=1, max_size=30))
-def test_scratch_ring_matches_fifo_api_and_queue_oracle(rate, delay, raw_ops):
+def test_chan_store_matches_fifo_api_and_queue_oracle(rate, delay, raw_ops):
     spec = FifoSpec("f", rate, (1,), jnp.float32, delay=delay)
     # Pre-filter the drawn ops exactly like the fifo oracle test: enabled
     # ops that would violate blocking semantics are dropped (the MoC
@@ -114,37 +134,50 @@ def test_scratch_ring_matches_fifo_api_and_queue_oracle(rate, delay, raw_ops):
             tokens[t] = np.arange(rate, dtype=np.float32).reshape(rate, 1) + c
             if op == W_ON:
                 c += rate
-    buf, cur, reads = _drive_ring(spec, ops, jnp.asarray(tokens))
-    # Ring scratch state == functional FifoState, byte for byte.
-    np.testing.assert_array_equal(np.asarray(buf), np.asarray(fs.buf))
-    assert int(cur[0, 0]) == int(fs.rd)
-    assert int(cur[0, 1]) == int(fs.wr)
-    assert int(cur[0, 2]) == int(fs.occ)
-    assert int(fs.occ) == len(oracle)          # and both match the queue
-    # Every read window (enabled AND disabled/stale) byte-identical.
-    for t, want in expected_reads:
-        np.testing.assert_array_equal(np.asarray(reads)[t], want)
+    # Forwarded storage only exists for delay-free channels (transients
+    # are delay-free by construction — partition_layout asserts it).
+    modes = (False,) if delay else (False, True)
+    for forwarded in modes:
+        buf, cur, reads = _drive_chan(spec, ops, jnp.asarray(tokens),
+                                      forwarded)
+        # Channel storage state == functional FifoState, byte for byte.
+        np.testing.assert_array_equal(np.asarray(buf), np.asarray(fs.buf))
+        assert int(cur[0, 0]) == int(fs.rd)
+        assert int(cur[0, 1]) == int(fs.wr)
+        assert int(cur[0, 2]) == int(fs.occ)
+        assert int(fs.occ) == len(oracle)      # and both match the queue
+        # Every read window (enabled AND disabled/stale) byte-identical.
+        for t, want in expected_reads:
+            np.testing.assert_array_equal(np.asarray(reads)[t], want)
 
 
+@pytest.mark.parametrize("forwarded", [False, True])
 @pytest.mark.parametrize("delay", [0, 1])
 @pytest.mark.parametrize("tok_shape", [(1,), (2, 3)])
-def test_ring_peek_and_unconditional_read(delay, tok_shape):
-    """_ring_peek/_ring_read (the control-port path) vs FifoSpec.peek/read
+def test_chan_peek_and_unconditional_read(delay, tok_shape, forwarded):
+    """_chan_peek/_chan_read (the control-port path) vs FifoSpec.peek/read
     across whole phase cycles, on multi-dimensional tokens."""
+    if forwarded and delay:
+        pytest.skip("forwarded channels are delay-free by construction")
     r = 2
     spec = FifoSpec("f", r, tok_shape, jnp.float32, delay=delay)
     n_steps = 2 * spec.n_write_phases
 
-    def kernel(buf_in, cur_in, toks_in, peeks_out, wins_out, cur_out, ring):
-        ring[...] = buf_in[...]
-        cursors = cur_in[...]
+    def kernel(buf_in, cur_in, toks_in, peeks_out, wins_out, cur_out, *ring):
+        store = _store(spec, ring[0] if ring else None, forwarded)
+        if forwarded:
+            wins = (buf_in[...],)
+        else:
+            ring[0][...] = buf_in[...]
+            wins = ()
+        curs = (cur_in[...],)
         for t in range(n_steps):
-            cursors = _ring_write_masked(spec, ring, cursors, 0,
-                                         toks_in[t], jnp.bool_(True))
-            peeks_out[t] = _ring_peek(spec, ring, cursors, 0)
-            win, cursors = _ring_read(spec, ring, cursors, 0)
+            wins, curs = _chan_write_masked(store, wins, curs, 0,
+                                            toks_in[t], jnp.bool_(True))
+            peeks_out[t] = _chan_peek(store, wins, curs, 0)
+            win, curs = _chan_read(store, wins, curs, 0)
             wins_out[t] = win
-        cur_out[...] = cursors
+        cur_out[...] = curs[0]
 
     toks = jnp.asarray(
         np.arange(n_steps * r * int(np.prod(tok_shape)), dtype=np.float32)
@@ -156,7 +189,8 @@ def test_ring_peek_and_unconditional_read(delay, tok_shape):
         out_shape=[jax.ShapeDtypeStruct((n_steps,) + tok_shape, jnp.float32),
                    jax.ShapeDtypeStruct((n_steps, r) + tok_shape, jnp.float32),
                    jax.ShapeDtypeStruct((1, 3), jnp.int32)],
-        scratch_shapes=[pltpu.VMEM((cap,) + tok_shape, jnp.float32)],
+        scratch_shapes=([] if forwarded
+                        else [pltpu.VMEM((cap,) + tok_shape, jnp.float32)]),
         interpret=True,
     )(fs.buf, jnp.zeros((1, 3), jnp.int32).at[0, 2].set(spec.delay), toks)
     for t in range(n_steps):

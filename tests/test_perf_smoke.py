@@ -98,12 +98,22 @@ def test_bench_megakernel_fast(tmp_path):
         assert r["us_per_call"] > 0
         assert r["tokens_per_s"] > 0
     # Kernel rows carry the structure fields the regression gate compares
-    # exactly (sweep/round counts and the core count).
+    # exactly (sweep/round counts, the core count, and the scratch-diet
+    # telemetry: effective scratch, shared rings+semaphores, forwarded
+    # channel count).
     by_name = {r["name"]: r for r in records}
     for g in ("dpd", "moe"):
         for e, cores in (("megakernel", 1), ("grid2", 2), ("grid4", 4)):
             rec = by_name[f"mega_{g}_{e}"]
             assert rec["cores"] == cores and rec["sweeps"] >= 1, rec
+            assert rec["scratch_bytes"] > 0, rec
+            assert rec["shared_scratch_bytes"] >= 0, rec
+            assert rec["forwarded_fifos"] >= 0, rec
+        # Transient forwarding is live: the single-core row forwards
+        # channels and holds strictly less scratch than any no-diet
+        # layout could (dpd forwards everything).
+        assert by_name[f"mega_{g}_megakernel"]["forwarded_fifos"] > 0
+        assert by_name[f"mega_{g}_megakernel"]["shared_scratch_bytes"] == 0
 
 
 def test_check_regression_compare_logic():
@@ -125,6 +135,15 @@ def test_check_regression_compare_logic():
     # Structure drift fails even when throughput looks fine.
     drift = dict(fresh, a={"name": "a", "tokens_per_s": 200.0, "sweeps": 4})
     assert compare(base, drift, floor=0.85)["a"]["status"] == "structure"
+    # Scratch-diet fields gate the same way: a scratch (or forwarded
+    # count) regression is a structure failure, not a timing one.
+    sbase = {"k": {"name": "k", "tokens_per_s": 100.0, "sweeps": 3,
+                   "scratch_bytes": 408, "forwarded_fifos": 34}}
+    bloat = {"k": {"name": "k", "tokens_per_s": 100.0, "sweeps": 3,
+                   "scratch_bytes": 45560, "forwarded_fifos": 0}}
+    assert compare(sbase, bloat, floor=0.85)["k"]["status"] == "structure"
+    assert compare(sbase, {"k": dict(sbase["k"])},
+                   floor=0.85)["k"]["status"] == "ok"
     # Missing row.
     gone = {k: r for k, r in fresh.items() if k != "c"}
     assert compare(base, gone, floor=0.85)["c"]["status"] == "missing"

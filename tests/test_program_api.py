@@ -120,6 +120,49 @@ def test_donate_auto_resolves_per_graph():
                             specialize=False).donate is False
 
 
+def test_donate_threshold_bytes_is_configurable():
+    """The donate="auto" 1 MiB ceiling was measured on this container;
+    ExecutionPlan(donate_threshold_bytes=...) overrides it per plan and
+    Program.stats() reports the resolved value."""
+    from repro.core.program import _DONATE_AUTO_BUFFERED_BYTES_MAX
+
+    net, n_iter = make_dpd()
+    default = net.compile(ExecutionPlan(mode="dynamic"))
+    assert default.stats().resolved_donate_threshold \
+        == _DONATE_AUTO_BUFFERED_BYTES_MAX
+    assert default.donate is True     # tiny rings, under the 1 MiB default
+    # Threshold 0: the (nonzero) dynamic-mode ring bytes exceed it,
+    # auto resolves to False.
+    tight = net.compile(ExecutionPlan(mode="dynamic",
+                                      donate_threshold_bytes=0))
+    assert tight.donate is False
+    assert tight.stats().resolved_donate_threshold == 0
+    # A huge threshold flips full-size MD's auto verdict back on.
+    from repro.graphs.motion_detection import build_motion_detection
+    md_full = build_motion_detection(8, rate=4)
+    assert md_full.compile(mode="static", n_iterations=2).donate is False
+    loose = md_full.compile(mode="static", n_iterations=2,
+                            donate_threshold_bytes=1 << 30)
+    assert loose.donate is True
+    assert loose.stats().resolved_donate_threshold == 1 << 30
+    # The threshold tunes the heuristic only: explicit bools still win,
+    # and the results stay bit-identical either way.
+    assert net.compile(ExecutionPlan(mode="dynamic", donate=False,
+                                     donate_threshold_bytes=1 << 30)) \
+        .donate is False
+    r_tight = tight.run()
+    r_default = default.run()
+    assert_states_identical(r_tight.state, r_default.state)
+    with pytest.raises(ValueError, match="donate_threshold_bytes"):
+        ExecutionPlan(mode="dynamic", donate_threshold_bytes=-1)
+    with pytest.raises(ValueError, match="donate_threshold_bytes"):
+        ExecutionPlan(mode="dynamic", donate_threshold_bytes="1MiB")
+    with pytest.raises(ValueError, match="donate_threshold_bytes"):
+        # bool is an int subclass; a user confusing this with donate=True
+        # must get an error, not a silent 1-byte threshold.
+        ExecutionPlan(mode="dynamic", donate_threshold_bytes=True)
+
+
 # --------------------------------------------------------------------------- #
 # Plan validation.
 # --------------------------------------------------------------------------- #
