@@ -17,6 +17,12 @@ machine noise hits both arms equally.  Besides the CSV rows, writes
 ``BENCH_executors.json``: ``{name, us_per_call, tokens_per_s}`` per
 executor x graph (tokens = MoC source-channel tokens: signal blocks for
 DPD, frames for MD) so later PRs can track the throughput trajectory.
+
+The ``exec_*_dynamic_guarded`` rows time ``ExecutionPlan(guards=True)``
+(the in-kernel health layer) against the unguarded dynamic executor and
+inline-check its contract: a clean guarded run must be bit-identical and
+report no faults.  Their tok/s rides the same calibrated regression
+floor as every other row once committed to the baseline JSON.
 """
 from __future__ import annotations
 
@@ -125,20 +131,31 @@ def bench_executors(fast: bool = False,
                                              donate=False))
         dyn_mf = net.compile(ExecutionPlan(mode="dynamic", multi_firing=True,
                                            donate=False))
-        rb, rm = dyn_base.run(), dyn_mf.run()
+        dyn_grd = net.compile(ExecutionPlan(mode="dynamic", multi_firing=True,
+                                            donate=False, guards=True))
+        rb, rm, rg = dyn_base.run(), dyn_mf.run(), dyn_grd.run()
         sb, cb, swb = rb.state, rb.fire_counts, rb.sweeps
         sm, cm, swm = rm.state, rm.fire_counts, rm.sweeps
         identical = (_states_identical(sb, sm) and
                      {k: int(v) for k, v in cb.items()} ==
                      {k: int(v) for k, v in cm.items()})
+        # Health-guard contract: a clean guarded run is bit-identical to
+        # the unguarded one and reports no faults.
+        guard_clean = (_states_identical(sm, rg.state)
+                       and int(swm) == int(rg.sweeps)
+                       and rg.diagnostics.ok)
         med = _interleaved_medians({
             "base": lambda: jax.block_until_ready(dyn_base.run().state),
             "mf": lambda: jax.block_until_ready(dyn_mf.run().state),
+            "grd": lambda: jax.block_until_ready(dyn_grd.run().state),
         }, reps)
         record(f"exec_{gname}_dynamic_baseline", med["base"], tokens,
                f"{int(swb)} sweeps")
         record(f"exec_{gname}_dynamic_multi_firing", med["mf"], tokens,
                f"{int(swm)} sweeps")
+        record(f"exec_{gname}_dynamic_guarded", med["grd"], tokens,
+               f"{med['grd'] / med['mf']:.2f}x of unguarded, "
+               f"clean + bit-identical: {guard_clean}")
         rows.append((f"exec_{gname}_dynamic_sweep_reduction", 0.0,
                      f"{int(swb)} -> {int(swm)} sweeps "
                      f"(strictly fewer: {int(swm) < int(swb)}), "

@@ -17,7 +17,10 @@ us_per_call, tokens_per_s}`` per executor x graph, with ``sweeps`` /
 ``cores`` / ``scratch_bytes`` / ``shared_scratch_bytes`` /
 ``forwarded_fifos`` structure fields on the kernel rows (compared
 exactly by ``benchmarks/check_regression.py`` — a scratch or
-forwarding regression fails CI like a sweep-count drift does).
+forwarding regression fails CI like a sweep-count drift does).  The
+``mega_*_megakernel_guarded`` row times the in-kernel health layer
+(``ExecutionPlan(guards=True)``) against the unguarded kernel, inline-
+checking that the clean guarded run stays bit-identical and fault-free.
 
 Caveat printed with the numbers: on CPU the megakernel runs in Pallas
 *interpret* mode — the comparison measures the scheduling structure, not
@@ -84,10 +87,15 @@ def bench_megakernel(fast: bool = False,
         grid = {c: net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=c))
                 for c in GRID_CORES}
         mega = grid[1]
+        guarded = net.compile(ExecutionPlan(mode=MEGAKERNEL, guards=True))
 
         rd = dyn.run()
         grid_runs = {c: p.run() for c, p in grid.items()}
         rm = grid_runs[1]
+        rg = guarded.run()
+        guard_clean = (states_identical(rm.state, rg.state)
+                       and int(rm.sweeps) == int(rg.sweeps)
+                       and rg.diagnostics.ok)
         identical = (states_identical(rd.state, rm.state)
                      and {k: int(v) for k, v in rd.fire_counts.items()}
                      == {k: int(v) for k, v in rm.fire_counts.items()}
@@ -108,6 +116,9 @@ def bench_megakernel(fast: bool = False,
         for c, p in grid.items():
             candidates[f"grid{c}"] = (
                 lambda p=p: jax.block_until_ready(p.run().state))
+        candidates["guarded"] = (
+            lambda guarded=guarded: jax.block_until_ready(
+                guarded.run().state))
         med = _interleaved_medians(candidates, reps)
 
         st1 = grid[1].stats()
@@ -120,6 +131,10 @@ def bench_megakernel(fast: bool = False,
                scratch_bytes=int(st1.scratch_bytes),
                shared_scratch_bytes=int(st1.shared_scratch_bytes),
                forwarded_fifos=len(st1.forwarded_fifos))
+        record(f"mega_{gname}_megakernel_guarded", med["guarded"], tokens,
+               f"{med['guarded'] / med['grid1']:.2f}x of unguarded, "
+               f"clean + bit-identical: {guard_clean}",
+               sweeps=int(rg.sweeps), cores=1)
         record(f"mega_{gname}_static_specialized", med["static"], tokens,
                "fused scan reference")
         for c in GRID_CORES[1:]:

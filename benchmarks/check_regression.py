@@ -29,6 +29,11 @@ when it stays under the floor in every one of ``--attempts`` fresh runs
 persistent, noise bounces back.  Structure mismatches are deterministic
 and fail on the first attempt.
 
+The guards-on rows (``exec_*_dynamic_guarded``,
+``mega_*_megakernel_guarded``) are gated exactly like every other row:
+their tok/s must hold the calibrated floor, so a PR that bloats the
+health-guard overhead fails CI even if the unguarded paths are intact.
+
 Prints a markdown comparison table (also appended to
 ``$GITHUB_STEP_SUMMARY`` when set, so the job summary shows the full
 table) and exits non-zero on any regression.

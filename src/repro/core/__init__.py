@@ -13,7 +13,16 @@ from repro.core.fifo import FifoSpec, FifoState, total_buffer_bytes
 from repro.core.network import (Edge, Network, NetworkState,
                                 iteration_token_flops, name_index_map,
                                 repetition_vector)
-from repro.core.builder import NetworkBuilder, derive_matched_rates
+from repro.core.builder import (BoundsReport, ChannelBounds, NetworkBuilder,
+                                derive_matched_rates)
+from repro.core.health import (CURSOR_INVALID, NONFINITE, OVERFLOW, STALL,
+                               UNDERFLOW, ChannelFault, Diagnostics,
+                               HealthState, NetworkFaultError, StallReport,
+                               decode_health, diagnose_stall, fault_names,
+                               init_health)
+from repro.core.faultinject import (corrupt_cursor, inject_overflow,
+                                    inject_underflow, poison_tokens,
+                                    truncate_feed)
 from repro.core.executor import (
     RuntimeMode,
     assert_mode_allows,
@@ -57,7 +66,13 @@ __all__ = [
     "FifoSpec", "FifoState", "total_buffer_bytes",
     "Edge", "Network", "NetworkState", "iteration_token_flops",
     "name_index_map", "repetition_vector",
-    "NetworkBuilder", "derive_matched_rates",
+    "NetworkBuilder", "derive_matched_rates", "BoundsReport", "ChannelBounds",
+    "OVERFLOW", "UNDERFLOW", "CURSOR_INVALID", "NONFINITE", "STALL",
+    "ChannelFault", "Diagnostics", "HealthState", "NetworkFaultError",
+    "StallReport", "decode_health", "diagnose_stall", "fault_names",
+    "init_health",
+    "corrupt_cursor", "inject_overflow", "inject_underflow", "poison_tokens",
+    "truncate_feed",
     "ExecutionPlan", "MEGAKERNEL", "Mode", "Program", "ProgramStats",
     "RunResult",
     "GridPartition", "MegakernelLayout", "compile_megakernel",

@@ -243,6 +243,67 @@ def derive_matched_rates(src: ActorSpec, src_port: str,
 
 
 # --------------------------------------------------------------------------- #
+# PRUNE-style buffer-bound analysis (arXiv:1802.06625): decide per channel,
+# from declared or derived enable-fraction bounds, whether the Eq. 1
+# capacity provably suffices — overflow/starvation becomes a *build* error
+# for decidable graphs and stays a runtime guard flag only for the rest.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ChannelBounds:
+    """One channel's enable-fraction bounds and the verdict they prove.
+
+    ``src_bounds`` / ``dst_bounds`` are ``(lo, hi)`` fractions of firings
+    in which the producing / consuming port is enabled (1.0 = every
+    firing, the static case).  Verdicts:
+
+      * ``"balanced"``   — production provably equals consumption
+        (matched-rates derivation, or equal constant bounds): the Eq. 1
+        capacity is exact, the channel cannot overflow or starve.
+      * ``"unbounded"``  — the producer's floor exceeds the consumer's
+        ceiling: backlog grows every iteration, and under blocking
+        semantics the producer eventually blocks for good (the bounded-
+        buffer image of PRUNE's unbounded-growth verdict).
+      * ``"starved"``    — the consumer's floor exceeds the producer's
+        ceiling: the consumer is guaranteed to stall waiting on tokens
+        that provably never arrive often enough.
+      * ``"undecided"``  — token-dependent enables with no declared
+        bounds: not provable either way at build time; the runtime
+        guards (``ExecutionPlan(guards=True)``) own this channel.
+    """
+
+    fifo: str
+    src: str
+    dst: str
+    src_bounds: Tuple[float, float]
+    dst_bounds: Tuple[float, float]
+    verdict: str
+
+    def describe(self) -> str:
+        return (f"channel {self.fifo!r} ({self.src} -> {self.dst}): "
+                f"{self.verdict} [producer enabled "
+                f"{self.src_bounds[0]:g}..{self.src_bounds[1]:g} of "
+                f"firings, consumer {self.dst_bounds[0]:g}.."
+                f"{self.dst_bounds[1]:g}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundsReport:
+    """Per-channel verdicts of :meth:`NetworkBuilder.check_bounds`."""
+
+    channels: Tuple[ChannelBounds, ...]
+
+    def violations(self) -> Tuple[ChannelBounds, ...]:
+        return tuple(c for c in self.channels
+                     if c.verdict in ("unbounded", "starved"))
+
+    def undecided(self) -> Tuple[ChannelBounds, ...]:
+        return tuple(c for c in self.channels if c.verdict == "undecided")
+
+    def describe(self) -> str:
+        return "\n".join(c.describe() for c in self.channels)
+
+
+# --------------------------------------------------------------------------- #
 # The builder.
 # --------------------------------------------------------------------------- #
 class NetworkBuilder:
@@ -254,6 +315,10 @@ class NetworkBuilder:
         self._fifo_names: set = set()
         self._used_out: Dict[Tuple[str, str], str] = {}
         self._used_in: Dict[Tuple[str, str], str] = {}
+        self._rate_bounds: Dict[Tuple[str, str], Tuple[float, float]] = {}
+        #: Last :meth:`check_bounds` result (also set by
+        #: ``build(check_bounds=True)``).
+        self.bounds_report: Optional[BoundsReport] = None
 
     # -- actors --------------------------------------------------------- #
     def actor(self, spec: ActorSpec) -> ActorSpec:
@@ -473,14 +538,110 @@ class NetworkBuilder:
                 feeder_equal)
         return out
 
+    # -- PRUNE-style bound proofs ----------------------------------------- #
+    def rate_bounds(self, endpoint: str, lo: float,
+                    hi: float) -> "NetworkBuilder":
+        """Declare worst/best-case enable bounds for a dynamic port.
+
+        ``lo`` / ``hi`` bound the *fraction of firings* in which
+        ``endpoint`` ("actor.port") is enabled by its control token —
+        the declared-rate input PRUNE's analysis needs where the enable
+        is data-dependent and not derivable from the control jaxpr.
+        ``rate_bounds("fork.active", 0.0, 1.0)`` is the (vacuous)
+        default; ``(1.0, 1.0)`` pins the port always-on; ``(0.5, 0.5)``
+        declares exact half-rate decimation.  Returns ``self``.
+        """
+        actor, port = self._parse(endpoint, "rate_bounds")
+        a = self._actors[actor]
+        if port not in a.all_in_ports() and port not in a.out_ports:
+            raise ValueError(
+                f"rate_bounds({endpoint!r}): actor {actor!r} has no port "
+                f"{port!r}; "
+                f"{_suggest(port, (*a.all_in_ports(), *a.out_ports))}")
+        if not (0.0 <= lo <= hi <= 1.0):
+            raise ValueError(
+                f"rate_bounds({endpoint!r}): bounds must satisfy "
+                f"0 <= lo <= hi <= 1 (fractions of firings), got "
+                f"lo={lo}, hi={hi}")
+        self._rate_bounds[(actor, port)] = (float(lo), float(hi))
+        return self
+
+    def _port_bounds(self, actor_name: str, port: str,
+                     env) -> Tuple[float, float]:
+        """Enable-fraction bounds of one port, most-precise source first:
+        declared ``rate_bounds`` > control port (consumes every firing) >
+        provably-constant enable > static actor > dynamic unknown."""
+        a = self._actors[actor_name]
+        declared = self._rate_bounds.get((actor_name, port))
+        if declared is not None:
+            return declared
+        if port == a.control_port:
+            return (1.0, 1.0)
+        if not a.is_dynamic:
+            return (1.0, 1.0)
+        e = env(actor_name, port)
+        if e is not None and e[0] == "const":
+            v = 1.0 if e[1] > 0 else 0.0
+            return (v, v)
+        return (0.0, 1.0)
+
+    def check_bounds(self) -> BoundsReport:
+        """Run the PRUNE-style per-channel bound analysis (no build).
+
+        Combines the matched-rates derivation (provably co-enabled ports
+        -> ``"balanced"``), constant-enable proofs from the control
+        jaxprs, and any declared :meth:`rate_bounds` into a per-channel
+        verdict; see :class:`ChannelBounds` for the taxonomy.  The report
+        is also stored as ``self.bounds_report``.
+        """
+        matched = self._derive_matched()
+        env_cache: Dict[Tuple[str, str], Any] = {}
+
+        def env(actor_name: str, port: str):
+            key = (actor_name, port)
+            if key not in env_cache:
+                a = self._actors[actor_name]
+                feed, cspec = self._control_feed(a)
+                env_cache[key] = _enable_expr(a, port, cspec, feed)
+            return env_cache[key]
+
+        channels = []
+        for c in self._connections:
+            e = c.edge
+            src_b = self._port_bounds(e.src_actor, e.src_port, env)
+            dst_b = self._port_bounds(e.dst_actor, e.dst_port, env)
+            if matched.get(c.spec.name):
+                verdict = "balanced"
+            elif src_b[0] > dst_b[1]:
+                verdict = "unbounded"
+            elif dst_b[0] > src_b[1]:
+                verdict = "starved"
+            elif src_b == dst_b and src_b[0] == src_b[1]:
+                verdict = "balanced"
+            else:
+                verdict = "undecided"
+            channels.append(ChannelBounds(
+                fifo=c.spec.name,
+                src=f"{e.src_actor}.{e.src_port}",
+                dst=f"{e.dst_actor}.{e.dst_port}",
+                src_bounds=src_b, dst_bounds=dst_b, verdict=verdict))
+        report = BoundsReport(channels=tuple(channels))
+        self.bounds_report = report
+        return report
+
     # -- emission --------------------------------------------------------- #
-    def build(self, derive_matched: bool = True) -> Network:
+    def build(self, derive_matched: bool = True,
+              check_bounds: bool = False) -> Network:
         """Validate and emit the :class:`Network`.
 
         Dangling ports are reported here with the exact ``connect`` calls
         still missing; everything else was validated incrementally.  With
         ``derive_matched=True`` (default) channels left with
         ``matched_rates=None`` get the provable-transiency derivation.
+        ``check_bounds=True`` additionally runs the PRUNE-style buffer
+        bound analysis (:meth:`check_bounds`) and rejects graphs with a
+        provably unbounded or starved channel — overflow becomes a build
+        error where decidable, a runtime guard flag only for the rest.
         """
         dangling = self.dangling_ports()
         if dangling:
@@ -488,6 +649,16 @@ class NetworkBuilder:
                 "network has dangling ports (every port connects to exactly "
                 f"one channel, paper §3.2): {sorted(dangling)} — add a "
                 "b.connect(...) for each")
+        if check_bounds:
+            bad = self.check_bounds().violations()
+            if bad:
+                raise ValueError(
+                    "NetworkBuilder.build(check_bounds=True): the declared/"
+                    "derived rate bounds prove these channels violate their "
+                    "Eq. 1 buffers:\n  "
+                    + "\n  ".join(c.describe() for c in bad)
+                    + "\n(fix the graph, adjust rate_bounds(...), or build "
+                    "with check_bounds=False and rely on runtime guards)")
         matched = (self._derive_matched() if derive_matched
                    else {c.spec.name: bool(c.matched_override)
                          for c in self._connections})

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fifo import FifoSpec, FifoState
+from repro.core.health import HealthState, init_health
 from repro.core.network import Network, NetworkState
 from repro.core.schedule import phase_unroll_period
 
@@ -123,7 +124,8 @@ def _register_write(spec: FifoSpec, st: FifoState,
 def fire_actor(network: Network, name: str, state: State,
                phase: Optional[int] = None,
                regs: Optional[Dict[int, jax.Array]] = None,
-               period: Optional[int] = None) -> NetworkState:
+               period: Optional[int] = None,
+               health: Optional["HealthState"] = None):
     """Fire actor ``name`` once, updating FIFO and actor state.
 
     Implements the firing protocol of paper §2.2:
@@ -160,7 +162,22 @@ def fire_actor(network: Network, name: str, state: State,
     occupancies, live tokens) are bit-identical to ``phase=None``; only
     the dead slots of register-allocated buffers differ (their content is
     unspecified by the MoC).
+
+    ``health`` (a :class:`repro.core.health.HealthState`) arms the channel
+    guards: every read/write additionally evaluates its fault-bit word
+    (overflow / underflow / cursor consistency / non-finite tokens) from
+    the pre-op cursors and ORs it into the per-channel fault vector.  The
+    return value becomes ``(state, health)``.  Guards ride the dynamic
+    masked path only — the phase-specialized static schedule proves its
+    blocking preconditions at build time (``check_schedule_feasible``), so
+    combining ``health`` with ``phase``/``regs`` is rejected.
     """
+    if health is not None and (phase is not None or regs is not None):
+        raise ValueError(
+            "fire_actor: health guards apply to the dynamic (masked-cursor) "
+            "path; the phase-specialized static schedule proves blocking "
+            "bounds at build time — run with ExecutionPlan(mode='dynamic', "
+            "guards=True) instead")
     if not isinstance(state, NetworkState):
         state = network.state_from_dict(state)
     a = network.actors[name]
@@ -193,6 +210,9 @@ def fire_actor(network: Network, name: str, state: State,
                                              jnp.int32(1))
         elif phase_covers(cspec):
             ctok, fifos[ci] = cspec.read_static(fifos[ci], phase)
+        elif health is not None:
+            ctok, fifos[ci], bits = cspec.read_guarded(fifos[ci])
+            health = health.record(ci, bits)
         else:
             ctok, fifos[ci] = cspec.read(fifos[ci])
         ctrl_tok = ctok[0]  # rate-1 window -> single token
@@ -215,6 +235,10 @@ def fire_actor(network: Network, name: str, state: State,
                 # the (unspecified-by-the-MoC) window is the slot-0 slice.
                 windows[p] = jax.lax.slice_in_dim(fifos[fi].buf, 0, spec.rate,
                                                   axis=0)
+        elif health is not None:
+            windows[p], fifos[fi], bits = spec.read_masked_guarded(
+                fifos[fi], en > 0)
+            health = health.record(fi, bits)
         else:
             windows[p], fifos[fi] = spec.read_masked(fifos[fi], en > 0)
 
@@ -270,12 +294,20 @@ def fire_actor(network: Network, name: str, state: State,
             if int(en) > 0:
                 fifos[fi] = spec.write_static(fifos[fi], outputs[p], phase)
             # Constant-disabled port: cursor frozen, buffer untouched.
+        elif health is not None:
+            fifos[fi], bits, occ_after = spec.write_masked_guarded(
+                fifos[fi], outputs[p], en > 0)
+            health = health.record(fi, bits).mark_high_water(fi, occ_after)
         else:
             fifos[fi] = spec.write_masked(fifos[fi], outputs[p], en > 0)
 
     actors = list(state.actors)
     actors[aidx] = new_actor_state
-    return dataclasses.replace(state, fifos=tuple(fifos), actors=tuple(actors))
+    new_state = dataclasses.replace(state, fifos=tuple(fifos),
+                                    actors=tuple(actors))
+    if health is not None:
+        return new_state, health
+    return new_state
 
 
 # --------------------------------------------------------------------------- #
@@ -503,13 +535,28 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
                      mode: RuntimeMode = RuntimeMode.PROPOSED,
                      multi_firing: bool = True,
                      donate: bool = False,
-                     return_sweeps: bool = False) -> Callable[..., Tuple]:
+                     return_sweeps: bool = False,
+                     guards: bool = False) -> Callable[..., Tuple]:
     """Token-driven executor: sweeps until quiescence (no actor can fire).
 
     Returns ``(final_state, fire_counts)`` where ``fire_counts[actor]`` is
     the number of firings — used by the benchmarks for throughput
     accounting (frames / samples per second).  With ``return_sweeps=True``
-    the executor returns ``(final_state, fire_counts, n_sweeps)``.
+    the executor returns the full health-aware record ``(final_state,
+    fire_counts, n_sweeps, stalled, health)``: ``stalled`` is True when
+    the loop exited via the ``max_sweeps`` bound with work remaining
+    (previously indistinguishable from quiescence), and ``health`` is the
+    :class:`repro.core.health.HealthState` fault/high-water record when
+    ``guards=True``, else None.
+
+    ``guards=True`` arms the per-channel fault guards (overflow /
+    underflow / cursor consistency / non-finite tokens) on every firing's
+    reads and writes.  The health vectors thread the sweep carry as extra
+    loop state; with ``guards=False`` that slot is the empty pytree
+    ``None``, so the guards-off loop lowers to the identical HLO as before
+    the health layer existed, and a guarded clean run's states / cursors /
+    fire counts / sweeps are bit-identical to an unguarded one (guards
+    observe channel operations, they never change them).
 
     ``multi_firing=True`` fires each visited actor up to its
     occupancy-derived bound (``_max_fireable``) via ``lax.fori_loop``
@@ -521,50 +568,61 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
     assert_mode_allows(network, mode)
     names = list(network.actors)
 
-    def fire_once(nm: str, state, counts):
+    def fire_once(nm: str, state, counts, hlth):
         ready = _can_fire(network, nm, state)
 
         def do_fire(operand):
-            st, c = operand
-            st = fire_actor(network, nm, st)
+            st, c, h = operand
+            if h is None:
+                st = fire_actor(network, nm, st)
+            else:
+                st, h = fire_actor(network, nm, st, health=h)
             c = dict(c)
             c[nm] = c[nm] + 1
-            return st, c
+            return st, c, h
 
-        state, counts = jax.lax.cond(ready, do_fire, lambda o: o, (state, counts))
-        return state, counts, ready
+        state, counts, hlth = jax.lax.cond(ready, do_fire, lambda o: o,
+                                           (state, counts, hlth))
+        return state, counts, hlth, ready
 
     def sweep(carry):
-        state, counts, _, sweeps = carry
+        state, counts, hlth, _, sweeps = carry
         fired_any = jnp.bool_(False)
         for nm in names:
             if multi_firing:
                 k = _max_fireable(network, nm, state)
 
                 def body(_, c, nm=nm):
-                    st, cnt, fired = c
-                    st, cnt, ready = fire_once(nm, st, cnt)
-                    return st, cnt, jnp.logical_or(fired, ready)
+                    st, cnt, h, fired = c
+                    st, cnt, h, ready = fire_once(nm, st, cnt, h)
+                    return st, cnt, h, jnp.logical_or(fired, ready)
 
-                state, counts, fired = jax.lax.fori_loop(
-                    0, k, body, (state, counts, jnp.bool_(False)))
+                state, counts, hlth, fired = jax.lax.fori_loop(
+                    0, k, body, (state, counts, hlth, jnp.bool_(False)))
             else:
-                state, counts, fired = fire_once(nm, state, counts)
+                state, counts, hlth, fired = fire_once(nm, state, counts,
+                                                       hlth)
             fired_any = jnp.logical_or(fired_any, fired)
-        return state, counts, fired_any, sweeps + 1
+        return state, counts, hlth, fired_any, sweeps + 1
 
     def cond(carry):
-        _, _, fired_any, sweeps = carry
+        _, _, _, fired_any, sweeps = carry
         return jnp.logical_and(fired_any, sweeps < max_sweeps)
 
     def run(state: State):
         if not isinstance(state, NetworkState):
             state = network.state_from_dict(state)
         counts = {nm: jnp.int32(0) for nm in names}
-        carry = (state, counts, jnp.bool_(True), jnp.int32(0))
-        state, counts, _, sweeps = jax.lax.while_loop(cond, sweep, carry)
+        hlth = init_health(len(network.fifos)) if guards else None
+        carry = (state, counts, hlth, jnp.bool_(True), jnp.int32(0))
+        state, counts, hlth, fired_any, sweeps = jax.lax.while_loop(
+            cond, sweep, carry)
         if return_sweeps:
-            return state, counts, sweeps
+            # fired_any still True at exit means the loop left through the
+            # sweep budget, not quiescence — the stall the health layer
+            # surfaces instead of returning partial state silently.
+            stalled = jnp.logical_and(fired_any, sweeps >= max_sweeps)
+            return state, counts, sweeps, stalled, hlth
         return state, counts
 
     return jax.jit(run, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,165 @@
+"""Fault injection: corrupt a live NetworkState the way real bugs would.
+
+The health layer's guards (:mod:`repro.core.health`) claim to catch
+overflow, underflow, cursor corruption and non-finite tokens on every
+backend — a claim that is only worth anything if something *proves* each
+guard fires.  This module is the chaos half of that proof: each injector
+takes a valid :class:`~repro.core.network.NetworkState` and returns one
+corrupted exactly like a specific bug class would corrupt it, so the
+chaos suite (``tests/test_faults.py``) can assert the resulting run
+raises a :class:`~repro.core.health.NetworkFaultError` naming the right
+channel on the dynamic executor, the megakernel, and every grid core
+count.
+
+The injectors model the *mechanism*, not just the symptom:
+
+  * :func:`inject_overflow` lowers a channel's occupancy counter — the
+    scheduler now believes there is room, lets the producer fire past the
+    Eq. 1 writable bound, and the write guard sees the true (cursor-
+    derived) occupancy exceed it.  A dynamic rate spiking past its
+    declared capacity corrupts state through exactly this path.
+  * :func:`inject_underflow` raises the counter — the consumer fires on
+    tokens that do not exist.
+  * :func:`corrupt_cursor` offsets rd/wr/occ directly (the stuck-bit /
+    torn-update model); any inconsistency trips ``CURSOR_INVALID`` on the
+    channel's next visit, fired or not.
+  * :func:`poison_tokens` appends a NaN/Inf window *with consistent
+    cursors* — the only flag that run can raise is ``NONFINITE``, so the
+    test discriminates the data-health guard from the cursor guards.
+  * :func:`truncate_feed` drops trailing windows from a host stream —
+    the feed-validation satellite's error path in ``Program.stream``.
+
+Injectors never touch the network definition, only a state; they are
+pure (input state unmodified) and jit-free, so tests can inject between
+runs at will.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fifo import FifoState
+from repro.core.network import Network, NetworkState
+
+
+def _fifo_index(network: Network, fifo: str) -> int:
+    if fifo not in network.fifo_index:
+        raise ValueError(
+            f"unknown channel {fifo!r}; known: {sorted(network.fifos)}")
+    return network.fifo_index[fifo]
+
+
+def _replace_fifo(state: NetworkState, fi: int,
+                  fs: FifoState) -> NetworkState:
+    fifos = state.fifos[:fi] + (fs,) + state.fifos[fi + 1:]
+    return dataclasses.replace(state, fifos=fifos)
+
+
+def _as_network_state(network: Network, state: Any) -> NetworkState:
+    if not isinstance(state, NetworkState):
+        state = network.state_from_dict(state)
+    return state
+
+
+def inject_overflow(network: Network, state: Any, fifo: str,
+                    by: Optional[int] = None) -> NetworkState:
+    """Make the scheduler believe ``fifo`` has room it does not have.
+
+    Lowers the occupancy counter by ``by`` tokens (default: one window =
+    ``rate``), leaving rd/wr untouched.  The next time the producer's
+    occupancy check passes spuriously it writes past the true Eq. 1
+    bound: the write guard raises ``OVERFLOW`` (true occupancy exceeds
+    the writable bound) and ``CURSOR_INVALID`` (the counter disagrees
+    with the cursors) on the channel's next visit.
+    """
+    fi = _fifo_index(network, fifo)
+    spec = network.fifos[fifo]
+    by = spec.rate if by is None else int(by)
+    state = _as_network_state(network, state)
+    fs = state.fifos[fi]
+    return _replace_fifo(state, fi, FifoState(
+        buf=fs.buf, rd=fs.rd, wr=fs.wr, occ=fs.occ - jnp.int32(by)))
+
+
+def inject_underflow(network: Network, state: Any, fifo: str,
+                     by: Optional[int] = None) -> NetworkState:
+    """Make the scheduler believe ``fifo`` holds tokens it does not hold.
+
+    Raises the occupancy counter by ``by`` tokens (default one window);
+    the consumer then fires on a channel whose true (cursor-derived)
+    occupancy cannot cover its rate — ``UNDERFLOW`` plus
+    ``CURSOR_INVALID`` on the next visit.
+    """
+    fi = _fifo_index(network, fifo)
+    spec = network.fifos[fifo]
+    by = spec.rate if by is None else int(by)
+    state = _as_network_state(network, state)
+    fs = state.fifos[fi]
+    return _replace_fifo(state, fi, FifoState(
+        buf=fs.buf, rd=fs.rd, wr=fs.wr, occ=fs.occ + jnp.int32(by)))
+
+
+def corrupt_cursor(network: Network, state: Any, fifo: str,
+                   rd: int = 0, wr: int = 0, occ: int = 0) -> NetworkState:
+    """Offset ``fifo``'s cursors additively (stuck-bit / torn-update
+    model).  Any combination that breaks ``occ == delay + (wr-rd)*rate``
+    trips ``CURSOR_INVALID`` on the channel's next read or write visit,
+    whether or not that visit fires."""
+    fi = _fifo_index(network, fifo)
+    state = _as_network_state(network, state)
+    fs = state.fifos[fi]
+    return _replace_fifo(state, fi, FifoState(
+        buf=fs.buf, rd=fs.rd + jnp.int32(rd), wr=fs.wr + jnp.int32(wr),
+        occ=fs.occ + jnp.int32(occ)))
+
+
+def poison_tokens(network: Network, state: Any, fifo: str,
+                  value: float = float("nan")) -> NetworkState:
+    """Append one window of ``value`` (NaN by default) to ``fifo`` with
+    *consistent* cursor advance — a producer emitting garbage data, not a
+    scheduling bug.  The run's only possible flag is ``NONFINITE``, on
+    the consumer's read of the poisoned window.
+
+    Requires a float channel (integer channels cannot carry NaN/Inf) with
+    room for one window.
+    """
+    fi = _fifo_index(network, fifo)
+    spec = network.fifos[fifo]
+    if not jnp.issubdtype(jnp.dtype(spec.dtype), jnp.inexact):
+        raise ValueError(
+            f"poison_tokens: channel {fifo!r} carries {jnp.dtype(spec.dtype)}"
+            " tokens; non-finite poison needs a float channel")
+    state = _as_network_state(network, state)
+    fs = state.fifos[fi]
+    if int(fs.occ) + spec.rate > spec.writable_occupancy_bound:
+        raise ValueError(
+            f"poison_tokens: channel {fifo!r} has no room for a poison "
+            f"window (occupancy {int(fs.occ)} / bound "
+            f"{spec.writable_occupancy_bound}); drain it first")
+    window = jnp.full((spec.rate,) + tuple(spec.token_shape), value,
+                      spec.dtype)
+    return _replace_fifo(state, fi, spec.write(fs, window))
+
+
+def truncate_feed(feeds: Mapping[str, Any], fifo: str,
+                  drop: int = 1) -> Dict[str, Any]:
+    """Drop the last ``drop`` windows from one channel's host stream.
+
+    Models a truncated capture / short read on the host side of a
+    heterogeneous plan; ``Program.stream`` must reject the resulting
+    unequal feed lengths *by name* before any chunk runs.
+    """
+    if fifo not in feeds:
+        raise ValueError(
+            f"truncate_feed: no feed named {fifo!r}; feeds: "
+            f"{sorted(feeds)}")
+    out = {k: v for k, v in feeds.items()}
+    arr = np.asarray(out[fifo])
+    if drop < 0 or drop > arr.shape[0]:
+        raise ValueError(
+            f"truncate_feed: cannot drop {drop} of {arr.shape[0]} windows")
+    out[fifo] = arr[:arr.shape[0] - drop]
+    return out

@@ -358,6 +358,44 @@ class FifoSpec:
         return FifoState(buf=buf, rd=st.rd, wr=st.wr + e,
                          occ=st.occ + e * self.rate)
 
+    # ------------------------------------------------------------------ #
+    # Guarded variants (repro.core.health).  Same channel operation, plus  #
+    # the packed fault-bit word of the PRE-op state — guards observe, they #
+    # never change what the operation does, so a guarded executor's state  #
+    # stays bit-identical to the unguarded one.                            #
+    # ------------------------------------------------------------------ #
+    def read_guarded(self, st: FifoState) -> Tuple[jax.Array, FifoState, jax.Array]:
+        """``read`` returning ``(window, new_state, fault_bits)``."""
+        from repro.core.health import read_guard_bits
+        window, new = self.read(st)
+        bits = read_guard_bits(self, st.rd, st.wr, st.occ, jnp.bool_(True),
+                               window)
+        return window, new, bits
+
+    def read_masked_guarded(self, st: FifoState, enabled: jax.Array
+                            ) -> Tuple[jax.Array, FifoState, jax.Array]:
+        """``read_masked`` returning ``(window, new_state, fault_bits)``."""
+        from repro.core.health import read_guard_bits
+        window, new = self.read_masked(st, enabled)
+        bits = read_guard_bits(self, st.rd, st.wr, st.occ, enabled, window)
+        return window, new, bits
+
+    def write_masked_guarded(self, st: FifoState, tokens: jax.Array,
+                             enabled: jax.Array
+                             ) -> Tuple[FifoState, jax.Array, jax.Array]:
+        """``write_masked`` returning ``(new_state, fault_bits, occ_after)``.
+
+        ``occ_after`` is the **true** post-write occupancy recomputed from
+        the monotonic cursors (not the possibly-corrupted ``occ`` counter)
+        — the high-water quantity the health layer tracks per channel.
+        """
+        from repro.core.health import true_occupancy, write_guard_bits
+        new = self.write_masked(st, tokens, enabled)
+        bits = write_guard_bits(self, st.rd, st.wr, st.occ, enabled, tokens)
+        e = enabled.astype(jnp.int32)
+        occ_after = true_occupancy(self, st.rd, st.wr) + e * self.rate
+        return new, bits, occ_after
+
 
 def total_buffer_bytes(specs) -> int:
     """Sum of Eq. 1 capacities — reproduces the accounting of paper Table 1."""

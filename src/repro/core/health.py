@@ -1,0 +1,327 @@
+"""Runtime health layer: in-kernel fault flags and host-side diagnostics.
+
+The paper's pitch is that dynamic data-dependent rates are *safe* to run
+on accelerators — but the runtime as shipped trusted that promise: a
+producer pushed past its Eq. 1 ring capacity silently corrupts bytes, a
+corrupted cursor silently wraps, and a livelocked network exhausts
+``max_sweeps`` returning partial state indistinguishable from quiescence.
+PRUNE (arXiv:1802.06625) frames the fix as two-sided: prove buffer bounds
+at build time where decidable (``NetworkBuilder.build(check_bounds=True)``,
+see :mod:`repro.core.builder`), and detect violations at run time with
+*named* diagnostics everywhere else.  This module is the run-time side:
+
+  * a packed per-channel **fault word** (:data:`OVERFLOW`,
+    :data:`UNDERFLOW`, :data:`CURSOR_INVALID`, :data:`NONFINITE`,
+    :data:`STALL`) plus per-channel **high-water occupancy marks**,
+    carried as extra loop state through the dynamic executor's sweep loop
+    and the megakernel's in-kernel ``while_loop`` (:class:`HealthState`);
+  * the pure guard-bit predicates the executors evaluate next to every
+    channel operation (:func:`read_guard_bits` / :func:`write_guard_bits`).
+    The guards recompute the **true** occupancy from the monotonic rd/wr
+    cursors — ``delay + (wr - rd) * rate`` — so occupancy-counter
+    corruption is itself detectable, not trusted;
+  * the host-side decode into :class:`Diagnostics` /
+    :class:`NetworkFaultError` naming the offending channel and its
+    endpoint actors, and the stall forensics (:func:`diagnose_stall`)
+    naming which actor starved on which full/empty channel when the sweep
+    loop exits via the ``max_sweeps`` bound instead of quiescence.
+
+Guards are **off by default** (``ExecutionPlan(guards=True)`` opts in):
+with guards off the executors are bit-identical to the pre-health-layer
+kernels, and with guards on a clean run's states, cursors, fire counts
+and sweeps are still bit-identical — the guard arithmetic only *observes*
+the channel operations, it never changes them (faulty operations proceed
+and are reported, the guards detect rather than mask).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------------- #
+# The packed fault word.  One int32 per channel, bits OR-accumulated over
+# the run; STALL is a run-level condition (no single channel owns it) and
+# appears only in the host-side decode.
+# ----------------------------------------------------------------------- #
+OVERFLOW = 1        # enabled write past the Eq. 1 writable occupancy bound
+UNDERFLOW = 2       # enabled read from a channel with < rate true tokens
+CURSOR_INVALID = 4  # occ counter disagrees with delay + (wr - rd) * rate
+NONFINITE = 8       # NaN/Inf in an enabled window (float channels only)
+STALL = 16          # sweep loop exhausted max_sweeps with work remaining
+
+FAULT_NAMES = {
+    OVERFLOW: "OVERFLOW",
+    UNDERFLOW: "UNDERFLOW",
+    CURSOR_INVALID: "CURSOR_INVALID",
+    NONFINITE: "NONFINITE",
+    STALL: "STALL",
+}
+
+
+def fault_names(bits: int) -> Tuple[str, ...]:
+    """Decode a packed fault word into its set-bit names."""
+    return tuple(name for bit, name in sorted(FAULT_NAMES.items())
+                 if bits & bit)
+
+
+# ----------------------------------------------------------------------- #
+# Guard-bit predicates — pure jnp, shared verbatim by the host executor
+# (on FifoState scalars) and the megakernel (on cursor-block scalars).
+# ----------------------------------------------------------------------- #
+def true_occupancy(spec, rd: jax.Array, wr: jax.Array) -> jax.Array:
+    """Occupancy recomputed from the monotonic cursors alone.
+
+    Every read advances ``rd`` by 1 (consuming ``rate`` tokens), every
+    write advances ``wr`` by 1 (producing ``rate``), and ``delay`` initial
+    tokens precede both — so ``delay + (wr - rd) * rate`` is the ground
+    truth the ``occ`` counter must agree with.  Trusting ``occ`` itself
+    would blind the guards to exactly the corruption they exist to catch.
+    """
+    return jnp.int32(spec.delay) + (wr - rd) * jnp.int32(spec.rate)
+
+
+def _nonfinite_bit(spec, values: jax.Array, enabled: jax.Array) -> jax.Array:
+    if not jnp.issubdtype(jnp.dtype(spec.dtype), jnp.inexact):
+        return jnp.int32(0)  # integer channels cannot carry NaN/Inf
+    bad = jnp.logical_not(jnp.all(jnp.isfinite(values)))
+    return jnp.where(jnp.logical_and(enabled, bad),
+                     jnp.int32(NONFINITE), jnp.int32(0))
+
+
+def read_guard_bits(spec, rd: jax.Array, wr: jax.Array, occ: jax.Array,
+                    enabled: jax.Array, window: jax.Array) -> jax.Array:
+    """Fault bits of one (possibly masked) read, from the pre-op state.
+
+    ``enabled`` gates UNDERFLOW and NONFINITE (a disabled port's stale
+    window is unspecified by the MoC); CURSOR_INVALID is unconditional —
+    the consistency invariant must hold whether or not this visit fires.
+    """
+    true_occ = true_occupancy(spec, rd, wr)
+    bits = jnp.where(occ != true_occ, jnp.int32(CURSOR_INVALID), jnp.int32(0))
+    starved = true_occ < spec.rate
+    bits = bits | jnp.where(jnp.logical_and(enabled, starved),
+                            jnp.int32(UNDERFLOW), jnp.int32(0))
+    return bits | _nonfinite_bit(spec, window, enabled)
+
+
+def write_guard_bits(spec, rd: jax.Array, wr: jax.Array, occ: jax.Array,
+                     enabled: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Fault bits of one (possibly masked) write, from the pre-op state."""
+    true_occ = true_occupancy(spec, rd, wr)
+    bits = jnp.where(occ != true_occ, jnp.int32(CURSOR_INVALID), jnp.int32(0))
+    over = true_occ + spec.rate > spec.writable_occupancy_bound
+    bits = bits | jnp.where(jnp.logical_and(enabled, over),
+                            jnp.int32(OVERFLOW), jnp.int32(0))
+    return bits | _nonfinite_bit(spec, tokens, enabled)
+
+
+# ----------------------------------------------------------------------- #
+# The loop-carried health state.
+# ----------------------------------------------------------------------- #
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HealthState:
+    """Per-channel fault words + high-water marks, threaded as loop state.
+
+    ``fault[i]`` is the OR of every guard-bit word channel ``i`` produced
+    during the run; ``high_water[i]`` the maximum *true* occupancy any
+    enabled write reached (so an overflow's magnitude is visible even when
+    the ``occ`` counter itself was the corrupted quantity).
+    """
+
+    fault: jax.Array        # (n_fifos,) int32 bitmask
+    high_water: jax.Array   # (n_fifos,) int32
+
+    def record(self, fi: int, bits: jax.Array) -> "HealthState":
+        return HealthState(
+            fault=self.fault.at[fi].set(jnp.bitwise_or(self.fault[fi], bits)),
+            high_water=self.high_water)
+
+    def mark_high_water(self, fi: int, occupancy: jax.Array) -> "HealthState":
+        return HealthState(fault=self.fault,
+                           high_water=self.high_water.at[fi].max(occupancy))
+
+
+def init_health(n_fifos: int) -> HealthState:
+    return HealthState(fault=jnp.zeros((n_fifos,), jnp.int32),
+                       high_water=jnp.zeros((n_fifos,), jnp.int32))
+
+
+# ----------------------------------------------------------------------- #
+# Host-side decode.
+# ----------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ChannelFault:
+    """One faulting channel, named end to end."""
+
+    fifo: str
+    src_actor: str
+    src_port: str
+    dst_actor: str
+    dst_port: str
+    bits: int
+    faults: Tuple[str, ...]
+    high_water: int
+    occupancy_bound: int
+
+    def describe(self) -> str:
+        return (f"channel {self.fifo!r} ({self.src_actor}.{self.src_port} -> "
+                f"{self.dst_actor}.{self.dst_port}): "
+                f"{', '.join(self.faults)} "
+                f"[high-water {self.high_water} / bound "
+                f"{self.occupancy_bound}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class StallReport:
+    """Forensics of a ``max_sweeps`` exhaustion.
+
+    ``blocked`` pairs each non-fireable actor with the first blocking
+    condition (starved on an empty channel / blocked on a full one /
+    closed ready gate); ``runnable`` lists actors that could still fire —
+    under exhaustion the network was mid-flight, under a genuine livelock
+    both tell which side of a cycle starved.  ``occupancy`` is the final
+    per-channel occupancy snapshot.
+    """
+
+    runnable: Tuple[str, ...]
+    blocked: Tuple[Tuple[str, str], ...]
+    occupancy: Dict[str, int]
+
+    def describe(self) -> str:
+        parts = [f"{a}: {why}" for a, why in self.blocked]
+        if self.runnable:
+            parts.append(f"still runnable: {', '.join(self.runnable)}")
+        return "; ".join(parts) if parts else "no actors blocked"
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostics:
+    """Host-decoded health of one run (``RunResult.diagnostics``)."""
+
+    ok: bool
+    stalled: bool
+    faults: Tuple[ChannelFault, ...]
+    high_water: Dict[str, int]
+    stall: Optional[StallReport] = None
+
+    def summary(self) -> str:
+        if self.ok:
+            return "healthy"
+        parts = [f.describe() for f in self.faults]
+        if self.stalled:
+            msg = "STALL: sweep budget exhausted with work remaining"
+            if self.stall is not None:
+                msg += f" ({self.stall.describe()})"
+            parts.append(msg)
+        return "; ".join(parts)
+
+
+class NetworkFaultError(RuntimeError):
+    """A guarded run tripped at least one fault flag (or stalled).
+
+    Carries the full :class:`Diagnostics` as ``.diagnostics``; the
+    message names the offending channel(s) and their endpoint actors.
+    """
+
+    def __init__(self, diagnostics: Diagnostics):
+        self.diagnostics = diagnostics
+        super().__init__(f"network fault: {diagnostics.summary()}")
+
+
+def decode_health(network, health: Optional[HealthState], stalled: bool,
+                  state=None) -> Diagnostics:
+    """Decode device-side health arrays into named host diagnostics.
+
+    ``network`` is the executed :class:`repro.core.network.Network` (its
+    fifo declaration order indexes the health vectors); ``state`` (the
+    final NetworkState), when given, feeds the stall forensics.  With
+    ``health=None`` (a guards-off run) only the stall condition is
+    decoded — fault words and high-water marks were never collected.
+    """
+    names = list(network.fifos)
+    if health is None:
+        fault = np.zeros((len(names),), np.int32)
+        hw = np.zeros((len(names),), np.int32)
+    else:
+        fault = np.asarray(health.fault)
+        hw = np.asarray(health.high_water)
+    faults = []
+    for i, name in enumerate(names):
+        bits = int(fault[i])
+        if not bits:
+            continue
+        spec = network.fifos[name]
+        e = network.edge_of(name)
+        faults.append(ChannelFault(
+            fifo=name, src_actor=e.src_actor, src_port=e.src_port,
+            dst_actor=e.dst_actor, dst_port=e.dst_port, bits=bits,
+            faults=fault_names(bits), high_water=int(hw[i]),
+            occupancy_bound=spec.writable_occupancy_bound))
+    stall = (diagnose_stall(network, state)
+             if stalled and state is not None else None)
+    high_water = ({} if health is None
+                  else {name: int(hw[i]) for i, name in enumerate(names)})
+    return Diagnostics(ok=not faults and not stalled, stalled=bool(stalled),
+                       faults=tuple(faults), high_water=high_water,
+                       stall=stall)
+
+
+def diagnose_stall(network, state) -> StallReport:
+    """Eager per-actor blocking analysis of a final state.
+
+    Mirrors ``executor._can_fire`` with concrete values: peek the control
+    token where one is available, evaluate the rates, and name the first
+    blocking condition per non-fireable actor — the forensic snapshot the
+    ``max_sweeps`` exhaustion path attaches to its warning/error instead
+    of returning partial state silently.
+    """
+    from repro.core.network import NetworkState  # local: avoid import cycle
+    if not isinstance(state, NetworkState):
+        state = network.state_from_dict(state)
+    occupancy = {name: int(state.fifos[i].occ)
+                 for name, i in network.fifo_index.items()}
+    runnable, blocked = [], []
+    for name, a in network.actors.items():
+        reason = None
+        if a.ready is not None and not bool(
+                a.ready(state.actors[network.actor_index[name]])):
+            reason = "ready() gate closed (source feed exhausted?)"
+        rates = None
+        ctl = network.control_specs[name]
+        if reason is None:
+            if ctl is not None:
+                cspec, ci = ctl
+                if int(state.fifos[ci].occ) < 1:
+                    reason = (f"starved on empty control channel "
+                              f"{cspec.name!r}")
+                else:
+                    tok = cspec.peek(state.fifos[ci])
+                    rates = {p: int(v) for p, v in a.rates_for(tok).items()}
+            else:
+                rates = {p: int(v) for p, v in a.rates_for(None).items()}
+        if reason is None:
+            for p, spec, fi in network.in_port_specs[name]:
+                if rates[p] and int(state.fifos[fi].occ) < spec.rate:
+                    reason = (f"starved on empty channel {spec.name!r} "
+                              f"(occupancy {int(state.fifos[fi].occ)}, "
+                              f"needs {spec.rate})")
+                    break
+        if reason is None:
+            for p, spec, fi in network.out_port_specs[name]:
+                o = int(state.fifos[fi].occ)
+                if rates[p] and o + spec.rate > spec.writable_occupancy_bound:
+                    reason = (f"blocked on full channel {spec.name!r} "
+                              f"(occupancy {o} / bound "
+                              f"{spec.writable_occupancy_bound})")
+                    break
+        if reason is None:
+            runnable.append(name)
+        else:
+            blocked.append((name, reason))
+    return StallReport(runnable=tuple(runnable), blocked=tuple(blocked),
+                       occupancy=occupancy)

@@ -77,6 +77,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.executor import (_MAX_FIRINGS_PER_VISIT, RuntimeMode,
                                  _is_concrete, assert_mode_allows)
 from repro.core.fifo import FifoSpec, FifoState
+from repro.core.health import (HealthState, init_health, read_guard_bits,
+                               true_occupancy, write_guard_bits)
 from repro.core.megakernel.lower import (CURSOR_FIELDS, FiringRow,
                                          GridPartition, MegakernelLayout,
                                          lower_network, partition_layout)
@@ -209,6 +211,51 @@ def _chan_write_masked(store: _ChannelStore, wins, curs, fi: int,
             ring[pl.ds(0, 1)] = slot0[None]
     curs = _cur_advance(curs, slot, wr=e, occ=e * spec.rate)
     return wins, curs
+
+
+# --------------------------------------------------------------------------- #
+# Guarded channel ops — the health layer's in-kernel fault flags.  Each
+# wrapper snapshots the pre-op cursors, runs the UNCHANGED unguarded op,
+# and ORs the fault bits into the loop-carried HealthState: guards observe
+# channel traffic, they never alter it, so a guarded clean run's ring
+# bytes / cursors / states stay bit-identical to the unguarded kernel.
+# The `_chan_*` ops above keep their signatures (pinned against the queue
+# oracle by tests/test_megakernel_ring.py).
+# --------------------------------------------------------------------------- #
+def _chan_read_guarded(store: _ChannelStore, wins, curs, fi: int,
+                       hlth: HealthState):
+    spec = store.specs[fi]
+    slot = store.cursor_slot[fi]
+    rd, wr, occ = (_cur(curs, slot, _RD), _cur(curs, slot, _WR),
+                   _cur(curs, slot, _OCC))
+    window, curs = _chan_read(store, wins, curs, fi)
+    bits = read_guard_bits(spec, rd, wr, occ, jnp.bool_(True), window)
+    return window, curs, hlth.record(fi, bits)
+
+
+def _chan_read_masked_guarded(store: _ChannelStore, wins, curs, fi: int,
+                              enabled: jax.Array, hlth: HealthState):
+    spec = store.specs[fi]
+    slot = store.cursor_slot[fi]
+    rd, wr, occ = (_cur(curs, slot, _RD), _cur(curs, slot, _WR),
+                   _cur(curs, slot, _OCC))
+    window, curs = _chan_read_masked(store, wins, curs, fi, enabled)
+    bits = read_guard_bits(spec, rd, wr, occ, enabled, window)
+    return window, curs, hlth.record(fi, bits)
+
+
+def _chan_write_masked_guarded(store: _ChannelStore, wins, curs, fi: int,
+                               tokens: jax.Array, enabled: jax.Array,
+                               hlth: HealthState):
+    spec = store.specs[fi]
+    slot = store.cursor_slot[fi]
+    rd, wr, occ = (_cur(curs, slot, _RD), _cur(curs, slot, _WR),
+                   _cur(curs, slot, _OCC))
+    wins, curs = _chan_write_masked(store, wins, curs, fi, tokens, enabled)
+    bits = write_guard_bits(spec, rd, wr, occ, enabled, tokens)
+    e = enabled.astype(jnp.int32)
+    occ_after = true_occupancy(spec, rd, wr) + e * spec.rate
+    return wins, curs, hlth.record(fi, bits).mark_high_water(fi, occ_after)
 
 
 # --------------------------------------------------------------------------- #
@@ -390,25 +437,35 @@ def _max_fireable(layout: MegakernelLayout, row: FiringRow,
 def _fire(network: Network, layout: MegakernelLayout, row: FiringRow,
           fns: _ActorFns, consts: List[jax.Array], store: _ChannelStore,
           wins: Tuple[jax.Array, ...], curs: Tuple[jax.Array, ...],
-          actors: Tuple[Any, ...]
+          actors: Tuple[Any, ...], hlth: Optional[HealthState] = None
           ) -> Tuple[Tuple[jax.Array, ...], Tuple[jax.Array, ...],
-                     Tuple[Any, ...]]:
+                     Tuple[Any, ...], Optional[HealthState]]:
     """One firing against the channel store — mirrors
     ``executor.fire_actor``'s masked (phase=None) path step for step:
     control consume, rates, masked input reads, predicated body, masked
-    output writes."""
+    output writes.  With ``hlth`` (guards on) every channel op routes
+    through its ``_guarded`` wrapper, accumulating fault bits and
+    high-water marks; ``hlth=None`` traces the exact pre-health ops."""
     a = network.actors[row.name]
 
     ctrl_tok = None
     if row.control is not None:
-        ctok, curs = _chan_read(store, wins, curs, row.control)
+        if hlth is None:
+            ctok, curs = _chan_read(store, wins, curs, row.control)
+        else:
+            ctok, curs, hlth = _chan_read_guarded(store, wins, curs,
+                                                  row.control, hlth)
         ctrl_tok = ctok[0]
     rates = _rates_for(a, fns, consts, ctrl_tok)
 
     windows: Dict[str, jax.Array] = {}
     for pb in row.inputs:
-        windows[pb.port], curs = _chan_read_masked(
-            store, wins, curs, pb.fifo, rates[pb.port] > 0)
+        if hlth is None:
+            windows[pb.port], curs = _chan_read_masked(
+                store, wins, curs, pb.fifo, rates[pb.port] > 0)
+        else:
+            windows[pb.port], curs, hlth = _chan_read_masked_guarded(
+                store, wins, curs, pb.fifo, rates[pb.port] > 0, hlth)
 
     enabled_list = [rates[p] for p in (*a.in_ports, *a.out_ports)]
     concrete_on = any(_is_concrete(e) and int(e) > 0 for e in enabled_list)
@@ -450,12 +507,17 @@ def _fire(network: Network, layout: MegakernelLayout, row: FiringRow,
         new_actor_state, outputs = run_body((actors[row.index], windows))
 
     for pb in row.outputs:
-        wins, curs = _chan_write_masked(
-            store, wins, curs, pb.fifo, outputs[pb.port],
-            rates[pb.port] > 0)
+        if hlth is None:
+            wins, curs = _chan_write_masked(
+                store, wins, curs, pb.fifo, outputs[pb.port],
+                rates[pb.port] > 0)
+        else:
+            wins, curs, hlth = _chan_write_masked_guarded(
+                store, wins, curs, pb.fifo, outputs[pb.port],
+                rates[pb.port] > 0, hlth)
 
     actors = actors[:row.index] + (new_actor_state,) + actors[row.index + 1:]
-    return wins, curs, actors
+    return wins, curs, actors, hlth
 
 
 # --------------------------------------------------------------------------- #
@@ -468,7 +530,8 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
                   multi_firing: bool, max_sweeps: int,
                   partition: GridPartition,
                   fwd_list: Tuple[int, ...],
-                  buffered: Tuple[int, ...]) -> Callable:
+                  buffered: Tuple[int, ...],
+                  guards: bool = False) -> Callable:
     n_fifos = len(layout.fifo_specs)
     n_actors = len(network.actors)
     n_leaves = len(scalar_leaf)
@@ -503,7 +566,14 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         leaf_out = refs[o + n_fifos + 1:o + n_fifos + 1 + n_leaves]
         counts_ref = refs[o + n_fifos + 1 + n_leaves]
         sweeps_ref = refs[o + n_fifos + 2 + n_leaves]
-        rings = refs[o + n_fifos + 3 + n_leaves:]
+        flags_ref = refs[o + n_fifos + 3 + n_leaves]
+        if guards:
+            fault_ref = refs[o + n_fifos + 4 + n_leaves]
+            hw_ref = refs[o + n_fifos + 5 + n_leaves]
+            extra = 6
+        else:
+            extra = 4
+        rings = refs[o + n_fifos + extra + n_leaves:]
         assert len(rings) == n_bufs
 
         # 1. Stage the buffered Eq. 1 rings into device scratch; read the
@@ -540,20 +610,21 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         # 2. Device-resident sweep loop (mirrors executor._compile_dynamic:
         #    same visit order, same per-visit multi-firing bound, same
         #    quiescence condition, same sweep accounting).
-        def attempt(row, wins, curs, actors, counts):
+        def attempt(row, wins, curs, actors, counts, hlth):
             ready = _can_fire(network, layout, row, fns[row.name], consts,
                               store, wins, curs, actors)
 
             def do(c):
-                wins, curs, actors, counts = c
-                wins, curs, actors = _fire(network, layout, row,
-                                           fns[row.name], consts, store,
-                                           wins, curs, actors)
-                return wins, curs, actors, counts.at[row.index].add(1)
+                wins, curs, actors, counts, hlth = c
+                wins, curs, actors, hlth = _fire(network, layout, row,
+                                                 fns[row.name], consts,
+                                                 store, wins, curs, actors,
+                                                 hlth)
+                return wins, curs, actors, counts.at[row.index].add(1), hlth
 
-            wins, curs, actors, counts = jax.lax.cond(
-                ready, do, lambda c: c, (wins, curs, actors, counts))
-            return wins, curs, actors, counts, ready
+            wins, curs, actors, counts, hlth = jax.lax.cond(
+                ready, do, lambda c: c, (wins, curs, actors, counts, hlth))
+            return wins, curs, actors, counts, hlth, ready
 
         # The grid-parallel sweep (paper §3.3 actor-to-core mapping): each
         # core runs its own occupancy-bounded firing loop over its
@@ -571,7 +642,7 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         # determinism keeps invisible in the final state.  Quiescence is
         # global: the sweep ends when ALL partitions report no progress.
         def sweep(carry):
-            wins, curs, actors, counts, _, sweeps = carry
+            wins, curs, actors, counts, hlth, _, sweeps = carry
             core_progress = []
             for rows_ix in partition.core_rows:
                 core_fired = jnp.bool_(False)
@@ -581,35 +652,37 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
                         k = _max_fireable(layout, row, store, curs)
 
                         def body(_, c, row=row):
-                            wins, curs, actors, counts, fired = c
-                            wins, curs, actors, counts, ready = attempt(
-                                row, wins, curs, actors, counts)
-                            return (wins, curs, actors, counts,
+                            wins, curs, actors, counts, hlth, fired = c
+                            wins, curs, actors, counts, hlth, ready = \
+                                attempt(row, wins, curs, actors, counts,
+                                        hlth)
+                            return (wins, curs, actors, counts, hlth,
                                     jnp.logical_or(fired, ready))
 
-                        wins, curs, actors, counts, fired = \
+                        wins, curs, actors, counts, hlth, fired = \
                             jax.lax.fori_loop(
                                 0, k, body,
-                                (wins, curs, actors, counts,
+                                (wins, curs, actors, counts, hlth,
                                  jnp.bool_(False)))
                     else:
-                        wins, curs, actors, counts, fired = attempt(
-                            row, wins, curs, actors, counts)
+                        wins, curs, actors, counts, hlth, fired = attempt(
+                            row, wins, curs, actors, counts, hlth)
                     core_fired = jnp.logical_or(core_fired, fired)
                 core_progress.append(core_fired)
             fired_any = functools.reduce(jnp.logical_or, core_progress,
                                          jnp.bool_(False))
-            return wins, curs, actors, counts, fired_any, sweeps + 1
+            return wins, curs, actors, counts, hlth, fired_any, sweeps + 1
 
         def cond(carry):
-            _, _, _, _, fired_any, sweeps = carry
+            _, _, _, _, _, fired_any, sweeps = carry
             return jnp.logical_and(fired_any, sweeps < max_sweeps)
 
+        hlth0 = init_health(n_fifos) if guards else None
         carry = (wins0, curs0, actors0,
-                 jnp.zeros((n_actors,), jnp.int32),
+                 jnp.zeros((n_actors,), jnp.int32), hlth0,
                  jnp.bool_(True), jnp.int32(0))
-        wins, curs, actors, counts, _, sweeps = jax.lax.while_loop(
-            cond, sweep, carry)
+        wins, curs, actors, counts, hlth, fired_any, sweeps = \
+            jax.lax.while_loop(cond, sweep, carry)
 
         # 3. Copy the buffered rings back out of scratch and the carried
         #    windows of forwarded channels into their buffer outputs;
@@ -633,6 +706,15 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
                                 else leaves[j])
         counts_ref[...] = counts
         sweeps_ref[0] = sweeps
+        # Run-level STALL forensics feed: the loop left through the sweep
+        # budget with work remaining (fired_any still set), not
+        # quiescence.  Emitted unconditionally so even guards-off runs
+        # can warn instead of silently returning partial state.
+        stalled = jnp.logical_and(fired_any, sweeps >= max_sweeps)
+        flags_ref[0] = stalled.astype(jnp.int32)
+        if guards:
+            fault_ref[...] = hlth.fault
+            hw_ref[...] = hlth.high_water
 
     return kernel
 
@@ -640,6 +722,25 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
 # --------------------------------------------------------------------------- #
 # Public entrypoint.
 # --------------------------------------------------------------------------- #
+class _MegaResult(tuple):
+    """``(final_state, fire_counts, n_sweeps)`` — the megakernel runner's
+    historical 3-tuple — extended with the health layer's host-visible
+    record as attributes so existing ``s, c, sw = runner(state)`` unpacks
+    keep working unchanged.
+
+    ``stalled``  bool jax scalar: sweep loop exited via the ``max_sweeps``
+                 budget with work remaining (always computed).
+    ``health``   :class:`repro.core.health.HealthState` fault / high-water
+                 vectors when compiled with ``guards=True``, else None.
+    """
+
+    def __new__(cls, state, counts, sweeps, stalled, health):
+        self = tuple.__new__(cls, (state, counts, sweeps))
+        self.stalled = stalled
+        self.health = health
+        return self
+
+
 def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                        mode: RuntimeMode = RuntimeMode.PROPOSED,
                        multi_firing: bool = True,
@@ -649,13 +750,22 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                        assign: Optional[Dict[str, int]] = None,
                        partition: Optional[GridPartition] = None,
                        cut_objective: str = "crossing",
-                       forward_transients: bool = True) -> Callable:
+                       forward_transients: bool = True,
+                       guards: bool = False) -> Callable:
     """Compile the network into one persistent Pallas kernel.
 
     Returns ``runner(state) -> (final_state, fire_counts, n_sweeps)`` with
     the exact signature and bit-exact results of the token-driven dynamic
     executor (``executor._compile_dynamic(..., return_sweeps=True)``) —
     modulo the forwarded-channel dead-slot carve-out (module docstring).
+    The result is a :class:`_MegaResult`: the same 3-tuple, plus
+    ``.stalled`` (sweep-budget exit) and ``.health`` (the in-kernel fault
+    flags and high-water marks when ``guards=True``, else None).
+    ``guards=True`` arms the per-channel overflow / underflow / cursor /
+    non-finite guards inside the kernel's sweep loop; guards observe the
+    channel ops without changing them, so clean guarded runs stay
+    bit-identical, and ``guards=False`` traces the exact pre-health
+    kernel (the health slot is the empty pytree ``None``).
 
     ``interpret=None`` auto-selects Pallas interpret mode on non-TPU
     backends (the tier-1 CPU fallback); pass an explicit bool to force
@@ -719,15 +829,19 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
 
         kernel = _build_kernel(network, layout, fns, treedef, scalar_leaf,
                                scalar_const, multi_firing, max_sweeps,
-                               partition, fwd_list, buffered)
+                               partition, fwd_list, buffered, guards)
         out_shape = (
             [jax.ShapeDtypeStruct(f.buf.shape, f.buf.dtype)
              for f in state.fifos]
             + [jax.ShapeDtypeStruct((n_fifos, 3), jnp.int32)]
             + [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in kernel_leaves]
             + [jax.ShapeDtypeStruct((n_actors,), jnp.int32),
-               jax.ShapeDtypeStruct((1,), jnp.int32)]
+               jax.ShapeDtypeStruct((1,), jnp.int32),
+               jax.ShapeDtypeStruct((1,), jnp.int32)]   # stall flag
         )
+        if guards:
+            out_shape += [jax.ShapeDtypeStruct((n_fifos,), jnp.int32),
+                          jax.ShapeDtypeStruct((n_fifos,), jnp.int32)]
         scratch_shapes = [
             pltpu.VMEM(layout.scratch_shape(i), layout.fifo_specs[i].dtype)
             for i in buffered
@@ -742,8 +856,13 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
         bufs_o = outs[:n_fifos]
         cur_o = outs[n_fifos]
         leaves_o = outs[n_fifos + 1:n_fifos + 1 + len(kernel_leaves)]
-        counts_vec = outs[-2]
-        sweeps = outs[-1][0]
+        base = n_fifos + 1 + len(kernel_leaves)
+        counts_vec = outs[base]
+        sweeps = outs[base + 1][0]
+        stalled = outs[base + 2][0] != 0
+        health = (HealthState(fault=outs[base + 3],
+                              high_water=outs[base + 4])
+                  if guards else None)
         leaves_o = [l.reshape(()) if s else l
                     for l, s in zip(leaves_o, scalar_leaf)]
         actors = tuple(jax.tree.unflatten(treedef, leaves_o))
@@ -755,7 +874,7 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                              fifo_names=state.fifo_names,
                              actor_names=state.actor_names)
         counts = {nm: counts_vec[i] for i, nm in enumerate(actor_names)}
-        return final, counts, sweeps
+        return final, counts, sweeps, stalled, health
 
     jitted = jax.jit(run)
 
@@ -778,7 +897,7 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                         "(start from Network.init_state, or compile with "
                         "ExecutionPlan(specialize=False) to keep every "
                         "ring in scratch)")
-        return jitted(state)
+        return _MegaResult(*jitted(state))
 
     # Exposed for Program.stats: the hoisted closure arrays are kernel
     # operands living in HBM alongside the state pytree, and the grid

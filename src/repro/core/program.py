@@ -30,7 +30,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 import functools
-from typing import Any, Dict, Mapping, Optional, Tuple, Union
+import warnings
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,7 @@ import jax.numpy as jnp
 from repro.core.executor import (RuntimeMode, _compile_dynamic,
                                  _compile_static, _run_interpreted,
                                  collect_sink)
+from repro.core.health import (Diagnostics, NetworkFaultError, decode_health)
 from repro.core.mapping import heterogeneous_split
 from repro.core.network import (Network, NetworkState, iteration_token_flops)
 from repro.core.schedule import phase_unroll_period
@@ -165,6 +167,17 @@ class ExecutionPlan:
                      plan executes the accelerator subnetwork, with
                      boundary channels exposed as feed/fetch actors and
                      :meth:`Program.stream` as the host transfer loop.
+      guards:        dynamic/megakernel modes: arm the runtime health
+                     layer's per-channel fault guards (overflow /
+                     underflow / cursor consistency / non-finite tokens —
+                     :mod:`repro.core.health`).  Faulting runs raise
+                     :class:`repro.core.health.NetworkFaultError` naming
+                     the offending channel and actors, and every
+                     ``RunResult.diagnostics`` carries the decoded fault
+                     and high-water record.  Off by default: guards-off
+                     kernels are bit-identical to the pre-health runtime,
+                     and clean guarded runs stay bit-identical too (the
+                     guards observe channel ops, they never change them).
     """
 
     mode: Union[str, Mode] = "static"
@@ -182,6 +195,7 @@ class ExecutionPlan:
     assign: Optional[Mapping[str, int]] = None
     cut_objective: str = "crossing"
     accelerated: Optional[Tuple[str, ...]] = None
+    guards: bool = False
 
     def __post_init__(self) -> None:
         if isinstance(self.mode, Mode):
@@ -214,6 +228,14 @@ class ExecutionPlan:
                 "backend; the host executors have no core axis (use "
                 "mode=Mode.MEGAKERNEL, or accelerated=[...] for "
                 "host/accelerator placement)")
+        if self.guards and self.mode not in ("dynamic", "megakernel"):
+            raise ValueError(
+                f"ExecutionPlan(mode={self.mode!r}): guards=True is a "
+                "sweep-loop health knob of the dynamic and megakernel "
+                "backends; the static specializer register-allocates its "
+                "channels away and the interpreter fires eagerly, so "
+                "neither has the per-channel cursor state the guards "
+                "watch")
         if not (isinstance(self.donate, bool) or self.donate == "auto"):
             raise ValueError(
                 f"ExecutionPlan.donate must be True, False or 'auto', got "
@@ -251,12 +273,18 @@ class RunResult:
 
     ``state`` is the final :class:`NetworkState` (bit-identical to the
     legacy entrypoints' output for the same plan).  ``fire_counts`` /
-    ``sweeps`` are populated by dynamic mode only.
+    ``sweeps`` are populated by dynamic mode only.  ``diagnostics`` is
+    the decoded :class:`repro.core.health.Diagnostics` of dynamic /
+    megakernel runs — with guards off it still carries the ``stalled``
+    flag (the sweep loop left through its budget, not quiescence); with
+    ``ExecutionPlan(guards=True)`` it adds per-channel fault words and
+    high-water occupancy marks.
     """
 
     state: NetworkState
     fire_counts: Optional[Dict[str, jax.Array]] = None
     sweeps: Optional[jax.Array] = None
+    diagnostics: Optional[Diagnostics] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -333,6 +361,9 @@ class Program:
         self.source_network = network
         self._last: Optional[RunResult] = None
         self._last_is_stream_chunk = False
+        #: Per-chunk fault/recovery log of the last :meth:`stream` call
+        #: (entries only for chunks that needed the on_fault policy).
+        self.last_stream_report: List[Dict[str, Any]] = []
         self._feed_by_fifo: Dict[str, str] = {}
         self._fetch_by_fifo: Dict[str, str] = {}
         if plan.accelerated is not None:
@@ -390,14 +421,14 @@ class Program:
             return _compile_dynamic(
                 self.network, plan.max_sweeps, mode=plan.runtime_mode,
                 multi_firing=plan.multi_firing, donate=donate,
-                return_sweeps=True)
+                return_sweeps=True, guards=plan.guards)
         if plan.mode == "megakernel":
             from repro.core.megakernel import compile_megakernel
             return compile_megakernel(
                 self.network, max_sweeps=plan.max_sweeps,
                 mode=plan.runtime_mode, multi_firing=plan.multi_firing,
                 interpret=plan.interpret, layout=self._layout,
-                partition=self._partition)
+                partition=self._partition, guards=plan.guards)
         return functools.partial(
             _run_interpreted, self.network,
             n_iterations=plan.n_iterations, order=order, donate=donate)
@@ -466,10 +497,37 @@ class Program:
             donate_now = self.plan.donate is True
         runner = self._runners[donate_now]
         if self.plan.mode in ("dynamic", "megakernel"):
-            final, counts, sweeps = runner(st)
-            result = RunResult(final, fire_counts=counts, sweeps=sweeps)
-        else:  # static and interpreted runners both return the bare state
-            result = RunResult(runner(st))
+            if self.plan.mode == "dynamic":
+                final, counts, sweeps, stalled, health = runner(st)
+            else:
+                res = runner(st)     # _MegaResult: 3-tuple + attributes
+                final, counts, sweeps = res
+                stalled, health = res.stalled, res.health
+            # One scalar host sync; a stalled exit then pays the eager
+            # per-actor forensics, the path where latency is moot.
+            stalled_b = bool(stalled)
+            diag = decode_health(self.network, health, stalled_b,
+                                 final if stalled_b else None)
+            result = RunResult(final, fire_counts=counts, sweeps=sweeps,
+                               diagnostics=diag)
+            self._last = result
+            self._last_is_stream_chunk = False
+            if not diag.ok:
+                if self.plan.guards:
+                    err = NetworkFaultError(diag)
+                    err.result = result
+                    raise err
+                if stalled_b:
+                    # Guards off: surface the exhaustion (satellite fix for
+                    # the silent max_sweeps return) without changing the
+                    # no-raise contract of unguarded plans.
+                    warnings.warn(
+                        f"Program.run: sweep budget "
+                        f"(max_sweeps={self.plan.max_sweeps}) exhausted "
+                        f"with work remaining — partial state returned; "
+                        f"{diag.summary()}", RuntimeWarning, stacklevel=2)
+            return result
+        result = RunResult(runner(st))  # static/interpreted: bare state
         self._last = result
         self._last_is_stream_chunk = False
         return result
@@ -496,7 +554,8 @@ class Program:
     def _set_actor(self, state: NetworkState, actor: str, value: Any) -> NetworkState:
         return state.replace_actor(self.network.actor_index[actor], value)
 
-    def stream(self, feeds: Mapping[str, Any]) -> Dict[str, jax.Array]:
+    def stream(self, feeds: Mapping[str, Any], on_fault: str = "raise",
+               max_retries: int = 2) -> Dict[str, jax.Array]:
         """Stream host data through the accelerated subnetwork in chunks.
 
         ``feeds`` maps each *inbound boundary channel* name to its full
@@ -508,6 +567,27 @@ class Program:
         (e.g. filter histories, delay tokens) carries across chunks —
         streaming N chunks equals one long run over the concatenation.
 
+        The loop checkpoints the :class:`NetworkState` before each chunk;
+        ``on_fault`` decides what a :class:`NetworkFaultError` from a
+        guarded run (``ExecutionPlan(guards=True)``) does:
+
+          * ``"raise"`` (default): re-raise, augmented with the chunk
+            index — the stream dies but the error names chunk, channel
+            and actors.
+          * ``"resume"``: re-stage the chunk from the checkpoint and
+            retry up to ``max_retries`` times, then raise.  Retries are
+            meaningful for *nondeterministic* faults (flaky hardware, a
+            poisoned transient the caller repairs out of band) — a
+            deterministic fault fails identically each attempt.
+          * ``"skip"``: restore the checkpoint, emit all-zero windows for
+            the chunk's fetch slabs, and continue with the next chunk —
+            the degraded-service mode of a serving loop.
+
+        Chunks needing the policy are logged in ``last_stream_report``
+        (dicts of chunk / attempts / action / fault).  Unguarded plans
+        never raise ``NetworkFaultError``, so the policy only engages
+        under ``guards=True``.
+
         Returns ``{outbound_channel: (total_windows, r, *token_shape)}``.
         """
         if self.plan.accelerated is None:
@@ -515,6 +595,15 @@ class Program:
                 "Program.stream: this plan has no heterogeneous placement; "
                 "pass ExecutionPlan(accelerated=[...], n_iterations=chunk) "
                 "so boundary channels become host feed/fetch actors")
+        if on_fault not in ("raise", "resume", "skip"):
+            raise ValueError(
+                f"Program.stream: on_fault must be 'raise', 'resume' or "
+                f"'skip', got {on_fault!r}")
+        if not isinstance(max_retries, int) or isinstance(max_retries, bool) \
+                or max_retries < 0:
+            raise ValueError(
+                f"Program.stream: max_retries must be an int >= 0, got "
+                f"{max_retries!r}")
         chunk = self.plan.n_iterations
         if self.plan.mode == "static" and self.plan.specialize:
             # The specialized static executor requires phase-aligned input
@@ -549,18 +638,34 @@ class Program:
         total = None
         for fifo, arr in feeds.items():
             spec = self.source_network.fifos[fifo]
-            arr = jnp.asarray(arr, spec.dtype)
+            feed_actor = self._feed_by_fifo[fifo]
+            raw = jnp.asarray(arr)
+            # Real-to-real casts (int windows into a float channel, float
+            # probes into a uint8 frame channel) are long-standing host
+            # conveniences; complex data into a real channel silently
+            # drops the imaginary half, which is always a wrong feed wired
+            # to the right name — reject that one here with the actor
+            # named instead of staging garbage.
+            if (jnp.issubdtype(raw.dtype, jnp.complexfloating)
+                    and not jnp.issubdtype(jnp.dtype(spec.dtype),
+                                           jnp.complexfloating)):
+                raise ValueError(
+                    f"Program.stream: feed {fifo!r} (staged into actor "
+                    f"{feed_actor!r}) carries dtype {raw.dtype}, but the "
+                    f"channel expects {jnp.dtype(spec.dtype)}; cast the "
+                    "stream explicitly if the conversion is intended")
+            arr = raw.astype(spec.dtype)
             window = (spec.rate,) + tuple(spec.token_shape)
             if arr.shape[1:] != window:
-                if arr.shape[0] % spec.rate == 0 \
+                if arr.ndim >= 1 and arr.shape[0] % spec.rate == 0 \
                         and arr.shape[1:] == tuple(spec.token_shape):
                     arr = arr.reshape((-1,) + window)
                 else:
                     raise ValueError(
-                        f"Program.stream: feed {fifo!r} has shape "
-                        f"{arr.shape}; expected (n, {spec.rate}, "
-                        f"*{tuple(spec.token_shape)}) windows or the "
-                        "flattened token stream")
+                        f"Program.stream: feed {fifo!r} (staged into actor "
+                        f"{feed_actor!r}) has shape {arr.shape}; expected "
+                        f"(n, {spec.rate}, *{tuple(spec.token_shape)}) "
+                        "windows or the flattened token stream")
             if total is None:
                 total = arr.shape[0]
             elif arr.shape[0] != total:
@@ -578,22 +683,64 @@ class Program:
                 "a dividing chunk size")
         state = self.init_state()
         outs: Dict[str, list] = {f: [] for f in self._fetch_by_fifo}
-        for c in range(total // chunk):
-            for fifo, arr in arrays.items():
-                state = self._set_actor(state, self._feed_by_fifo[fifo],
-                                        (arr[c * chunk:(c + 1) * chunk],
-                                         jnp.int32(0)))
-            for fifo, fetch in self._fetch_by_fifo.items():
-                slab, _ = state.actor(fetch)
-                state = self._set_actor(state, fetch,
-                                        (jnp.zeros_like(slab), jnp.int32(0)))
-            state = self.run(state).state
-            # Guard collect() immediately (not after the loop): the implicit
-            # last state holds only this chunk's fetch slabs, not the whole
-            # stream — and must stay guarded if a later chunk raises.
-            self._last_is_stream_chunk = True
-            for fifo, fetch in self._fetch_by_fifo.items():
-                outs[fifo].append(state.actor(fetch)[0])
+        report: List[Dict[str, Any]] = []
+        self.last_stream_report = report
+        retrying = on_fault in ("resume", "skip")
+        n_chunks = total // chunk
+        for c in range(n_chunks):
+            # The per-chunk checkpoint: the last good NetworkState, before
+            # this chunk's feeds are staged.  Restoring it re-runs (or
+            # skips) the chunk with actor/FIFO history intact.
+            checkpoint = state
+            attempts = 0
+            while True:
+                base = checkpoint
+                if retrying and self.plan.donate is True:
+                    # An explicit-donate run consumes its input buffers —
+                    # which the staged state shares with the checkpoint —
+                    # so every retryable attempt donates a private copy.
+                    base = jax.tree.map(jnp.copy, checkpoint)
+                for fifo, arr in arrays.items():
+                    base = self._set_actor(base, self._feed_by_fifo[fifo],
+                                           (arr[c * chunk:(c + 1) * chunk],
+                                            jnp.int32(0)))
+                for fifo, fetch in self._fetch_by_fifo.items():
+                    slab, _ = base.actor(fetch)
+                    base = self._set_actor(base, fetch,
+                                           (jnp.zeros_like(slab),
+                                            jnp.int32(0)))
+                attempts += 1
+                try:
+                    state = self.run(base).state
+                    # Guard collect() immediately (not after the loop): the
+                    # implicit last state holds only this chunk's fetch
+                    # slabs, not the whole stream — and must stay guarded
+                    # if a later chunk raises.
+                    self._last_is_stream_chunk = True
+                    if attempts > 1:
+                        report.append({"chunk": c, "attempts": attempts,
+                                       "action": "recovered", "fault": None})
+                    for fifo, fetch in self._fetch_by_fifo.items():
+                        outs[fifo].append(state.actor(fetch)[0])
+                    break
+                except NetworkFaultError as err:
+                    self._last_is_stream_chunk = True
+                    if on_fault == "resume" and attempts <= max_retries:
+                        continue
+                    if on_fault == "skip":
+                        report.append({"chunk": c, "attempts": attempts,
+                                       "action": "skip", "fault": str(err)})
+                        state = checkpoint
+                        for fifo, fetch in self._fetch_by_fifo.items():
+                            outs[fifo].append(
+                                jnp.zeros_like(state.actor(fetch)[0]))
+                        break
+                    report.append({"chunk": c, "attempts": attempts,
+                                   "action": "raise", "fault": str(err)})
+                    err.args = (f"Program.stream: chunk {c} of {n_chunks} "
+                                f"failed after {attempts} attempt(s): "
+                                f"{err.args[0]}",)
+                    raise
         return {f: jnp.concatenate(ws, axis=0) for f, ws in outs.items()}
 
     # ------------------------------------------------------------------ #

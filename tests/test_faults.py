@@ -1,0 +1,311 @@
+"""Chaos suite: every injected fault class is caught and named on every
+backend, and the health layer costs nothing it shouldn't.
+
+Backends: host dynamic executor / single-core megakernel / grid megakernel
+(k in {2, 4}).  Fault classes: overflow, underflow, cursor corruption,
+non-finite tokens (``repro.core.faultinject``), stall (sweep-budget
+exhaustion).  Megakernel plans run ``specialize=False`` so every channel
+keeps a scratch ring — fault injection targets ring-resident cursors, and
+forwarded channels reject non-drained entry states by design.
+
+The flip side is pinned too: guards-on and guards-off runs of *clean*
+graphs are bit-identical in states, cursors, fire counts and sweeps —
+the guards observe channel operations, they never change them.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ExecutionPlan, NetworkBuilder, NetworkFaultError,
+                        corrupt_cursor, inject_overflow, inject_underflow,
+                        map_fire, poison_tokens, static_actor, truncate_feed)
+from repro.core.health import (CURSOR_INVALID, NONFINITE, OVERFLOW,
+                               UNDERFLOW, fault_names)
+from repro.graphs.factories import make_dpd, states_identical
+
+BACKENDS = ("dynamic", "megakernel", "grid2", "grid4")
+
+
+def _plan(backend, **kw):
+    if backend == "dynamic":
+        return ExecutionPlan(mode="dynamic", **kw)
+    cores = {"megakernel": 1, "grid2": 2, "grid4": 4}[backend]
+    return ExecutionPlan(mode="megakernel", specialize=False, cores=cores,
+                        **kw)
+
+
+@pytest.fixture(scope="module")
+def dpd():
+    net, _ = make_dpd(n_firings=6, block_l=64)
+    return net
+
+
+# --------------------------------------------------------------------------- #
+# Clean runs: guards change nothing.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_clean_guarded_run_bit_identical(dpd, backend):
+    off = dpd.compile(_plan(backend)).run()
+    on = dpd.compile(_plan(backend, guards=True)).run()
+    assert states_identical(off.state, on.state)
+    assert int(off.sweeps) == int(on.sweeps)
+    assert {k: int(v) for k, v in off.fire_counts.items()} \
+        == {k: int(v) for k, v in on.fire_counts.items()}
+    assert on.diagnostics.ok and not on.diagnostics.stalled
+    assert not on.diagnostics.faults
+    # guards-off still decodes the stall flag, but collects no health
+    assert off.diagnostics is not None and not off.diagnostics.stalled
+    assert off.diagnostics.high_water == {}
+
+
+def test_clean_high_water_marks_within_bounds(dpd):
+    on = dpd.compile(_plan("dynamic", guards=True)).run()
+    hw = on.diagnostics.high_water
+    assert set(hw) == set(dpd.fifos)
+    for name, spec in dpd.fifos.items():
+        assert 0 < hw[name] <= spec.writable_occupancy_bound, name
+
+
+# --------------------------------------------------------------------------- #
+# Injected faults: detected and *named* on every backend.
+# --------------------------------------------------------------------------- #
+FAULTS = {
+    "overflow": (inject_overflow, OVERFLOW),
+    "underflow": (inject_underflow, UNDERFLOW),
+    "cursor": (lambda net, st, fifo: corrupt_cursor(net, st, fifo, occ=1),
+               CURSOR_INVALID),
+    "nonfinite": (poison_tokens, NONFINITE),
+}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fault", sorted(FAULTS))
+def test_injected_fault_detected_and_named(dpd, backend, fault):
+    inject, expect_bit = FAULTS[fault]
+    prog = dpd.compile(_plan(backend, guards=True))
+    bad = inject(dpd, dpd.init_state(), "f_in")
+    with pytest.raises(NetworkFaultError) as exc:
+        prog.run(bad)
+    diag = exc.value.diagnostics
+    hit = {f.fifo: f for f in diag.faults}
+    assert "f_in" in hit, diag.summary()
+    f = hit["f_in"]
+    assert set(fault_names(expect_bit)) <= set(f.faults)
+    # the error names the channel end to end
+    assert f.src_actor == "source" and f.dst_actor == "fork"
+    assert "f_in" in str(exc.value)
+    # the partial result still rides on the error for forensics
+    assert exc.value.result.state is not None
+
+
+def test_poison_is_pure_nonfinite(dpd):
+    """Consistent-cursor poison must trip ONLY the data guard — it
+    discriminates NONFINITE from the cursor guards."""
+    prog = dpd.compile(_plan("dynamic", guards=True))
+    bad = poison_tokens(dpd, dpd.init_state(), "f_in")
+    with pytest.raises(NetworkFaultError) as exc:
+        prog.run(bad)
+    for f in exc.value.diagnostics.faults:
+        assert f.faults == ("NONFINITE",), f.describe()
+
+
+def test_faultinject_validates_targets(dpd):
+    st = dpd.init_state()
+    with pytest.raises(ValueError, match="unknown channel"):
+        inject_overflow(dpd, st, "nosuch")
+    with pytest.raises(ValueError, match="float channel"):
+        poison_tokens(dpd, st, "f_c_fork")     # int32 control channel
+
+
+# --------------------------------------------------------------------------- #
+# Stall: surfaced loudly, with forensics.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stall_guarded_raises_with_forensics(dpd, backend):
+    prog = dpd.compile(_plan(backend, guards=True, max_sweeps=1))
+    with pytest.raises(NetworkFaultError, match="STALL") as exc:
+        prog.run()
+    diag = exc.value.diagnostics
+    assert diag.stalled and diag.stall is not None
+    # mid-flight exhaustion: the forensics name who could still run /
+    # who is blocked on what, plus the occupancy snapshot
+    assert diag.stall.runnable or diag.stall.blocked
+    assert set(diag.stall.occupancy) == set(dpd.fifos)
+
+
+@pytest.mark.parametrize("backend", ("dynamic", "megakernel"))
+def test_stall_unguarded_warns_not_silent(dpd, backend):
+    """Satellite fix: max_sweeps exhaustion was indistinguishable from
+    quiescence — now it's RunResult.diagnostics.stalled plus a warning."""
+    prog = dpd.compile(_plan(backend, max_sweeps=1))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        r = prog.run()
+    assert r.diagnostics.stalled
+    assert any("sweep budget" in str(w.message) for w in caught)
+    # and a full run does NOT warn
+    full = dpd.compile(_plan(backend))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        r = full.run()
+    assert not r.diagnostics.stalled and not caught
+
+
+def test_guards_rejected_on_sweepless_modes(dpd):
+    with pytest.raises(ValueError, match="guards"):
+        ExecutionPlan(mode="static", n_iterations=4, guards=True)
+    with pytest.raises(ValueError, match="guards"):
+        ExecutionPlan(mode="interpreted", n_iterations=4, guards=True)
+
+
+# --------------------------------------------------------------------------- #
+# Checkpointed streaming: on_fault policies + feed validation.
+# --------------------------------------------------------------------------- #
+def _stream_net():
+    b = NetworkBuilder()
+    b.actor(static_actor("src", (), ("out",),
+                         lambda st, ins, rates: (st, {"out": jnp.zeros((4, 8))})))
+    b.actor(static_actor("amp", ("in",), ("out",),
+                         map_fire(lambda w: 2.0 * w, "in", "out")))
+    b.actor(static_actor("sink", ("in",), (),
+                         lambda st, ins, rates: (st, {})))
+    b.connect("src.out", "amp.in", rate=4, token_shape=(8,), name="f_in")
+    b.connect("amp.out", "sink.in", rate=4, token_shape=(8,), name="f_out")
+    return b.build()
+
+
+@pytest.fixture(scope="module")
+def stream_setup():
+    net = _stream_net()
+    prog = net.compile(ExecutionPlan(mode="dynamic", n_iterations=2,
+                                     accelerated=("amp",), guards=True))
+    feeds = np.arange(6 * 4 * 8, dtype=np.float32).reshape(6, 4, 8)
+    poisoned = feeds.copy()
+    poisoned[3, 1, 2] = np.nan          # chunk 1 of 3 (windows 2..3)
+    return prog, feeds, poisoned
+
+
+def test_stream_clean_and_raise_policy(stream_setup):
+    prog, feeds, poisoned = stream_setup
+    outs = prog.stream({"f_in": feeds})
+    np.testing.assert_array_equal(np.asarray(outs["f_out"]), 2 * feeds)
+    assert prog.last_stream_report == []
+    with pytest.raises(NetworkFaultError, match="chunk 1 of 3") as exc:
+        prog.stream({"f_in": poisoned})
+    assert "f_in" in str(exc.value)
+
+
+def test_stream_skip_policy_degrades_gracefully(stream_setup):
+    prog, feeds, poisoned = stream_setup
+    outs = prog.stream({"f_in": poisoned}, on_fault="skip")
+    got = np.asarray(outs["f_out"])
+    np.testing.assert_array_equal(got[:2], 2 * feeds[:2])     # chunk 0 fine
+    assert np.all(got[2:4] == 0)                              # chunk 1 zeroed
+    np.testing.assert_array_equal(got[4:], 2 * feeds[4:])     # chunk 2 fine:
+    # the checkpoint restored pre-fault state, the stream continued
+    (entry,) = prog.last_stream_report
+    assert entry["chunk"] == 1 and entry["action"] == "skip"
+    assert "NONFINITE" in entry["fault"]
+
+
+def test_stream_resume_policy_bounded_retries(stream_setup):
+    prog, _, poisoned = stream_setup
+    with pytest.raises(NetworkFaultError, match=r"after 3 attempt"):
+        prog.stream({"f_in": poisoned}, on_fault="resume", max_retries=2)
+    with pytest.raises(ValueError, match="on_fault"):
+        prog.stream({"f_in": poisoned}, on_fault="retry")
+
+
+def test_stream_feed_validation_names_actor(stream_setup):
+    prog, feeds, _ = stream_setup
+    # dtype mismatch: named error instead of an XLA trace error
+    with pytest.raises(ValueError, match="__feed_f_in.*complex64"):
+        prog.stream({"f_in": feeds.astype(np.complex64)})
+    # widening host data still streams (int windows into a float channel)
+    ints = np.arange(6 * 4 * 8, dtype=np.int32).reshape(6, 4, 8)
+    outs = prog.stream({"f_in": ints})
+    np.testing.assert_array_equal(np.asarray(outs["f_out"]),
+                                  2.0 * ints.astype(np.float32))
+    # shape mismatch names the feed actor too
+    with pytest.raises(ValueError, match="__feed_f_in"):
+        prog.stream({"f_in": np.zeros((6, 3, 8), np.float32)})
+    # truncated capture: rejected before any chunk runs
+    with pytest.raises(ValueError, match="windows do not divide"):
+        prog.stream(truncate_feed({"f_in": feeds}, "f_in", drop=1))
+
+
+# --------------------------------------------------------------------------- #
+# Build-time bound proofs (PRUNE-style).
+# --------------------------------------------------------------------------- #
+def _gated_builder():
+    b = NetworkBuilder()
+    b.actor(static_actor("src", (), ("out",),
+                         lambda st, ins, rates: (st, {"out": jnp.zeros((2, 4))})))
+    b.actor(static_actor("ctl", (), ("c",),
+                         lambda st, ins, rates:
+                         (st, {"c": jnp.zeros((1, 1), jnp.int32)})))
+    from repro.core import dynamic_actor
+    b.actor(dynamic_actor(
+        "gate", "cp", lambda tok: {"in": (tok[0] > 0).astype(jnp.int32)},
+        ("in",), (), lambda st, ins, rates: (st, {})))
+    b.connect("src.out", "gate.in", rate=2, token_shape=(4,), name="f_data")
+    b.connect("ctl.c", "gate.cp", name="f_ctl")
+    return b
+
+
+def test_bounds_undecided_dynamic_port_passes():
+    b = _gated_builder()
+    rep = b.check_bounds()
+    verdicts = {c.fifo: c.verdict for c in rep.channels}
+    assert verdicts == {"f_data": "undecided", "f_ctl": "balanced"}
+    b.build(check_bounds=True)          # undecided is runtime's problem
+    assert b.bounds_report is not None
+
+
+def test_bounds_rejects_provably_unbounded_channel():
+    b = _gated_builder()
+    b.rate_bounds("gate.in", 0.25, 0.5)     # consumer ceiling < producer
+    with pytest.raises(ValueError, match="'f_data'.*unbounded") as exc:
+        b.build(check_bounds=True)
+    assert "rate_bounds" in str(exc.value)
+
+
+def test_bounds_rejects_provably_starved_channel():
+    b = _gated_builder()
+    b.rate_bounds("src.out", 0.0, 0.5)      # producer ceiling < consumer
+    b.rate_bounds("gate.in", 1.0, 1.0)
+    rep = b.check_bounds()
+    assert {c.fifo: c.verdict for c in rep.channels}["f_data"] == "starved"
+    with pytest.raises(ValueError, match="starved"):
+        b.build(check_bounds=True)
+
+
+def test_bounds_declared_balance_and_validation():
+    b = _gated_builder()
+    b.rate_bounds("gate.in", 1.0, 1.0)      # declared always-on: balanced
+    rep = b.check_bounds()
+    assert {c.fifo: c.verdict for c in rep.channels}["f_data"] == "balanced"
+    b.build(check_bounds=True)
+    with pytest.raises(ValueError, match="no port"):
+        b.rate_bounds("gate.nope", 0.0, 1.0)
+    with pytest.raises(ValueError, match="0 <= lo <= hi <= 1"):
+        b.rate_bounds("gate.in", 0.8, 0.2)
+
+
+def test_bounds_static_chain_all_balanced():
+    """Static SDF graph: every port is provably always-enabled, the whole
+    report is balanced, and a guarded build is a no-op rejection-wise."""
+    b = NetworkBuilder()
+    b.actor(static_actor("src", (), ("out",),
+                         lambda st, ins, rates: (st, {"out": jnp.zeros((2, 4))})))
+    b.actor(static_actor("amp", ("in",), ("out",),
+                         map_fire(lambda w: w + 1.0, "in", "out")))
+    b.actor(static_actor("sink", ("in",), (),
+                         lambda st, ins, rates: (st, {})))
+    b.connect("src.out", "amp.in", rate=2, token_shape=(4,))
+    b.connect("amp.out", "sink.in", rate=2, token_shape=(4,))
+    rep = b.check_bounds()
+    assert all(c.verdict == "balanced" for c in rep.channels), rep.describe()
+    b.build(check_bounds=True)
