@@ -1,5 +1,6 @@
 """Bench-regression gate: compare a fresh ``--fast`` run to the committed
-``BENCH_executors.json`` / ``BENCH_megakernel.json`` baselines.
+``BENCH_executors.json`` / ``BENCH_megakernel.json`` /
+``BENCH_serving.json`` baselines.
 
 Two kinds of comparison, per record (keyed by ``name``):
 
@@ -55,7 +56,8 @@ if __package__ in (None, ""):   # script invocation: PYTHONPATH=src is enough
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-SUITES = ("BENCH_executors.json", "BENCH_megakernel.json")
+SUITES = ("BENCH_executors.json", "BENCH_megakernel.json",
+          "BENCH_serving.json")
 TIMING_FIELDS = ("us_per_call", "tokens_per_s")
 
 
@@ -68,10 +70,12 @@ def _fresh_run(fast: bool, out_dir: str) -> Dict[str, Dict[str, dict]]:
     """Run both bench suites into ``out_dir``; returns suite -> records."""
     from benchmarks.bench_executors import bench_executors
     from benchmarks.bench_megakernel import bench_megakernel
+    from benchmarks.bench_serving import bench_serving
 
     paths = {s: os.path.join(out_dir, s) for s in SUITES}
     bench_executors(fast=fast, json_path=paths["BENCH_executors.json"])
     bench_megakernel(fast=fast, json_path=paths["BENCH_megakernel.json"])
+    bench_serving(fast=fast, json_path=paths["BENCH_serving.json"])
     return {s: _load(p) for s, p in paths.items()}
 
 

@@ -23,6 +23,7 @@ def main() -> None:
     from benchmarks.bench_executors import bench_executors
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.bench_megakernel import bench_megakernel
+    from benchmarks.bench_serving import bench_serving
     from benchmarks.roofline import bench_roofline
 
     sections = [
@@ -31,6 +32,7 @@ def main() -> None:
         ("Table 4 (DPD + 5x claim)", bench_dpd),
         ("Executors (specialization + multi-firing)", bench_executors),
         ("Megakernel (device-resident dynamic scheduling)", bench_megakernel),
+        ("Serving (continuous batching on the actor runtime)", bench_serving),
         ("Kernels", bench_kernels),
         ("Roofline (from dry-run)", bench_roofline),
     ]

@@ -13,12 +13,12 @@ from repro.core.megakernel.kernel import compile_megakernel
 from repro.core.megakernel.lower import (CUT_OBJECTIVES, SHARED, FiringRow,
                                          GridPartition, MegakernelLayout,
                                          PortBinding, default_assignment,
-                                         lower_network, partition_layout,
-                                         state_hbm_bytes)
+                                         entry_staging_bytes, lower_network,
+                                         partition_layout, state_hbm_bytes)
 
 __all__ = [
     "CUT_OBJECTIVES", "SHARED", "FiringRow", "GridPartition",
     "MegakernelLayout", "PortBinding", "compile_megakernel",
-    "default_assignment", "lower_network", "partition_layout",
-    "state_hbm_bytes",
+    "default_assignment", "entry_staging_bytes", "lower_network",
+    "partition_layout", "state_hbm_bytes",
 ]

@@ -543,6 +543,18 @@ def partition_layout(network: Network, layout: MegakernelLayout,
                          objective=objective)
 
 
+def entry_staging_bytes(layout: "MegakernelLayout",
+                        partition: Optional["GridPartition"] = None) -> int:
+    """Bytes re-staged HBM -> kernel scratch on EVERY kernel entry: the
+    effective ring + cursor footprint (forwarded transients excluded
+    under ``partition``).  This is the per-chunk residency cost of
+    driving the megakernel through ``Program.stream``'s chunked loop —
+    persistent-feed mode pays it once instead of once per chunk."""
+    if partition is not None:
+        return partition.scratch_bytes(layout)
+    return layout.scratch_bytes
+
+
 def state_hbm_bytes(state: Any) -> int:
     """Total bytes of a state pytree as it sits in HBM (kernel in/out
     operands: ring buffers, cursors, actor states) — the 'HBM' column of

@@ -310,6 +310,14 @@ class ProgramStats:
     bytes ceiling it used (``plan.donate_threshold_bytes`` or the
     measured 1 MiB default).
 
+    The ``last_stream_*`` fields describe the last :meth:`Program.stream`
+    call: chunk count, whether persistent-feed mode ran, and the staging
+    traffic — ``last_stream_staged_bytes_per_chunk`` is what crosses the
+    host boundary at each chunk (chunked mode re-stages the megakernel's
+    ring/cursor scratch every entry on top of the feed/fetch slabs;
+    persistent mode stages rings once and pays only the slab share), and
+    ``last_stream_total_staged_bytes`` the whole stream's staging bill.
+
     Grid-partitioned megakernel programs (``plan.cores``) add the
     per-partition telemetry: ``grid_cores``, ``partition_actors`` (actor
     names per core, visit order), ``core_scratch_bytes`` (each core's
@@ -349,6 +357,10 @@ class ProgramStats:
     core_cursor_rows: Optional[Tuple[int, ...]] = None
     cut_objective: Optional[str] = None
     partition_fire_counts: Optional[Tuple[int, ...]] = None
+    last_stream_chunks: Optional[int] = None
+    last_stream_persistent: Optional[bool] = None
+    last_stream_staged_bytes_per_chunk: Optional[int] = None
+    last_stream_total_staged_bytes: Optional[int] = None
 
 
 class Program:
@@ -364,6 +376,12 @@ class Program:
         #: Per-chunk fault/recovery log of the last :meth:`stream` call
         #: (entries only for chunks that needed the on_fault policy).
         self.last_stream_report: List[Dict[str, Any]] = []
+        #: Telemetry of the last :meth:`stream` call (chunks / persistent /
+        #: staged bytes), surfaced through :meth:`stats`.
+        self._last_stream: Optional[Dict[str, Any]] = None
+        #: Full-length programs built lazily by persistent-feed streams,
+        #: keyed by total window count (reused across stream() calls).
+        self._persistent_progs: Dict[int, "Program"] = {}
         self._feed_by_fifo: Dict[str, str] = {}
         self._fetch_by_fifo: Dict[str, str] = {}
         if plan.accelerated is not None:
@@ -554,18 +572,72 @@ class Program:
     def _set_actor(self, state: NetworkState, actor: str, value: Any) -> NetworkState:
         return state.replace_actor(self.network.actor_index[actor], value)
 
+    def _normalize_feed(self, fifo: str, feed_actor: str, spec: Any,
+                        raw: Any, where: str = ""):
+        """Validate + window-normalize one feed array; returns
+        ``(raw_dtype, (n, r, *token_shape) array)``.  ``where`` labels
+        the chunk in errors when the feed arrived as a per-chunk list."""
+        raw = jnp.asarray(raw)
+        # Real-to-real casts (int windows into a float channel, float
+        # probes into a uint8 frame channel) are long-standing host
+        # conveniences; complex data into a real channel silently
+        # drops the imaginary half, which is always a wrong feed wired
+        # to the right name — reject that one here with the actor
+        # named instead of staging garbage.
+        if (jnp.issubdtype(raw.dtype, jnp.complexfloating)
+                and not jnp.issubdtype(jnp.dtype(spec.dtype),
+                                       jnp.complexfloating)):
+            raise ValueError(
+                f"Program.stream: feed {fifo!r}{where} (staged into actor "
+                f"{feed_actor!r}) carries dtype {raw.dtype}, but the "
+                f"channel expects {jnp.dtype(spec.dtype)}; cast the "
+                "stream explicitly if the conversion is intended")
+        arr = raw.astype(spec.dtype)
+        window = (spec.rate,) + tuple(spec.token_shape)
+        if arr.shape[1:] != window:
+            if arr.ndim >= 1 and arr.shape[0] % spec.rate == 0 \
+                    and arr.shape[1:] == tuple(spec.token_shape):
+                arr = arr.reshape((-1,) + window)
+            else:
+                raise ValueError(
+                    f"Program.stream: feed {fifo!r}{where} (staged into "
+                    f"actor {feed_actor!r}) has shape {arr.shape}; expected "
+                    f"(n, {spec.rate}, *{tuple(spec.token_shape)}) "
+                    "windows or the flattened token stream")
+        return raw.dtype, arr
+
     def stream(self, feeds: Mapping[str, Any], on_fault: str = "raise",
-               max_retries: int = 2) -> Dict[str, jax.Array]:
+               max_retries: int = 2,
+               persistent: bool = False) -> Dict[str, jax.Array]:
         """Stream host data through the accelerated subnetwork in chunks.
 
         ``feeds`` maps each *inbound boundary channel* name to its full
-        token stream — ``(total_windows, r, *token_shape)``, or the
-        flattened ``(total_windows * r, *token_shape)``.  The stream is
-        cut into chunks of ``plan.n_iterations`` windows; each chunk is
-        staged into the feed actors, executed under the plan, and the
-        fetch actors' slabs collected.  Actor and internal-FIFO state
-        (e.g. filter histories, delay tokens) carries across chunks —
-        streaming N chunks equals one long run over the concatenation.
+        token stream — ``(total_windows, r, *token_shape)``, the
+        flattened ``(total_windows * r, *token_shape)``, or a
+        list/tuple of per-chunk arrays (one element per
+        ``plan.n_iterations``-window chunk, each in either layout; every
+        element must keep the dtype and shape of chunk 0 — a mismatch is
+        rejected naming the chunk index and channel, it is never staged).
+        The stream is cut into chunks of ``plan.n_iterations`` windows;
+        each chunk is staged into the feed actors, executed under the
+        plan, and the fetch actors' slabs collected.  Actor and
+        internal-FIFO state (e.g. filter histories, delay tokens)
+        carries across chunks — streaming N chunks equals one long run
+        over the concatenation.
+
+        ``persistent=True`` is the persistent-feed mode: instead of
+        re-entering the compiled chunk-length program once per chunk —
+        which re-stages every buffered ring HBM -> kernel scratch on
+        each megakernel entry — the stream compiles ONE full-length
+        program (same network, ``n_iterations=total``), stages the feed
+        slabs once, and runs to completion in a single entry; rings stay
+        resident across what used to be chunk boundaries.  Outputs are
+        bit-identical to the chunked loop (the concatenation invariant
+        above).  The cost: no per-chunk checkpoints exist, so
+        ``on_fault`` must stay ``"raise"``, and ``last_stream_report``
+        cannot log per-chunk recoveries.  The staging savings are
+        reported by :meth:`stats` (``last_stream_staged_bytes_per_chunk``
+        / ``last_stream_total_staged_bytes``).
 
         The loop checkpoints the :class:`NetworkState` before each chunk;
         ``on_fault`` decides what a :class:`NetworkFaultError` from a
@@ -599,6 +671,12 @@ class Program:
             raise ValueError(
                 f"Program.stream: on_fault must be 'raise', 'resume' or "
                 f"'skip', got {on_fault!r}")
+        if persistent and on_fault != "raise":
+            raise ValueError(
+                f"Program.stream: persistent=True runs the whole stream as "
+                f"one entry and keeps no per-chunk checkpoints, so "
+                f"on_fault={on_fault!r} has nothing to restore; use "
+                "on_fault='raise' or the chunked loop")
         if not isinstance(max_retries, int) or isinstance(max_retries, bool) \
                 or max_retries < 0:
             raise ValueError(
@@ -639,33 +717,50 @@ class Program:
         for fifo, arr in feeds.items():
             spec = self.source_network.fifos[fifo]
             feed_actor = self._feed_by_fifo[fifo]
-            raw = jnp.asarray(arr)
-            # Real-to-real casts (int windows into a float channel, float
-            # probes into a uint8 frame channel) are long-standing host
-            # conveniences; complex data into a real channel silently
-            # drops the imaginary half, which is always a wrong feed wired
-            # to the right name — reject that one here with the actor
-            # named instead of staging garbage.
-            if (jnp.issubdtype(raw.dtype, jnp.complexfloating)
-                    and not jnp.issubdtype(jnp.dtype(spec.dtype),
-                                           jnp.complexfloating)):
-                raise ValueError(
-                    f"Program.stream: feed {fifo!r} (staged into actor "
-                    f"{feed_actor!r}) carries dtype {raw.dtype}, but the "
-                    f"channel expects {jnp.dtype(spec.dtype)}; cast the "
-                    "stream explicitly if the conversion is intended")
-            arr = raw.astype(spec.dtype)
-            window = (spec.rate,) + tuple(spec.token_shape)
-            if arr.shape[1:] != window:
-                if arr.ndim >= 1 and arr.shape[0] % spec.rate == 0 \
-                        and arr.shape[1:] == tuple(spec.token_shape):
-                    arr = arr.reshape((-1,) + window)
-                else:
+            if isinstance(arr, (list, tuple)):
+                # Per-chunk feed: one element per chunk.  Each element is
+                # normalized on its own, then pinned to chunk 0's dtype
+                # and window layout — chunk 2+ of a drifting stream must
+                # fail HERE naming the chunk, not stage a silently cast /
+                # misaligned slab (the cross-chunk validation gap).
+                if len(arr) == 0:
                     raise ValueError(
-                        f"Program.stream: feed {fifo!r} (staged into actor "
-                        f"{feed_actor!r}) has shape {arr.shape}; expected "
-                        f"(n, {spec.rate}, *{tuple(spec.token_shape)}) "
-                        "windows or the flattened token stream")
+                        f"Program.stream: feed {fifo!r} is an empty "
+                        "per-chunk list; pass one array per chunk")
+                dt0 = a0 = None
+                parts = []
+                for i, piece in enumerate(arr):
+                    dt, a = self._normalize_feed(fifo, feed_actor, spec,
+                                                 piece, where=f" chunk {i}")
+                    if i == 0:
+                        dt0, a0 = dt, a
+                        if a.shape[0] != chunk:
+                            raise ValueError(
+                                f"Program.stream: per-chunk feed {fifo!r} "
+                                f"chunk 0 covers {a.shape[0]} windows, but "
+                                f"chunks are n_iterations={chunk} windows "
+                                "each; pass whole chunks (or one "
+                                "concatenated array)")
+                    else:
+                        if dt != dt0:
+                            raise ValueError(
+                                f"Program.stream: feed {fifo!r} chunk {i} "
+                                f"carries dtype {dt}, but chunk 0 staged "
+                                f"{dt0}; per-chunk feeds must keep one "
+                                "dtype across the stream (cast explicitly "
+                                "if the drift is intended)")
+                        if a.shape != a0.shape:
+                            raise ValueError(
+                                f"Program.stream: feed {fifo!r} chunk {i} "
+                                f"has window shape {tuple(a.shape)}, but "
+                                f"chunk 0 staged {tuple(a0.shape)}; "
+                                "per-chunk feeds must keep a consistent "
+                                "window count and token shape across "
+                                "chunks")
+                    parts.append(a)
+                arr = jnp.concatenate(parts, axis=0)
+            else:
+                _, arr = self._normalize_feed(fifo, feed_actor, spec, arr)
             if total is None:
                 total = arr.shape[0]
             elif arr.shape[0] != total:
@@ -681,12 +776,53 @@ class Program:
                 f"Program.stream: {total} windows do not divide into "
                 f"chunks of n_iterations={chunk}; pad the stream or pick "
                 "a dividing chunk size")
-        state = self.init_state()
-        outs: Dict[str, list] = {f: [] for f in self._fetch_by_fifo}
+        n_chunks = total // chunk
+        # Staging-traffic accounting (stats().last_stream_*): the boundary
+        # feed/fetch slab share every chunk pays in either mode, plus the
+        # megakernel's ring + cursor scratch footprint — which the chunked
+        # loop re-stages HBM -> scratch on every kernel entry and the
+        # persistent run stages exactly once.
+        slab_bytes = 0
+        for f in list(arrays) + list(self._fetch_by_fifo):
+            spec = self.source_network.fifos[f]
+            slab_bytes += chunk * spec.rate * spec.token_size_bytes
+        if self._layout is not None:
+            from repro.core.megakernel import entry_staging_bytes
+            ring_bytes = entry_staging_bytes(self._layout, self._partition)
+        else:
+            ring_bytes = 0
         report: List[Dict[str, Any]] = []
         self.last_stream_report = report
+        if persistent:
+            # One full-length program over the SAME source network: by the
+            # concatenation invariant its single run is bit-identical to
+            # the chunked loop, and the feed slabs (sized total instead of
+            # chunk) are staged exactly once.
+            prog = self._persistent_progs.get(total)
+            if prog is None:
+                prog = Program(
+                    self.source_network,
+                    dataclasses.replace(self.plan, n_iterations=total))
+                self._persistent_progs[total] = prog
+            base = prog.init_state()
+            for fifo, arr in arrays.items():
+                base = prog._set_actor(base, prog._feed_by_fifo[fifo],
+                                       (arr, jnp.int32(0)))
+            result = prog.run(base)
+            # collect() stays guarded: the implicit state belongs to the
+            # full-length twin program, not this chunk-length one.
+            self._last = result
+            self._last_is_stream_chunk = True
+            self._last_stream = {
+                "chunks": n_chunks, "persistent": True,
+                "staged_bytes_per_chunk": slab_bytes,
+                "total_staged_bytes": ring_bytes + n_chunks * slab_bytes,
+            }
+            return {f: result.state.actor(prog._fetch_by_fifo[f])[0]
+                    for f in self._fetch_by_fifo}
+        state = self.init_state()
+        outs: Dict[str, list] = {f: [] for f in self._fetch_by_fifo}
         retrying = on_fault in ("resume", "skip")
-        n_chunks = total // chunk
         for c in range(n_chunks):
             # The per-chunk checkpoint: the last good NetworkState, before
             # this chunk's feeds are staged.  Restoring it re-runs (or
@@ -741,6 +877,11 @@ class Program:
                                 f"failed after {attempts} attempt(s): "
                                 f"{err.args[0]}",)
                     raise
+        self._last_stream = {
+            "chunks": n_chunks, "persistent": False,
+            "staged_bytes_per_chunk": ring_bytes + slab_bytes,
+            "total_staged_bytes": n_chunks * (ring_bytes + slab_bytes),
+        }
         return {f: jnp.concatenate(ws, axis=0) for f, ws in outs.items()}
 
     # ------------------------------------------------------------------ #
@@ -832,4 +973,14 @@ class Program:
             core_cursor_rows=cursor_split,
             cut_objective=cut_obj,
             partition_fire_counts=part_counts,
+            last_stream_chunks=(self._last_stream["chunks"]
+                                if self._last_stream else None),
+            last_stream_persistent=(self._last_stream["persistent"]
+                                    if self._last_stream else None),
+            last_stream_staged_bytes_per_chunk=(
+                self._last_stream["staged_bytes_per_chunk"]
+                if self._last_stream else None),
+            last_stream_total_staged_bytes=(
+                self._last_stream["total_staged_bytes"]
+                if self._last_stream else None),
         )

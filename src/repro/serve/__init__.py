@@ -1,3 +1,4 @@
+from repro.serve.actor_engine import ActorEngine
 from repro.serve.engine import Engine, Request, Result, ServeConfig
 
-__all__ = ["Engine", "Request", "Result", "ServeConfig"]
+__all__ = ["ActorEngine", "Engine", "Request", "Result", "ServeConfig"]

@@ -28,6 +28,13 @@ class ServeConfig:
     max_new: int = 32
     eos_id: Optional[int] = None
     kernel_impl: str = "xla"
+    # Stop the decode loop as soon as every slot in the batch is done
+    # (emitted EOS, or exhausted its per-request budget) instead of
+    # always burning max_new - 1 steps.  Tokens past a slot's first EOS /
+    # budget are discarded anyway, so the outputs are identical — only
+    # the step count drops.  False keeps the historical fixed loop
+    # (used by tests pinning the equivalence).
+    early_stop: bool = True
 
 
 @dataclasses.dataclass
@@ -47,6 +54,10 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
+        #: decode_step calls of the last _generate_batch (idle-slot
+        #: telemetry: with early_stop this drops below max_new - 1 when
+        #: every slot finishes early, while tokens stay identical).
+        self.last_decode_steps = 0
         cache_len = scfg.max_prompt + scfg.max_new
 
         def _prefill(params, batch):
@@ -88,12 +99,32 @@ class Engine:
         pos = jnp.full((scfg.batch_size,), scfg.max_prompt, jnp.int32)
 
         produced = [next_tok]
+        # Host-side done tracking for the early stop: a slot is done once
+        # it has emitted EOS or produced its per-request budget.  Tokens a
+        # done slot would still produce are discarded by the truncation
+        # below, so stopping early cannot change any result.
+        budgets = np.array([min(max(r.max_new, 0), scfg.max_new)
+                            for r in reqs], np.int64)
+        seen_eos = np.zeros(scfg.batch_size, bool)
+        if scfg.eos_id is not None:
+            seen_eos |= np.asarray(next_tok)[:, 0] == scfg.eos_id
+        self.last_decode_steps = 0
         for _ in range(scfg.max_new - 1):
+            if scfg.early_stop and bool(
+                    (seen_eos | (len(produced) >= budgets)).all()):
+                break
             logits, caches = self._decode(self.params, next_tok, pos, caches)
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             pos = pos + 1
             produced.append(next_tok)
+            self.last_decode_steps += 1
+            if scfg.eos_id is not None:
+                seen_eos |= np.asarray(next_tok)[:, 0] == scfg.eos_id
         gen = np.asarray(jnp.concatenate(produced, axis=1))
+        if gen.shape[1] < scfg.max_new:   # early stop: pad the dead tail
+            pad = np.zeros((scfg.batch_size, scfg.max_new - gen.shape[1]),
+                           np.int32)
+            gen = np.concatenate([gen, pad], axis=1)
 
         results = []
         for i, r in enumerate(reqs):

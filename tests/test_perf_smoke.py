@@ -116,6 +116,33 @@ def test_bench_megakernel_fast(tmp_path):
         assert by_name[f"mega_{g}_megakernel"]["shared_scratch_bytes"] == 0
 
 
+def test_bench_serving_fast(tmp_path):
+    from benchmarks.bench_serving import bench_serving
+    json_path = str(tmp_path / "BENCH_serving.json")
+    rows = bench_serving(fast=True, json_path=json_path)
+    check_rows(rows)
+    # The continuous-batching acceptance claims at tiny sizes: the actor
+    # engine sustains more tok/s than fixed batches, and persistent-feed
+    # streaming stages fewer bytes per chunk.
+    vs = [d for n, _, d in rows if n == "serve_actor_vs_legacy"]
+    assert len(vs) == 1 and "beats: True" in vs[0], vs
+    cut = [d for n, _, d in rows if n == "serve_stream_staging_cut"]
+    assert len(cut) == 1 and "reduces: True" in cut[0], cut
+    with open(json_path) as f:
+        records = json.load(f)
+    by_name = {r["name"]: r for r in records}
+    for name in ("serve_legacy_fixed_batch", "serve_actor_continuous",
+                 "serve_stream_chunked", "serve_stream_persistent"):
+        assert name in by_name, sorted(by_name)
+        assert by_name[name]["us_per_call"] > 0
+        assert by_name[name]["tokens_per_s"] > 0
+    # Latency percentiles are structure fields: deterministic in steps.
+    assert (by_name["serve_actor_continuous"]["p99_latency_steps"]
+            <= by_name["serve_legacy_fixed_batch"]["p99_latency_steps"])
+    assert (by_name["serve_stream_persistent"]["staged_bytes_per_chunk"]
+            < by_name["serve_stream_chunked"]["staged_bytes_per_chunk"])
+
+
 def test_check_regression_compare_logic():
     """The gate's verdict logic, on synthetic records (no bench run)."""
     from benchmarks.check_regression import _merge, compare
