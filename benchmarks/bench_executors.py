@@ -23,6 +23,11 @@ The ``exec_*_dynamic_guarded`` rows time ``ExecutionPlan(guards=True)``
 inline-check its contract: a clean guarded run must be bit-identical and
 report no faults.  Their tok/s rides the same calibrated regression
 floor as every other row once committed to the baseline JSON.
+
+The ``exec_*_dynamic_traced`` rows do the same for the firing-level
+trace ring (``ExecutionPlan(trace=True)``): bit-identical states/sweeps,
+recorded firings equal to ``fire_counts``, and the overhead gated by the
+committed baseline like every other timing row.
 """
 from __future__ import annotations
 
@@ -133,7 +138,10 @@ def bench_executors(fast: bool = False,
                                            donate=False))
         dyn_grd = net.compile(ExecutionPlan(mode="dynamic", multi_firing=True,
                                             donate=False, guards=True))
+        dyn_trc = net.compile(ExecutionPlan(mode="dynamic", multi_firing=True,
+                                            donate=False, trace=True))
         rb, rm, rg = dyn_base.run(), dyn_mf.run(), dyn_grd.run()
+        rt = dyn_trc.run()
         sb, cb, swb = rb.state, rb.fire_counts, rb.sweeps
         sm, cm, swm = rm.state, rm.fire_counts, rm.sweeps
         identical = (_states_identical(sb, sm) and
@@ -144,10 +152,17 @@ def bench_executors(fast: bool = False,
         guard_clean = (_states_identical(sm, rg.state)
                        and int(swm) == int(rg.sweeps)
                        and rg.diagnostics.ok)
+        # Trace contract: a traced run is bit-identical to the untraced
+        # one, and the recorded firings agree with fire_counts.
+        trace_clean = (_states_identical(sm, rt.state)
+                       and int(swm) == int(rt.sweeps)
+                       and rt.trace.firing_counts() ==
+                       {k: int(v) for k, v in rt.fire_counts.items()})
         med = _interleaved_medians({
             "base": lambda: jax.block_until_ready(dyn_base.run().state),
             "mf": lambda: jax.block_until_ready(dyn_mf.run().state),
             "grd": lambda: jax.block_until_ready(dyn_grd.run().state),
+            "trc": lambda: jax.block_until_ready(dyn_trc.run().state),
         }, reps)
         record(f"exec_{gname}_dynamic_baseline", med["base"], tokens,
                f"{int(swb)} sweeps")
@@ -156,6 +171,9 @@ def bench_executors(fast: bool = False,
         record(f"exec_{gname}_dynamic_guarded", med["grd"], tokens,
                f"{med['grd'] / med['mf']:.2f}x of unguarded, "
                f"clean + bit-identical: {guard_clean}")
+        record(f"exec_{gname}_dynamic_traced", med["trc"], tokens,
+               f"{med['trc'] / med['mf']:.2f}x of untraced, "
+               f"{rt.trace.n_events} events, bit-identical: {trace_clean}")
         rows.append((f"exec_{gname}_dynamic_sweep_reduction", 0.0,
                      f"{int(swb)} -> {int(swm)} sweeps "
                      f"(strictly fewer: {int(swm) < int(swb)}), "

@@ -21,6 +21,10 @@ forwarding regression fails CI like a sweep-count drift does).  The
 ``mega_*_megakernel_guarded`` row times the in-kernel health layer
 (``ExecutionPlan(guards=True)``) against the unguarded kernel, inline-
 checking that the clean guarded run stays bit-identical and fault-free.
+The ``mega_*_megakernel_traced`` row does the same for the in-kernel
+trace ring (``ExecutionPlan(trace=True)``): a traced run must stay
+bit-identical, its recorded firings must equal ``fire_counts``, and its
+overhead is gated by the committed baseline.
 
 Caveat printed with the numbers: on CPU the megakernel runs in Pallas
 *interpret* mode — the comparison measures the scheduling structure, not
@@ -88,14 +92,20 @@ def bench_megakernel(fast: bool = False,
                 for c in GRID_CORES}
         mega = grid[1]
         guarded = net.compile(ExecutionPlan(mode=MEGAKERNEL, guards=True))
+        traced = net.compile(ExecutionPlan(mode=MEGAKERNEL, trace=True))
 
         rd = dyn.run()
         grid_runs = {c: p.run() for c, p in grid.items()}
         rm = grid_runs[1]
         rg = guarded.run()
+        rt = traced.run()
         guard_clean = (states_identical(rm.state, rg.state)
                        and int(rm.sweeps) == int(rg.sweeps)
                        and rg.diagnostics.ok)
+        trace_clean = (states_identical(rm.state, rt.state)
+                       and int(rm.sweeps) == int(rt.sweeps)
+                       and rt.trace.firing_counts() ==
+                       {k: int(v) for k, v in rt.fire_counts.items()})
         identical = (states_identical(rd.state, rm.state)
                      and {k: int(v) for k, v in rd.fire_counts.items()}
                      == {k: int(v) for k, v in rm.fire_counts.items()}
@@ -119,6 +129,9 @@ def bench_megakernel(fast: bool = False,
         candidates["guarded"] = (
             lambda guarded=guarded: jax.block_until_ready(
                 guarded.run().state))
+        candidates["traced"] = (
+            lambda traced=traced: jax.block_until_ready(
+                traced.run().state))
         med = _interleaved_medians(candidates, reps)
 
         st1 = grid[1].stats()
@@ -135,6 +148,10 @@ def bench_megakernel(fast: bool = False,
                f"{med['guarded'] / med['grid1']:.2f}x of unguarded, "
                f"clean + bit-identical: {guard_clean}",
                sweeps=int(rg.sweeps), cores=1)
+        record(f"mega_{gname}_megakernel_traced", med["traced"], tokens,
+               f"{med['traced'] / med['grid1']:.2f}x of untraced, "
+               f"{rt.trace.n_events} events, bit-identical: {trace_clean}",
+               sweeps=int(rt.sweeps), cores=1)
         record(f"mega_{gname}_static_specialized", med["static"], tokens,
                "fused scan reference")
         for c in GRID_CORES[1:]:

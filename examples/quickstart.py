@@ -110,6 +110,32 @@ def main():
           f"({gstats.cut_objective} cut), per-core cursor rows "
           f"{gstats.core_cursor_rows} + {len(gstats.shared_fifos)} shared")
 
+    # Observability: trace=True records every firing attempt (actor,
+    # sweep, fired/skipped, per-channel occupancy) into a device-side
+    # ring — bit-identical results, and the decoded Trace exports
+    # Chrome trace-event JSON for https://ui.perfetto.dev plus a
+    # measured Profile that can drive the partition cut.
+    import tempfile
+    traced = net.compile(ExecutionPlan(mode="dynamic", trace=True))
+    tresult = traced.run()
+    trace = tresult.trace
+    assert trace.firing_counts() == {k: int(v)
+                                     for k, v in tresult.fire_counts.items()}
+    with tempfile.NamedTemporaryFile(suffix=".trace.json",
+                                     delete=False) as f:
+        trace.to_perfetto(f.name)
+    prof = trace.profile()
+    print(f"trace: {trace.n_events} events ({trace.dropped} dropped), "
+          f"perfetto JSON -> {f.name}")
+    print("  measured cut weights:",
+          {k: v for k, v in sorted(prof.as_cut_weights()['actors'].items())})
+    pgrid = net.compile(ExecutionPlan(mode=Mode.MEGAKERNEL, cores=2,
+                                      cut_objective="profile", profile=prof))
+    assert np.array_equal(np.asarray(pgrid.collect("sink", pgrid.run().state)),
+                          out)
+    print(f"  profile-driven grid x2 cut: {pgrid.stats().partition_actors} "
+          f"(still bit-identical)")
+
     # Note on donation: ExecutionPlan.donate defaults to "auto" — donate
     # only when the ring-buffered bytes are small enough that copy
     # elision wins (full-size motion detection measured 1.7x SLOWER

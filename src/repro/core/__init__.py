@@ -35,6 +35,9 @@ from repro.core.executor import (
 )
 from repro.core.program import (MEGAKERNEL, ExecutionPlan, Mode, Program,
                                 ProgramStats, RunResult)
+from repro.core.trace import (TRACE_CAPACITY_DEFAULT, Profile, Trace,
+                              TraceState, decode_trace, init_trace,
+                              merge_traces, validate_chrome_trace)
 
 # Megakernel names resolve lazily (module __getattr__ below): the backend
 # imports jax.experimental.pallas(+tpu), ~1 s of import cost every
@@ -75,6 +78,8 @@ __all__ = [
     "truncate_feed",
     "ExecutionPlan", "MEGAKERNEL", "Mode", "Program", "ProgramStats",
     "RunResult",
+    "TRACE_CAPACITY_DEFAULT", "Profile", "Trace", "TraceState",
+    "decode_trace", "init_trace", "merge_traces", "validate_chrome_trace",
     "GridPartition", "MegakernelLayout", "compile_megakernel",
     "default_assignment", "lower_network", "partition_layout",
     "state_hbm_bytes",

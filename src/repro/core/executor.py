@@ -62,6 +62,7 @@ import jax.numpy as jnp
 from repro.core.fifo import FifoSpec, FifoState
 from repro.core.health import HealthState, init_health
 from repro.core.network import Network, NetworkState
+from repro.core.trace import init_trace
 from repro.core.schedule import phase_unroll_period
 
 # Legacy dict states are accepted everywhere and converted on entry.
@@ -536,7 +537,9 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
                      multi_firing: bool = True,
                      donate: bool = False,
                      return_sweeps: bool = False,
-                     guards: bool = False) -> Callable[..., Tuple]:
+                     guards: bool = False,
+                     trace_capacity: Optional[int] = None
+                     ) -> Callable[..., Tuple]:
     """Token-driven executor: sweeps until quiescence (no actor can fire).
 
     Returns ``(final_state, fire_counts)`` where ``fire_counts[actor]`` is
@@ -558,6 +561,16 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
     fire counts / sweeps are bit-identical to an unguarded one (guards
     observe channel operations, they never change them).
 
+    ``trace_capacity=N`` arms firing-level event tracing: every firing
+    *attempt* appends ``[actor, sweep, fired, occ...]`` to a ring-
+    buffered :class:`repro.core.trace.TraceState` riding the sweep carry
+    next to ``health`` — and following the same contract: the off slot
+    is the empty pytree ``None``, so an untraced loop lowers to the
+    identical HLO and a traced run's states / cursors / fire counts /
+    sweeps stay bit-identical (the trace observes, it never schedules).
+    With ``return_sweeps=True`` the record grows to ``(final_state,
+    fire_counts, n_sweeps, stalled, health, trace)``.
+
     ``multi_firing=True`` fires each visited actor up to its
     occupancy-derived bound (``_max_fireable``) via ``lax.fori_loop``
     before moving to the next actor, instead of once per sweep: the same
@@ -567,8 +580,9 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
     """
     assert_mode_allows(network, mode)
     names = list(network.actors)
+    n_fifos = len(network.fifos)
 
-    def fire_once(nm: str, state, counts, hlth):
+    def fire_once(nm: str, state, counts, hlth, trc, sweeps):
         ready = _can_fire(network, nm, state)
 
         def do_fire(operand):
@@ -583,30 +597,38 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
 
         state, counts, hlth = jax.lax.cond(ready, do_fire, lambda o: o,
                                            (state, counts, hlth))
-        return state, counts, hlth, ready
+        if trc is not None:
+            # One event per attempt — fired or skipped — with post-attempt
+            # occupancies, recorded unconditionally so tracing never
+            # perturbs the schedule's control flow.
+            occs = jnp.stack([state.fifos[i].occ for i in range(n_fifos)])
+            trc = trc.record(network.actor_index[nm], sweeps, ready, occs)
+        return state, counts, hlth, trc, ready
 
     def sweep(carry):
-        state, counts, hlth, _, sweeps = carry
+        state, counts, hlth, trc, _, sweeps = carry
         fired_any = jnp.bool_(False)
         for nm in names:
             if multi_firing:
                 k = _max_fireable(network, nm, state)
 
                 def body(_, c, nm=nm):
-                    st, cnt, h, fired = c
-                    st, cnt, h, ready = fire_once(nm, st, cnt, h)
-                    return st, cnt, h, jnp.logical_or(fired, ready)
+                    st, cnt, h, t, fired = c
+                    st, cnt, h, t, ready = fire_once(nm, st, cnt, h, t,
+                                                     sweeps)
+                    return st, cnt, h, t, jnp.logical_or(fired, ready)
 
-                state, counts, hlth, fired = jax.lax.fori_loop(
-                    0, k, body, (state, counts, hlth, jnp.bool_(False)))
+                state, counts, hlth, trc, fired = jax.lax.fori_loop(
+                    0, k, body, (state, counts, hlth, trc,
+                                 jnp.bool_(False)))
             else:
-                state, counts, hlth, fired = fire_once(nm, state, counts,
-                                                       hlth)
+                state, counts, hlth, trc, fired = fire_once(
+                    nm, state, counts, hlth, trc, sweeps)
             fired_any = jnp.logical_or(fired_any, fired)
-        return state, counts, hlth, fired_any, sweeps + 1
+        return state, counts, hlth, trc, fired_any, sweeps + 1
 
     def cond(carry):
-        _, _, _, fired_any, sweeps = carry
+        _, _, _, _, fired_any, sweeps = carry
         return jnp.logical_and(fired_any, sweeps < max_sweeps)
 
     def run(state: State):
@@ -614,15 +636,17 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
             state = network.state_from_dict(state)
         counts = {nm: jnp.int32(0) for nm in names}
         hlth = init_health(len(network.fifos)) if guards else None
-        carry = (state, counts, hlth, jnp.bool_(True), jnp.int32(0))
-        state, counts, hlth, fired_any, sweeps = jax.lax.while_loop(
+        trc = (init_trace(n_fifos, trace_capacity)
+               if trace_capacity else None)
+        carry = (state, counts, hlth, trc, jnp.bool_(True), jnp.int32(0))
+        state, counts, hlth, trc, fired_any, sweeps = jax.lax.while_loop(
             cond, sweep, carry)
         if return_sweeps:
             # fired_any still True at exit means the loop left through the
             # sweep budget, not quiescence — the stall the health layer
             # surfaces instead of returning partial state silently.
             stalled = jnp.logical_and(fired_any, sweeps >= max_sweeps)
-            return state, counts, sweeps, stalled, hlth
+            return state, counts, sweeps, stalled, hlth, trc
         return state, counts
 
     return jax.jit(run, donate_argnums=(0,) if donate else ())

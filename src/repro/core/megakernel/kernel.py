@@ -83,6 +83,7 @@ from repro.core.megakernel.lower import (CURSOR_FIELDS, FiringRow,
                                          GridPartition, MegakernelLayout,
                                          lower_network, partition_layout)
 from repro.core.network import Network, NetworkState
+from repro.core.trace import TraceState
 
 # Cursor row layout inside each packed (rows, 3) cursor block.
 _RD, _WR, _OCC = 0, 1, 2
@@ -531,7 +532,8 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
                   partition: GridPartition,
                   fwd_list: Tuple[int, ...],
                   buffered: Tuple[int, ...],
-                  guards: bool = False) -> Callable:
+                  guards: bool = False,
+                  trace_capacity: Optional[int] = None) -> Callable:
     n_fifos = len(layout.fifo_specs)
     n_actors = len(network.actors)
     n_leaves = len(scalar_leaf)
@@ -567,12 +569,18 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         counts_ref = refs[o + n_fifos + 1 + n_leaves]
         sweeps_ref = refs[o + n_fifos + 2 + n_leaves]
         flags_ref = refs[o + n_fifos + 3 + n_leaves]
+        extra = 4
         if guards:
-            fault_ref = refs[o + n_fifos + 4 + n_leaves]
-            hw_ref = refs[o + n_fifos + 5 + n_leaves]
-            extra = 6
-        else:
-            extra = 4
+            fault_ref = refs[o + n_fifos + extra + n_leaves]
+            hw_ref = refs[o + n_fifos + extra + 1 + n_leaves]
+            extra += 2
+        if trace_capacity:
+            # The device-side trace ring + its monotonic event counter —
+            # extra output refs exactly like the fault refs above: absent
+            # (no ref, no HLO) when tracing is off.
+            trace_ref = refs[o + n_fifos + extra + n_leaves]
+            tcount_ref = refs[o + n_fifos + extra + 1 + n_leaves]
+            extra += 2
         rings = refs[o + n_fifos + extra + n_leaves:]
         assert len(rings) == n_bufs
 
@@ -606,11 +614,16 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         actors0 = tuple(jax.tree.unflatten(actor_treedef, leaves0))
         consts = [const_in[j][...].reshape(()) if scalar_const[j]
                   else const_in[j][...] for j in range(n_consts)]
+        if trace_capacity:
+            # Output refs start undefined: zero the ring so undropped
+            # slots decode deterministically even on short runs.
+            trace_ref[...] = jnp.zeros((trace_capacity, 3 + n_fifos),
+                                       jnp.int32)
 
         # 2. Device-resident sweep loop (mirrors executor._compile_dynamic:
         #    same visit order, same per-visit multi-firing bound, same
         #    quiescence condition, same sweep accounting).
-        def attempt(row, wins, curs, actors, counts, hlth):
+        def attempt(row, wins, curs, actors, counts, hlth, tcnt, sweeps):
             ready = _can_fire(network, layout, row, fns[row.name], consts,
                               store, wins, curs, actors)
 
@@ -624,7 +637,21 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
 
             wins, curs, actors, counts, hlth = jax.lax.cond(
                 ready, do, lambda c: c, (wins, curs, actors, counts, hlth))
-            return wins, curs, actors, counts, hlth, ready
+            if tcnt is not None:
+                # One event per attempt with post-attempt occupancies —
+                # written straight into the trace output ref (only the
+                # scalar event counter rides the loop carry).  Static
+                # per-row stacking, same constraint as the cursor blocks.
+                occs = jnp.stack([_cur(curs, cursor_slot[i], _OCC)
+                                  for i in range(n_fifos)])
+                ev = jnp.concatenate([
+                    jnp.stack([jnp.int32(row.index),
+                               jnp.asarray(sweeps, jnp.int32),
+                               ready.astype(jnp.int32)]),
+                    occs])
+                trace_ref[pl.ds(tcnt % trace_capacity, 1)] = ev[None]
+                tcnt = tcnt + 1
+            return wins, curs, actors, counts, hlth, tcnt, ready
 
         # The grid-parallel sweep (paper §3.3 actor-to-core mapping): each
         # core runs its own occupancy-bounded firing loop over its
@@ -642,7 +669,7 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         # determinism keeps invisible in the final state.  Quiescence is
         # global: the sweep ends when ALL partitions report no progress.
         def sweep(carry):
-            wins, curs, actors, counts, hlth, _, sweeps = carry
+            wins, curs, actors, counts, hlth, tcnt, _, sweeps = carry
             core_progress = []
             for rows_ix in partition.core_rows:
                 core_fired = jnp.bool_(False)
@@ -652,36 +679,40 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
                         k = _max_fireable(layout, row, store, curs)
 
                         def body(_, c, row=row):
-                            wins, curs, actors, counts, hlth, fired = c
-                            wins, curs, actors, counts, hlth, ready = \
-                                attempt(row, wins, curs, actors, counts,
-                                        hlth)
+                            wins, curs, actors, counts, hlth, tcnt, \
+                                fired = c
+                            wins, curs, actors, counts, hlth, tcnt, \
+                                ready = attempt(row, wins, curs, actors,
+                                                counts, hlth, tcnt, sweeps)
                             return (wins, curs, actors, counts, hlth,
-                                    jnp.logical_or(fired, ready))
+                                    tcnt, jnp.logical_or(fired, ready))
 
-                        wins, curs, actors, counts, hlth, fired = \
+                        wins, curs, actors, counts, hlth, tcnt, fired = \
                             jax.lax.fori_loop(
                                 0, k, body,
-                                (wins, curs, actors, counts, hlth,
+                                (wins, curs, actors, counts, hlth, tcnt,
                                  jnp.bool_(False)))
                     else:
-                        wins, curs, actors, counts, hlth, fired = attempt(
-                            row, wins, curs, actors, counts, hlth)
+                        wins, curs, actors, counts, hlth, tcnt, fired = \
+                            attempt(row, wins, curs, actors, counts, hlth,
+                                    tcnt, sweeps)
                     core_fired = jnp.logical_or(core_fired, fired)
                 core_progress.append(core_fired)
             fired_any = functools.reduce(jnp.logical_or, core_progress,
                                          jnp.bool_(False))
-            return wins, curs, actors, counts, hlth, fired_any, sweeps + 1
+            return (wins, curs, actors, counts, hlth, tcnt, fired_any,
+                    sweeps + 1)
 
         def cond(carry):
-            _, _, _, _, _, fired_any, sweeps = carry
+            _, _, _, _, _, _, fired_any, sweeps = carry
             return jnp.logical_and(fired_any, sweeps < max_sweeps)
 
         hlth0 = init_health(n_fifos) if guards else None
+        tcnt0 = jnp.int32(0) if trace_capacity else None
         carry = (wins0, curs0, actors0,
-                 jnp.zeros((n_actors,), jnp.int32), hlth0,
+                 jnp.zeros((n_actors,), jnp.int32), hlth0, tcnt0,
                  jnp.bool_(True), jnp.int32(0))
-        wins, curs, actors, counts, hlth, fired_any, sweeps = \
+        wins, curs, actors, counts, hlth, tcnt, fired_any, sweeps = \
             jax.lax.while_loop(cond, sweep, carry)
 
         # 3. Copy the buffered rings back out of scratch and the carried
@@ -715,6 +746,8 @@ def _build_kernel(network: Network, layout: MegakernelLayout,
         if guards:
             fault_ref[...] = hlth.fault
             hw_ref[...] = hlth.high_water
+        if trace_capacity:
+            tcount_ref[0] = tcnt
 
     return kernel
 
@@ -732,12 +765,15 @@ class _MegaResult(tuple):
                  budget with work remaining (always computed).
     ``health``   :class:`repro.core.health.HealthState` fault / high-water
                  vectors when compiled with ``guards=True``, else None.
+    ``trace``    :class:`repro.core.trace.TraceState` device trace ring
+                 when compiled with ``trace_capacity=N``, else None.
     """
 
-    def __new__(cls, state, counts, sweeps, stalled, health):
+    def __new__(cls, state, counts, sweeps, stalled, health, trace=None):
         self = tuple.__new__(cls, (state, counts, sweeps))
         self.stalled = stalled
         self.health = health
+        self.trace = trace
         return self
 
 
@@ -751,7 +787,8 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                        partition: Optional[GridPartition] = None,
                        cut_objective: str = "crossing",
                        forward_transients: bool = True,
-                       guards: bool = False) -> Callable:
+                       guards: bool = False,
+                       trace_capacity: Optional[int] = None) -> Callable:
     """Compile the network into one persistent Pallas kernel.
 
     Returns ``runner(state) -> (final_state, fire_counts, n_sweeps)`` with
@@ -766,6 +803,16 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
     channel ops without changing them, so clean guarded runs stay
     bit-identical, and ``guards=False`` traces the exact pre-health
     kernel (the health slot is the empty pytree ``None``).
+
+    ``trace_capacity=N`` threads a fixed-capacity device-side trace ring
+    through the sweep loop — one ``[actor, sweep, fired, occ...]`` int32
+    row per firing attempt, written to an extra output ref with only the
+    scalar event counter loop-carried.  Same off-path contract as the
+    fault refs: ``trace_capacity=None`` adds no refs and no carry slots,
+    so the untraced kernel lowers to the identical HLO, and traced runs
+    stay bit-identical in states / cursors / fire counts / sweeps on
+    every path (single-core, grid, forwarded windows).  The decoded
+    :class:`repro.core.trace.TraceState` rides the result as ``.trace``.
 
     ``interpret=None`` auto-selects Pallas interpret mode on non-TPU
     backends (the tier-1 CPU fallback); pass an explicit bool to force
@@ -829,7 +876,8 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
 
         kernel = _build_kernel(network, layout, fns, treedef, scalar_leaf,
                                scalar_const, multi_firing, max_sweeps,
-                               partition, fwd_list, buffered, guards)
+                               partition, fwd_list, buffered, guards,
+                               trace_capacity)
         out_shape = (
             [jax.ShapeDtypeStruct(f.buf.shape, f.buf.dtype)
              for f in state.fifos]
@@ -842,6 +890,10 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
         if guards:
             out_shape += [jax.ShapeDtypeStruct((n_fifos,), jnp.int32),
                           jax.ShapeDtypeStruct((n_fifos,), jnp.int32)]
+        if trace_capacity:
+            out_shape += [jax.ShapeDtypeStruct(
+                              (trace_capacity, 3 + n_fifos), jnp.int32),
+                          jax.ShapeDtypeStruct((1,), jnp.int32)]
         scratch_shapes = [
             pltpu.VMEM(layout.scratch_shape(i), layout.fifo_specs[i].dtype)
             for i in buffered
@@ -860,9 +912,13 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
         counts_vec = outs[base]
         sweeps = outs[base + 1][0]
         stalled = outs[base + 2][0] != 0
-        health = (HealthState(fault=outs[base + 3],
-                              high_water=outs[base + 4])
-                  if guards else None)
+        nxt = base + 3
+        health = None
+        if guards:
+            health = HealthState(fault=outs[nxt], high_water=outs[nxt + 1])
+            nxt += 2
+        trace = (TraceState(ring=outs[nxt], count=outs[nxt + 1][0])
+                 if trace_capacity else None)
         leaves_o = [l.reshape(()) if s else l
                     for l, s in zip(leaves_o, scalar_leaf)]
         actors = tuple(jax.tree.unflatten(treedef, leaves_o))
@@ -874,7 +930,7 @@ def compile_megakernel(network: Network, max_sweeps: int = 1_000_000,
                              fifo_names=state.fifo_names,
                              actor_names=state.actor_names)
         counts = {nm: counts_vec[i] for i, nm in enumerate(actor_names)}
-        return final, counts, sweeps, stalled, health
+        return final, counts, sweeps, stalled, health, trace
 
     jitted = jax.jit(run)
 

@@ -64,8 +64,12 @@ SHARED = -1
 #: ring bytes of partition-crossing channels among contiguous cuts whose
 #: ``cost_flops`` bottleneck stays within :data:`_CUT_BALANCE_SLACK` of
 #: the flops-only optimum; ``"flops"`` is the legacy pure load-balance
-#: cut (linear-partition DP over ``cost_flops`` alone).
-CUT_OBJECTIVES = ("crossing", "flops")
+#: cut (linear-partition DP over ``cost_flops`` alone); ``"profile"``
+#: runs the same crossing DP over *measured* weights — per-actor firing
+#: load and per-channel occupancy churn from a traced run
+#: (``repro.core.trace.Profile.as_cut_weights()``) — instead of static
+#: ``cost_flops`` / capacity bytes.
+CUT_OBJECTIVES = ("crossing", "flops", "profile")
 
 #: How far above the flops-only optimal bottleneck the crossing-bytes
 #: cut may trade load balance for locality.  1.25 keeps every core
@@ -418,7 +422,9 @@ def _crossing_cut(weights: List[int], spans: List[Tuple[int, int, int]],
 
 def default_assignment(network: Network, cores: int,
                        layout: Optional[MegakernelLayout] = None,
-                       objective: str = "crossing") -> dict:
+                       objective: str = "crossing",
+                       profile: Optional[Mapping[str, Mapping[str, int]]]
+                       = None) -> dict:
     """Default actor -> core map: a contiguous cut of the dynamic visit
     order (declaration order), with window-uncovered delay-channel
     endpoints glued into one unit.  Contiguity keeps the multi-core
@@ -435,11 +441,22 @@ def default_assignment(network: Network, cores: int,
     shared-scratch / semaphore surface, and exactly the bytes transient
     forwarding would otherwise reclaim (a crossing transient channel
     falls back to a shared ring).
+    ``objective="profile"`` is the crossing cut over *measured* weights:
+    per-actor load (firings x flops) and per-channel occupancy-churn
+    bytes from a traced run, passed as ``profile={"actors": {...},
+    "channels": {...}}`` (``Profile.as_cut_weights()``).  Still a
+    contiguous cut of the same glued units, so the Kahn bit-identity
+    argument is unchanged — only the boundary placement moves.
     """
     if objective not in CUT_OBJECTIVES:
         raise ValueError(
             f"partition cut objective must be one of {CUT_OBJECTIVES}, "
             f"got {objective!r}")
+    if objective == "profile" and profile is None:
+        raise ValueError(
+            "cut_objective='profile' needs measured weights: run once "
+            "with ExecutionPlan(trace=True), then pass "
+            "RunResult.trace.profile().as_cut_weights()")
     names = list(network.actors)
     units = _glued_units(network)
     if cores > len(units):
@@ -448,24 +465,38 @@ def default_assignment(network: Network, cores: int,
             f"this network ({len(names)} actors after gluing delay-channel "
             "endpoints); pass fewer cores or an explicit assign= that "
             "leaves no core empty")
-    weights = [
-        sum(max(1, int(network.actors[names[i]].cost_flops)) for i in u)
-        for u in units
-    ]
+    if objective == "profile":
+        actor_w = dict(profile.get("actors", {}))
+        weights = [
+            sum(max(1, int(actor_w.get(names[i], 1))) for i in u)
+            for u in units
+        ]
+    else:
+        weights = [
+            sum(max(1, int(network.actors[names[i]].cost_flops)) for i in u)
+            for u in units
+        ]
     groups, bottleneck = _balanced_cut(weights, cores)
-    if objective == "crossing" and layout is not None and cores > 1:
+    if (objective == "profile" or
+            (objective == "crossing" and layout is not None)) and cores > 1:
         unit_of = {}
         for ui, unit in enumerate(units):
             for i in unit:
                 unit_of[i] = ui
         idx = {n: i for i, n in enumerate(names)}
+        chan_w = (dict(profile.get("channels", {}))
+                  if objective == "profile" else None)
         spans = []
-        for fname in layout.fifo_names:
+        for fname in network.fifos:
+            if objective == "crossing" and fname not in layout.fifo_names:
+                continue
             e = network.edge_of(fname)
             a, b = unit_of[idx[e.src_actor]], unit_of[idx[e.dst_actor]]
             if a != b:
-                spans.append((min(a, b), max(a, b),
-                              network.fifos[fname].capacity_bytes))
+                bytes_w = (max(0, int(chan_w.get(fname, 0)))
+                           if chan_w is not None
+                           else network.fifos[fname].capacity_bytes)
+                spans.append((min(a, b), max(a, b), bytes_w))
         cap = max(bottleneck, int(bottleneck * _CUT_BALANCE_SLACK))
         groups = _crossing_cut(weights, spans, cores, cap)
     out = {}
@@ -479,7 +510,9 @@ def partition_layout(network: Network, layout: MegakernelLayout,
                      cores: int = 1,
                      assign: Optional[Mapping[str, int]] = None,
                      objective: str = "crossing",
-                     forward_transients: bool = True) -> GridPartition:
+                     forward_transients: bool = True,
+                     profile: Optional[Mapping[str, Mapping[str, int]]]
+                     = None) -> GridPartition:
     """Partition the firing table across ``cores`` grid partitions.
 
     ``assign`` (actor name -> core) overrides the default cut; it must
@@ -487,7 +520,9 @@ def partition_layout(network: Network, layout: MegakernelLayout,
     (``Network.validate_partition``).  ``objective`` picks the default
     cut's criterion (see :func:`default_assignment`); under an explicit
     ``assign`` no heuristic runs and the partition records
-    ``objective="assign"``.  Intra-partition channels are placed in the
+    ``objective="assign"``.  ``profile`` carries the measured weights the
+    ``"profile"`` objective cuts on (ignored otherwise).  Intra-partition
+    channels are placed in the
     owning core's private scratch block; partition-crossing channels go
     :data:`SHARED` with their cursor rows acting as the polled
     semaphores.  With ``forward_transients`` (default) the core-private
@@ -503,7 +538,7 @@ def partition_layout(network: Network, layout: MegakernelLayout,
             f"got {objective!r}")
     if assign is None:
         assign = default_assignment(network, cores, layout=layout,
-                                    objective=objective)
+                                    objective=objective, profile=profile)
     else:
         objective = "assign"    # explicit map: no cut heuristic ran
     network.validate_partition(assign, cores)

@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import functools
+import time
 import warnings
 from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 
@@ -43,6 +44,8 @@ from repro.core.health import (Diagnostics, NetworkFaultError, decode_health)
 from repro.core.mapping import heterogeneous_split
 from repro.core.network import (Network, NetworkState, iteration_token_flops)
 from repro.core.schedule import phase_unroll_period
+from repro.core.trace import (TRACE_CAPACITY_DEFAULT, Trace, decode_trace,
+                              merge_traces)
 
 
 class Mode(str, enum.Enum):
@@ -81,7 +84,7 @@ _DONATE_AUTO_BUFFERED_BYTES_MAX = 1 << 20
 #: Partition-cut objectives of the megakernel grid backend (mirrors
 #: ``repro.core.megakernel.lower.CUT_OBJECTIVES``, duplicated here so a
 #: plan can validate without importing the Pallas-backed package).
-_CUT_OBJECTIVES = ("crossing", "flops")
+_CUT_OBJECTIVES = ("crossing", "flops", "profile")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,7 +164,10 @@ class ExecutionPlan:
                      semaphore surface) among contiguous cuts whose
                      ``cost_flops`` bottleneck stays within the balance
                      slack; ``"flops"`` is the legacy pure load-balance
-                     cut.  Ignored under an explicit ``assign``.
+                     cut; ``"profile"`` runs the crossing cut over
+                     *measured* weights from a traced run (requires
+                     ``profile=``).  Ignored under an explicit
+                     ``assign``.
       accelerated:   optional actor subset mapped to the accelerator: the
                      network is split (``heterogeneous_split``) and the
                      plan executes the accelerator subnetwork, with
@@ -178,6 +184,30 @@ class ExecutionPlan:
                      kernels are bit-identical to the pre-health runtime,
                      and clean guarded runs stay bit-identical too (the
                      guards observe channel ops, they never change them).
+      trace:         dynamic/megakernel modes: record one firing-level
+                     event per attempt (actor, sweep, fired-or-skipped,
+                     per-channel occupancy) into a fixed-capacity ring —
+                     loop-carried on the host dynamic executor, a
+                     device-side output ref inside the megakernel's sweep
+                     loop.  Decoded onto ``RunResult.trace`` as a
+                     :class:`repro.core.trace.Trace` (Perfetto export,
+                     derived :class:`repro.core.trace.Profile`).  Same
+                     off-path contract as ``guards``: ``trace=False``
+                     lowers to bit-identical HLO and traced runs never
+                     perturb states / cursors / fire counts / sweeps.
+      trace_capacity:
+                     event capacity of the trace ring (requires
+                     ``trace=True``); ``None`` uses
+                     :data:`repro.core.trace.TRACE_CAPACITY_DEFAULT`.
+                     Overflowing runs keep the newest events and report
+                     the drop count on ``Trace.dropped``.
+      profile:       megakernel mode: the measured weights the
+                     ``cut_objective="profile"`` partition cut uses — a
+                     :class:`repro.core.trace.Profile`, its
+                     ``as_cut_weights()`` dict (``{"actors": {...},
+                     "channels": {...}}``), or the frozen tuple form a
+                     previous plan normalized it to.  Required iff
+                     ``cut_objective="profile"``.
     """
 
     mode: Union[str, Mode] = "static"
@@ -196,6 +226,9 @@ class ExecutionPlan:
     cut_objective: str = "crossing"
     accelerated: Optional[Tuple[str, ...]] = None
     guards: bool = False
+    trace: bool = False
+    trace_capacity: Optional[int] = None
+    profile: Optional[Any] = None
 
     def __post_init__(self) -> None:
         if isinstance(self.mode, Mode):
@@ -236,6 +269,58 @@ class ExecutionPlan:
                 "channels away and the interpreter fires eagerly, so "
                 "neither has the per-channel cursor state the guards "
                 "watch")
+        if self.trace and self.mode not in ("dynamic", "megakernel"):
+            raise ValueError(
+                f"ExecutionPlan(mode={self.mode!r}): trace=True is a "
+                "sweep-loop observability knob of the dynamic and "
+                "megakernel backends; the static/interpreted schedules "
+                "have no firing attempts to record (every actor fires by "
+                "construction)")
+        if self.trace_capacity is not None:
+            if not self.trace:
+                raise ValueError(
+                    "ExecutionPlan.trace_capacity requires trace=True")
+            if (not isinstance(self.trace_capacity, int)
+                    or isinstance(self.trace_capacity, bool)
+                    or self.trace_capacity < 1):
+                raise ValueError(
+                    f"ExecutionPlan.trace_capacity must be None or an int "
+                    f">= 1, got {self.trace_capacity!r}")
+        if self.profile is not None:
+            # Accept a Profile, its as_cut_weights() mapping, or the
+            # frozen tuple form a prior plan normalized to (so
+            # dataclasses.replace round-trips); freeze to sorted pair
+            # tuples like `assign`.
+            prof = self.profile
+            if hasattr(prof, "as_cut_weights"):
+                prof = prof.as_cut_weights()
+            if isinstance(prof, tuple):
+                prof = {k: dict(v) for k, v in prof}
+            if (not isinstance(prof, Mapping) or "actors" not in prof
+                    or set(prof) - {"actors", "channels"}):
+                raise ValueError(
+                    "ExecutionPlan.profile must be a "
+                    "repro.core.trace.Profile or a mapping with 'actors' "
+                    f"(and optional 'channels') weights, got {prof!r}")
+            object.__setattr__(self, "profile", (
+                ("actors", tuple(sorted(
+                    (str(k), int(v))
+                    for k, v in dict(prof["actors"]).items()))),
+                ("channels", tuple(sorted(
+                    (str(k), int(v))
+                    for k, v in dict(prof.get("channels", {})).items()))),
+            ))
+        if self.cut_objective == "profile" and self.profile is None:
+            raise ValueError(
+                "ExecutionPlan(cut_objective='profile') needs measured "
+                "weights: run once with ExecutionPlan(trace=True), then "
+                "pass profile=RunResult.trace.profile() (or its "
+                ".as_cut_weights() dict)")
+        if self.profile is not None and self.cut_objective != "profile":
+            raise ValueError(
+                f"ExecutionPlan.profile is only consumed by "
+                f"cut_objective='profile', but the plan says "
+                f"{self.cut_objective!r}")
         if not (isinstance(self.donate, bool) or self.donate == "auto"):
             raise ValueError(
                 f"ExecutionPlan.donate must be True, False or 'auto', got "
@@ -278,13 +363,16 @@ class RunResult:
     megakernel runs — with guards off it still carries the ``stalled``
     flag (the sweep loop left through its budget, not quiescence); with
     ``ExecutionPlan(guards=True)`` it adds per-channel fault words and
-    high-water occupancy marks.
+    high-water occupancy marks.  ``trace`` is the decoded
+    :class:`repro.core.trace.Trace` of a ``plan.trace=True`` run
+    (firing-level events plus occupancy samples; None otherwise).
     """
 
     state: NetworkState
     fire_counts: Optional[Dict[str, jax.Array]] = None
     sweeps: Optional[jax.Array] = None
     diagnostics: Optional[Diagnostics] = None
+    trace: Optional[Trace] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -362,6 +450,30 @@ class ProgramStats:
     last_stream_staged_bytes_per_chunk: Optional[int] = None
     last_stream_total_staged_bytes: Optional[int] = None
 
+    #: Version of the :meth:`to_json` schema.  Bump ONLY when a field is
+    #: renamed/removed or its meaning changes; adding optional fields is
+    #: backward-compatible and keeps the version.
+    SCHEMA_VERSION = 1
+
+    def to_json(self) -> Dict[str, Any]:
+        """The stats as a ``json.dump``-able dict (committed schema).
+
+        Every dataclass field appears under its own name with tuples
+        lowered to lists; ``schema_version`` pins the layout so external
+        dashboards can parse dumps across repo versions.
+        """
+        def lower(v):
+            if isinstance(v, tuple):
+                return [lower(x) for x in v]
+            if isinstance(v, dict):
+                return {k: lower(x) for k, x in v.items()}
+            return v
+
+        doc: Dict[str, Any] = {"schema_version": self.SCHEMA_VERSION}
+        for f in dataclasses.fields(self):
+            doc[f.name] = lower(getattr(self, f.name))
+        return doc
+
 
 class Program:
     """A network compiled under a plan; run with :meth:`run` or
@@ -379,6 +491,9 @@ class Program:
         #: Telemetry of the last :meth:`stream` call (chunks / persistent /
         #: staged bytes), surfaced through :meth:`stats`.
         self._last_stream: Optional[Dict[str, Any]] = None
+        #: Merged :class:`repro.core.trace.Trace` across the last
+        #: :meth:`stream` call's chunks (None unless ``plan.trace``).
+        self.last_stream_trace: Optional[Trace] = None
         #: Full-length programs built lazily by persistent-feed streams,
         #: keyed by total window count (reused across stream() calls).
         self._persistent_progs: Dict[int, "Program"] = {}
@@ -407,7 +522,9 @@ class Program:
                 self.network, self._layout, plan.cores,
                 dict(plan.assign) if plan.assign is not None else None,
                 objective=plan.cut_objective,
-                forward_transients=plan.specialize)
+                forward_transients=plan.specialize,
+                profile=({k: dict(v) for k, v in plan.profile}
+                         if plan.profile is not None else None))
         # donate="auto" must never consume a state the *caller* passed in
         # (donated inputs are invalidated; callers legitimately reuse
         # states across runs), so auto donation applies only to run(None),
@@ -430,6 +547,8 @@ class Program:
     def _make_runner(self, donate: bool):
         plan = self.plan
         order = list(plan.order) if plan.order is not None else None
+        trace_cap = ((plan.trace_capacity or TRACE_CAPACITY_DEFAULT)
+                     if plan.trace else None)
         if plan.mode == "static":
             return _compile_static(
                 self.network, plan.n_iterations, mode=plan.runtime_mode,
@@ -439,14 +558,16 @@ class Program:
             return _compile_dynamic(
                 self.network, plan.max_sweeps, mode=plan.runtime_mode,
                 multi_firing=plan.multi_firing, donate=donate,
-                return_sweeps=True, guards=plan.guards)
+                return_sweeps=True, guards=plan.guards,
+                trace_capacity=trace_cap)
         if plan.mode == "megakernel":
             from repro.core.megakernel import compile_megakernel
             return compile_megakernel(
                 self.network, max_sweeps=plan.max_sweeps,
                 mode=plan.runtime_mode, multi_firing=plan.multi_firing,
                 interpret=plan.interpret, layout=self._layout,
-                partition=self._partition, guards=plan.guards)
+                partition=self._partition, guards=plan.guards,
+                trace_capacity=trace_cap)
         return functools.partial(
             _run_interpreted, self.network,
             n_iterations=plan.n_iterations, order=order, donate=donate)
@@ -515,19 +636,38 @@ class Program:
             donate_now = self.plan.donate is True
         runner = self._runners[donate_now]
         if self.plan.mode in ("dynamic", "megakernel"):
+            t0 = time.perf_counter() if self.plan.trace else None
             if self.plan.mode == "dynamic":
-                final, counts, sweeps, stalled, health = runner(st)
+                final, counts, sweeps, stalled, health, trc = runner(st)
             else:
                 res = runner(st)     # _MegaResult: 3-tuple + attributes
                 final, counts, sweeps = res
                 stalled, health = res.stalled, res.health
+                trc = res.trace
             # One scalar host sync; a stalled exit then pays the eager
             # per-actor forensics, the path where latency is moot.
             stalled_b = bool(stalled)
+            trace = None
+            if trc is not None:
+                # The bool() sync above blocked until the computation
+                # finished, so this wall-clock covers the whole run —
+                # the per-firing cost attribution is proportional, not a
+                # per-event clock (none exists inside one jitted sweep
+                # loop).
+                dt = time.perf_counter() - t0
+                cores = None
+                part = self._partition
+                if part is not None and part.n_cores > 1:
+                    names = tuple(self.network.actors)
+                    cores = {names[i]: c
+                             for c, rows in enumerate(part.core_rows)
+                             for i in rows}
+                trace = decode_trace(self.network, trc, wall_time_s=dt,
+                                     actor_cores=cores)
             diag = decode_health(self.network, health, stalled_b,
                                  final if stalled_b else None)
             result = RunResult(final, fire_counts=counts, sweeps=sweeps,
-                               diagnostics=diag)
+                               diagnostics=diag, trace=trace)
             self._last = result
             self._last_is_stream_chunk = False
             if not diag.ok:
@@ -813,6 +953,7 @@ class Program:
             # full-length twin program, not this chunk-length one.
             self._last = result
             self._last_is_stream_chunk = True
+            self.last_stream_trace = result.trace
             self._last_stream = {
                 "chunks": n_chunks, "persistent": True,
                 "staged_bytes_per_chunk": slab_bytes,
@@ -822,6 +963,8 @@ class Program:
                     for f in self._fetch_by_fifo}
         state = self.init_state()
         outs: Dict[str, list] = {f: [] for f in self._fetch_by_fifo}
+        chunk_traces: List[Trace] = []
+        self.last_stream_trace = None
         retrying = on_fault in ("resume", "skip")
         for c in range(n_chunks):
             # The per-chunk checkpoint: the last good NetworkState, before
@@ -847,7 +990,10 @@ class Program:
                                             jnp.int32(0)))
                 attempts += 1
                 try:
-                    state = self.run(base).state
+                    chunk_res = self.run(base)
+                    state = chunk_res.state
+                    if chunk_res.trace is not None:
+                        chunk_traces.append(chunk_res.trace)
                     # Guard collect() immediately (not after the loop): the
                     # implicit last state holds only this chunk's fetch
                     # slabs, not the whole stream — and must stay guarded
@@ -882,6 +1028,10 @@ class Program:
             "staged_bytes_per_chunk": ring_bytes + slab_bytes,
             "total_staged_bytes": n_chunks * (ring_bytes + slab_bytes),
         }
+        # One Trace across the whole stream: later chunks' sweep numbers
+        # are offset past the earlier chunks', so per-actor firing counts
+        # and occupancy series read as a single run.
+        self.last_stream_trace = merge_traces(chunk_traces)
         return {f: jnp.concatenate(ws, axis=0) for f, ws in outs.items()}
 
     # ------------------------------------------------------------------ #

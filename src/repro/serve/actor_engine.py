@@ -53,6 +53,9 @@ class ActorEngine:
         self.last_sweeps: Optional[int] = None
         self.last_latency_steps: Optional[np.ndarray] = None
         self.last_program = None
+        #: Decoded firing trace of the last generate() call (None unless
+        #: the plan says trace=True).
+        self.last_trace = None
 
     # ------------------------------------------------------------------ #
     def build_network(self, requests: Sequence[Request],
@@ -98,6 +101,7 @@ class ActorEngine:
                 if res.fire_counts is not None else None)
             self.last_sweeps = (int(res.sweeps)
                                 if res.sweeps is not None else None)
+            self.last_trace = res.trace
             sink = prog.collect("retire", res.state)
             done = np.asarray(sink["done"])
             if not done.all():

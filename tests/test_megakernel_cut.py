@@ -29,7 +29,9 @@ jax.config.update("jax_platform_name", "cpu")
 @pytest.fixture(scope="module")
 def dpd():
     net, _ = make_dpd(n_firings=4, block_l=128)
-    return net, net.compile(ExecutionPlan(mode="dynamic")).run()
+    # trace=True is off-path bit-identical (test_trace.py) and hands the
+    # "profile" cut objective its measured weights for free.
+    return net, net.compile(ExecutionPlan(mode="dynamic", trace=True)).run()
 
 
 # --------------------------------------------------------------------------- #
@@ -38,8 +40,9 @@ def dpd():
 @pytest.mark.parametrize("cores", (2, 4))
 def test_crossing_cut_reduces_shared_scratch_on_dpd(cores, dpd):
     net, dyn = dpd
-    progs = {obj: net.compile(ExecutionPlan(mode=MEGAKERNEL, cores=cores,
-                                            cut_objective=obj))
+    progs = {obj: net.compile(ExecutionPlan(
+                 mode=MEGAKERNEL, cores=cores, cut_objective=obj,
+                 profile=(dyn.trace.profile() if obj == "profile" else None)))
              for obj in CUT_OBJECTIVES}
     stats = {obj: p.stats() for obj, p in progs.items()}
     assert stats["crossing"].cut_objective == "crossing"

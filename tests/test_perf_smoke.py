@@ -200,3 +200,21 @@ def test_bench_kernels():
 def test_bench_roofline():
     from benchmarks.roofline import bench_roofline
     check_rows(bench_roofline())
+
+
+def test_actor_roofline_rows_cover_graph():
+    # The live actor-level rows keep the roofline section exercised even
+    # with no results/dryrun.json: one row per DPD actor, intensity
+    # consistent with the stats it was computed from.
+    from benchmarks.roofline import actor_roofline_rows
+    from repro.graphs.factories import make_dpd
+
+    rows = actor_roofline_rows()
+    check_rows(rows)
+    net, _ = make_dpd(n_firings=4, block_l=256)
+    names = {f"actor_roofline_dpd_{nm}" for nm in net.actors}
+    got = {name for name, _, _ in rows}
+    assert names <= got
+    assert "actor_roofline_dpd_iteration_flops" in got
+    assert all("intensity=" in derived for name, _, derived in rows
+               if name in names)
