@@ -37,7 +37,8 @@ from repro.core.program import (MEGAKERNEL, ExecutionPlan, Mode, Program,
                                 ProgramStats, RunResult)
 from repro.core.trace import (TRACE_CAPACITY_DEFAULT, Profile, Trace,
                               TraceState, decode_trace, init_trace,
-                              merge_traces, validate_chrome_trace)
+                              merge_device_traces, merge_traces,
+                              validate_chrome_trace)
 
 # Megakernel names resolve lazily (module __getattr__ below): the backend
 # imports jax.experimental.pallas(+tpu), ~1 s of import cost every
@@ -47,11 +48,20 @@ _MEGAKERNEL_EXPORTS = ("GridPartition", "MegakernelLayout",
                        "lower_network", "partition_layout",
                        "state_hbm_bytes")
 
+# Sharding names resolve lazily too: repro.core.shard reuses the
+# megakernel partition pass, so importing it pulls the same pallas
+# dependency chain.
+_SHARD_EXPORTS = ("build_device_partition", "collective_bytes_per_sweep",
+                  "compile_sharded", "decode_device_trace")
+
 
 def __getattr__(name: str):
     if name in _MEGAKERNEL_EXPORTS:
         from repro.core import megakernel
         return getattr(megakernel, name)
+    if name in _SHARD_EXPORTS:
+        from repro.core import shard
+        return getattr(shard, name)
     raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
 from repro.core.mapping import (
     Placement,
@@ -79,10 +89,13 @@ __all__ = [
     "ExecutionPlan", "MEGAKERNEL", "Mode", "Program", "ProgramStats",
     "RunResult",
     "TRACE_CAPACITY_DEFAULT", "Profile", "Trace", "TraceState",
-    "decode_trace", "init_trace", "merge_traces", "validate_chrome_trace",
+    "decode_trace", "init_trace", "merge_traces", "merge_device_traces",
+    "validate_chrome_trace",
     "GridPartition", "MegakernelLayout", "compile_megakernel",
     "default_assignment", "lower_network", "partition_layout",
     "state_hbm_bytes",
+    "build_device_partition", "collective_bytes_per_sweep",
+    "compile_sharded", "decode_device_trace",
     "RuntimeMode", "assert_mode_allows", "collect_sink", "compile_dynamic",
     "compile_static", "fire_actor", "make_iteration_step", "run_interpreted",
     "Placement", "boundary_fifos", "heterogeneous_split", "partition_actors",

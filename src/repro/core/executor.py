@@ -53,6 +53,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import functools
+import os
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -532,6 +533,72 @@ def _max_fireable(network: Network, name: str, state: NetworkState) -> jax.Array
     return k
 
 
+def _make_visit_body(network: Network, names: List[str],
+                     multi_firing: bool) -> Callable:
+    """One in-order visit of ``names``: the token-driven sweep body.
+
+    Shared by the single-device dynamic executor (``names`` = every
+    actor) and the per-device sub-sweeps of the sharded executor
+    (:mod:`repro.core.shard`, ``names`` = one device's partition of the
+    firing table) — both backends fire the identical per-actor logic, so
+    sharded quiescence states stay bit-identical to the single-device
+    run by Kahn determinism.
+
+    Returns ``visit_all(state, counts, hlth, trc, sweeps) -> (state,
+    counts, hlth, trc, fired_any)``: each named actor is attempted (up
+    to its occupancy bound under ``multi_firing``), guarded per firing
+    by ``_can_fire``, with the optional health/trace slots following
+    the empty-pytree-when-off contract of ``_compile_dynamic``.
+    """
+    n_fifos = len(network.fifos)
+
+    def fire_once(nm: str, state, counts, hlth, trc, sweeps):
+        ready = _can_fire(network, nm, state)
+
+        def do_fire(operand):
+            st, c, h = operand
+            if h is None:
+                st = fire_actor(network, nm, st)
+            else:
+                st, h = fire_actor(network, nm, st, health=h)
+            c = dict(c)
+            c[nm] = c[nm] + 1
+            return st, c, h
+
+        state, counts, hlth = jax.lax.cond(ready, do_fire, lambda o: o,
+                                           (state, counts, hlth))
+        if trc is not None:
+            # One event per attempt — fired or skipped — with post-attempt
+            # occupancies, recorded unconditionally so tracing never
+            # perturbs the schedule's control flow.
+            occs = jnp.stack([state.fifos[i].occ for i in range(n_fifos)])
+            trc = trc.record(network.actor_index[nm], sweeps, ready, occs)
+        return state, counts, hlth, trc, ready
+
+    def visit_all(state, counts, hlth, trc, sweeps):
+        fired_any = jnp.bool_(False)
+        for nm in names:
+            if multi_firing:
+                k = _max_fireable(network, nm, state)
+
+                def body(_, c, nm=nm):
+                    st, cnt, h, t, fired = c
+                    st, cnt, h, t, ready = fire_once(nm, st, cnt, h, t,
+                                                     sweeps)
+                    return st, cnt, h, t, jnp.logical_or(fired, ready)
+
+                state, counts, hlth, trc, fired = jax.lax.fori_loop(
+                    0, k, body, (state, counts, hlth, trc,
+                                 jnp.bool_(False)))
+            else:
+                state, counts, hlth, trc, fired = fire_once(
+                    nm, state, counts, hlth, trc, sweeps)
+            fired_any = jnp.logical_or(fired_any, fired)
+        return state, counts, hlth, trc, fired_any
+
+    return visit_all
+
+
 def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
                      mode: RuntimeMode = RuntimeMode.PROPOSED,
                      multi_firing: bool = True,
@@ -580,51 +647,12 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
     """
     assert_mode_allows(network, mode)
     names = list(network.actors)
-    n_fifos = len(network.fifos)
-
-    def fire_once(nm: str, state, counts, hlth, trc, sweeps):
-        ready = _can_fire(network, nm, state)
-
-        def do_fire(operand):
-            st, c, h = operand
-            if h is None:
-                st = fire_actor(network, nm, st)
-            else:
-                st, h = fire_actor(network, nm, st, health=h)
-            c = dict(c)
-            c[nm] = c[nm] + 1
-            return st, c, h
-
-        state, counts, hlth = jax.lax.cond(ready, do_fire, lambda o: o,
-                                           (state, counts, hlth))
-        if trc is not None:
-            # One event per attempt — fired or skipped — with post-attempt
-            # occupancies, recorded unconditionally so tracing never
-            # perturbs the schedule's control flow.
-            occs = jnp.stack([state.fifos[i].occ for i in range(n_fifos)])
-            trc = trc.record(network.actor_index[nm], sweeps, ready, occs)
-        return state, counts, hlth, trc, ready
+    visit_all = _make_visit_body(network, names, multi_firing)
 
     def sweep(carry):
         state, counts, hlth, trc, _, sweeps = carry
-        fired_any = jnp.bool_(False)
-        for nm in names:
-            if multi_firing:
-                k = _max_fireable(network, nm, state)
-
-                def body(_, c, nm=nm):
-                    st, cnt, h, t, fired = c
-                    st, cnt, h, t, ready = fire_once(nm, st, cnt, h, t,
-                                                     sweeps)
-                    return st, cnt, h, t, jnp.logical_or(fired, ready)
-
-                state, counts, hlth, trc, fired = jax.lax.fori_loop(
-                    0, k, body, (state, counts, hlth, trc,
-                                 jnp.bool_(False)))
-            else:
-                state, counts, hlth, trc, fired = fire_once(
-                    nm, state, counts, hlth, trc, sweeps)
-            fired_any = jnp.logical_or(fired_any, fired)
+        state, counts, hlth, trc, fired_any = visit_all(
+            state, counts, hlth, trc, sweeps)
         return state, counts, hlth, trc, fired_any, sweeps + 1
 
     def cond(carry):
@@ -636,7 +664,7 @@ def _compile_dynamic(network: Network, max_sweeps: int = 1_000_000,
             state = network.state_from_dict(state)
         counts = {nm: jnp.int32(0) for nm in names}
         hlth = init_health(len(network.fifos)) if guards else None
-        trc = (init_trace(n_fifos, trace_capacity)
+        trc = (init_trace(len(network.fifos), trace_capacity)
                if trace_capacity else None)
         carry = (state, counts, hlth, trc, jnp.bool_(True), jnp.int32(0))
         state, counts, hlth, trc, fired_any, sweeps = jax.lax.while_loop(
@@ -713,12 +741,17 @@ def reset_deprecation_warnings() -> None:
 
 
 def _warn_deprecated(old: str, new: str) -> None:
+    msg = (f"{old} is deprecated; use {new} (see ExecutionPlan and "
+           "ExecutionPlan.validate in repro.core.program for the plan "
+           "fields and the cross-field rules they must satisfy)")
+    if os.environ.get("REPRO_STRICT_DEPRECATION") == "1":
+        # CI's retirement gate: legacy entrypoints become hard errors so
+        # no new call site can land while the shims still exist.
+        raise DeprecationWarning(msg)
     if old in _DEPRECATION_WARNED:
         return
     _DEPRECATION_WARNED.add(old)
-    warnings.warn(
-        f"{old} is deprecated; use {new} (see ExecutionPlan in "
-        "repro.core.program)", DeprecationWarning, stacklevel=3)
+    warnings.warn(msg, DeprecationWarning, stacklevel=3)
 
 
 def compile_static(network: Network, n_iterations: int,

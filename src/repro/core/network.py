@@ -485,7 +485,7 @@ class Network:
         return out
 
     def validate_partition(self, assignment: Mapping[str, int],
-                           cores: int) -> None:
+                           cores: int, unit: str = "core") -> None:
         """Check an actor -> core map against the grid-partition rules.
 
         The map must cover every actor exactly (the megakernel firing
@@ -494,6 +494,13 @@ class Network:
         delay channel with ``delay < rate`` on one core (see
         :meth:`delay_partition_constraints`).  Raises ``ValueError``
         with the offending actors/channels otherwise.
+
+        ``unit`` names the partition axis in errors: ``"core"`` for the
+        megakernel grid, ``"device"`` for multi-device sharded plans
+        (``ExecutionPlan(devices=k)``) — the rules are identical, only
+        the synchronization primitive differs (polled cursor semaphores
+        vs sweep-barrier collectives), and the delay-channel constraint
+        covers both for the same Fig. 2 copy-back reason.
         """
         unknown = set(assignment) - set(self.actors)
         if unknown:
@@ -503,14 +510,14 @@ class Network:
         missing = set(self.actors) - set(assignment)
         if missing:
             raise ValueError(
-                "partition assignment must map every actor to a core "
+                f"partition assignment must map every actor to a {unit} "
                 f"(the firing table is partitioned, not filtered); "
                 f"missing {sorted(missing)}")
         bad = {n: c for n, c in assignment.items()
                if not isinstance(c, int) or not 0 <= c < cores}
         if bad:
             raise ValueError(
-                f"partition assignment maps actors to cores outside "
+                f"partition assignment maps actors to {unit}s outside "
                 f"[0, {cores}): {dict(sorted(bad.items()))}")
         for fifo, src, dst in self.delay_partition_constraints():
             if assignment[src] != assignment[dst]:
@@ -518,12 +525,11 @@ class Network:
                 raise ValueError(
                     f"delay channel {fifo!r} ({src} -> {dst}, rate "
                     f"{spec.rate}, delay {spec.delay}) may not cross "
-                    f"partitions (cores {assignment[src]} vs "
+                    f"partitions ({unit}s {assignment[src]} vs "
                     f"{assignment[dst]}): its initial tokens do not "
                     "cover a whole read window (delay < rate), so the "
                     "Fig. 2 copy-back races the remote reader's phase-0 "
-                    "window under cursor-semaphore sync; assign both "
-                    "endpoints to one core")
+                    f"window; assign both endpoints to one {unit}")
 
 
 def repetition_vector(network: Network) -> Dict[str, int]:

@@ -208,6 +208,27 @@ class ExecutionPlan:
                      "channels": {...}}``), or the frozen tuple form a
                      previous plan normalized it to.  Required iff
                      ``cut_objective="profile"``.
+      devices:       dynamic mode: shard the network across ``devices``
+                     devices of a 1-D mesh (:mod:`repro.core.shard`) —
+                     the JAX-native analogue of the paper's GPP+GPU
+                     command queues.  The firing table is partitioned by
+                     the same crossing-bytes cut as the megakernel grid
+                     (``cores`` = devices); each device sweeps only its
+                     own actors, partition-crossing channels exchange
+                     ring tokens + cursor rows via collective permutes
+                     at sweep barriers (instead of same-address-space
+                     cursor polling), and quiescence is an all-reduce of
+                     per-device progress flags.  Final states / ring
+                     bytes / cursors / fire counts are bit-identical to
+                     the single-device dynamic executor for every device
+                     count (Kahn determinism); sweep counts are not part
+                     of that contract (barrier rounds replace sweeps).
+                     ``devices=1`` is exactly the plain dynamic path.
+      device_assign: optional explicit actor -> device map for
+                     ``devices > 1`` (must cover every actor; validated
+                     by ``Network.validate_partition`` with the same
+                     delay-channel crossing rule as the grid).  Default
+                     is the ``cut_objective`` contiguous cut.
     """
 
     mode: Union[str, Mode] = "static"
@@ -229,8 +250,19 @@ class ExecutionPlan:
     trace: bool = False
     trace_capacity: Optional[int] = None
     profile: Optional[Any] = None
+    devices: int = 1
+    device_assign: Optional[Mapping[str, int]] = None
 
     def __post_init__(self) -> None:
+        """Field-local normalization and value checks only.
+
+        Everything that relates two plan fields (or a plan field to the
+        network) lives in :meth:`validate`, which ``Network.compile`` /
+        :class:`Program` call before building anything — so a plan
+        record can always be *constructed* field by field (e.g. by an
+        autotuner enumerating the space) and is judged as a whole at
+        compile time.
+        """
         if isinstance(self.mode, Mode):
             object.__setattr__(self, "mode", self.mode.value)
         if self.mode not in _MODES:
@@ -241,6 +273,11 @@ class ExecutionPlan:
             raise ValueError(
                 f"ExecutionPlan.cores must be an int >= 1, got "
                 f"{self.cores!r}")
+        if not isinstance(self.devices, int) \
+                or isinstance(self.devices, bool) or self.devices < 1:
+            raise ValueError(
+                f"ExecutionPlan.devices must be an int >= 1, got "
+                f"{self.devices!r}")
         if self.assign is not None:
             # Freeze to a sorted pair tuple so the frozen plan stays
             # immutable (callers may pass any mapping).
@@ -248,44 +285,22 @@ class ExecutionPlan:
                 self, "assign",
                 tuple(sorted((str(k), int(v))
                              for k, v in dict(self.assign).items())))
+        if self.device_assign is not None:
+            object.__setattr__(
+                self, "device_assign",
+                tuple(sorted((str(k), int(v))
+                             for k, v in dict(self.device_assign).items())))
         if self.cut_objective not in _CUT_OBJECTIVES:
             raise ValueError(
                 f"ExecutionPlan.cut_objective must be one of "
                 f"{_CUT_OBJECTIVES}, got {self.cut_objective!r}")
-        if (self.cores != 1 or self.assign is not None
-                or self.cut_objective != "crossing") \
-                and self.mode != "megakernel":
+        if self.trace_capacity is not None and (
+                not isinstance(self.trace_capacity, int)
+                or isinstance(self.trace_capacity, bool)
+                or self.trace_capacity < 1):
             raise ValueError(
-                f"ExecutionPlan(mode={self.mode!r}): cores=/assign=/"
-                "cut_objective= are grid-partition knobs of the megakernel "
-                "backend; the host executors have no core axis (use "
-                "mode=Mode.MEGAKERNEL, or accelerated=[...] for "
-                "host/accelerator placement)")
-        if self.guards and self.mode not in ("dynamic", "megakernel"):
-            raise ValueError(
-                f"ExecutionPlan(mode={self.mode!r}): guards=True is a "
-                "sweep-loop health knob of the dynamic and megakernel "
-                "backends; the static specializer register-allocates its "
-                "channels away and the interpreter fires eagerly, so "
-                "neither has the per-channel cursor state the guards "
-                "watch")
-        if self.trace and self.mode not in ("dynamic", "megakernel"):
-            raise ValueError(
-                f"ExecutionPlan(mode={self.mode!r}): trace=True is a "
-                "sweep-loop observability knob of the dynamic and "
-                "megakernel backends; the static/interpreted schedules "
-                "have no firing attempts to record (every actor fires by "
-                "construction)")
-        if self.trace_capacity is not None:
-            if not self.trace:
-                raise ValueError(
-                    "ExecutionPlan.trace_capacity requires trace=True")
-            if (not isinstance(self.trace_capacity, int)
-                    or isinstance(self.trace_capacity, bool)
-                    or self.trace_capacity < 1):
-                raise ValueError(
-                    f"ExecutionPlan.trace_capacity must be None or an int "
-                    f">= 1, got {self.trace_capacity!r}")
+                f"ExecutionPlan.trace_capacity must be None or an int "
+                f">= 1, got {self.trace_capacity!r}")
         if self.profile is not None:
             # Accept a Profile, its as_cut_weights() mapping, or the
             # frozen tuple form a prior plan normalized to (so
@@ -310,17 +325,6 @@ class ExecutionPlan:
                     (str(k), int(v))
                     for k, v in dict(prof.get("channels", {})).items()))),
             ))
-        if self.cut_objective == "profile" and self.profile is None:
-            raise ValueError(
-                "ExecutionPlan(cut_objective='profile') needs measured "
-                "weights: run once with ExecutionPlan(trace=True), then "
-                "pass profile=RunResult.trace.profile() (or its "
-                ".as_cut_weights() dict)")
-        if self.profile is not None and self.cut_objective != "profile":
-            raise ValueError(
-                f"ExecutionPlan.profile is only consumed by "
-                f"cut_objective='profile', but the plan says "
-                f"{self.cut_objective!r}")
         if not (isinstance(self.donate, bool) or self.donate == "auto"):
             raise ValueError(
                 f"ExecutionPlan.donate must be True, False or 'auto', got "
@@ -336,6 +340,91 @@ class ExecutionPlan:
             object.__setattr__(self, "order", tuple(self.order))
         if self.accelerated is not None:
             object.__setattr__(self, "accelerated", tuple(self.accelerated))
+        if self.n_iterations is not None and self.n_iterations < 0:
+            raise ValueError(
+                f"ExecutionPlan: n_iterations must be >= 0, got "
+                f"{self.n_iterations}")
+
+    def validate(self, network: "Network", *,
+                 stream_persistent: Optional[bool] = None,
+                 stream_on_fault: Optional[str] = None) -> "ExecutionPlan":
+        """Judge the plan as a whole against ``network`` — THE cross-field
+        rule book, called by ``Network.compile`` (via ``Program``) before
+        anything is built and by ``Program.stream`` before a stream runs.
+
+        Each rule raises a single-sentence ``ValueError`` naming the
+        offending field pair.  ``__post_init__`` only checks fields in
+        isolation, so a plan object can always be constructed; it becomes
+        a *valid* plan only relative to a network.  The stream-only rules
+        engage when ``stream_persistent`` / ``stream_on_fault`` are
+        passed (``Program.stream`` forwards its arguments); plain
+        compiles leave them None.  Returns ``self`` so call sites can
+        chain ``plan.validate(net)``.
+        """
+        if (self.cores != 1 or self.assign is not None
+                or self.cut_objective != "crossing") \
+                and self.mode != "megakernel":
+            raise ValueError(
+                f"ExecutionPlan(mode={self.mode!r}): cores=/assign=/"
+                "cut_objective= are grid-partition knobs of the megakernel "
+                "backend; the host executors have no core axis (use "
+                "mode=Mode.MEGAKERNEL, or accelerated=[...] for "
+                "host/accelerator placement)")
+        if self.guards and self.mode not in ("dynamic", "megakernel"):
+            raise ValueError(
+                f"ExecutionPlan(mode={self.mode!r}): guards=True is a "
+                "sweep-loop health knob of the dynamic and megakernel "
+                "backends; the static specializer register-allocates its "
+                "channels away and the interpreter fires eagerly, so "
+                "neither has the per-channel cursor state the guards "
+                "watch")
+        if self.trace and self.mode not in ("dynamic", "megakernel"):
+            raise ValueError(
+                f"ExecutionPlan(mode={self.mode!r}): trace=True is a "
+                "sweep-loop observability knob of the dynamic and "
+                "megakernel backends; the static/interpreted schedules "
+                "have no firing attempts to record (every actor fires by "
+                "construction)")
+        if self.trace_capacity is not None and not self.trace:
+            raise ValueError(
+                "ExecutionPlan.trace_capacity requires trace=True")
+        if self.cut_objective == "profile" and self.profile is None:
+            raise ValueError(
+                "ExecutionPlan(cut_objective='profile') needs measured "
+                "weights: run once with ExecutionPlan(trace=True), then "
+                "pass profile=RunResult.trace.profile() (or its "
+                ".as_cut_weights() dict)")
+        if self.profile is not None and self.cut_objective != "profile":
+            raise ValueError(
+                f"ExecutionPlan.profile is only consumed by "
+                f"cut_objective='profile', but the plan says "
+                f"{self.cut_objective!r}")
+        if self.devices > 1 and self.cores != 1:
+            raise ValueError(
+                f"ExecutionPlan(devices={self.devices}, cores="
+                f"{self.cores}): devices= (the mesh axis) and cores= (the "
+                "megakernel grid axis) are exclusive — pick one partition "
+                "axis per plan")
+        if self.device_assign is not None and self.devices == 1:
+            raise ValueError(
+                "ExecutionPlan(device_assign=..., devices=1): "
+                "device_assign places actors on mesh devices, so it "
+                "requires devices > 1 (use assign= for the megakernel "
+                "grid's core map)")
+        if self.devices > 1 and self.mode != "dynamic":
+            raise ValueError(
+                f"ExecutionPlan(mode={self.mode!r}, devices="
+                f"{self.devices}): multi-device sharding runs the "
+                "token-driven dynamic executor per device; use "
+                "mode='dynamic' (one megakernel per device is a ROADMAP "
+                "item, not a plan knob yet)")
+        if self.devices > 1 and self.accelerated is not None:
+            raise ValueError(
+                f"ExecutionPlan(devices={self.devices}, "
+                "accelerated=[...]): sharding and heterogeneous "
+                "host/accelerator placement are exclusive — the mesh IS "
+                "the accelerator set under devices=, so drop "
+                "accelerated= (or stream with devices=1)")
         needs_iters = (self.mode in ("static", "interpreted")
                        or self.accelerated is not None)
         if needs_iters and self.n_iterations is None:
@@ -346,10 +435,36 @@ class ExecutionPlan:
                 "compile a fixed iteration count, and heterogeneous plans "
                 "size their boundary feed/fetch slabs with it (dynamic "
                 "mode alone runs to quiescence without one)")
-        if self.n_iterations is not None and self.n_iterations < 0:
-            raise ValueError(
-                f"ExecutionPlan: n_iterations must be >= 0, got "
-                f"{self.n_iterations}")
+        if self.accelerated is not None:
+            unknown = set(self.accelerated) - set(network.actors)
+            if unknown:
+                raise ValueError(
+                    f"ExecutionPlan.accelerated names unknown actors "
+                    f"{sorted(unknown)}; known: {sorted(network.actors)}")
+        if self.assign is not None and self.accelerated is None:
+            # Explicit core maps must cover the executed network; under
+            # accelerated= the executed network is the split subnetwork,
+            # whose partition_layout re-validates against the right
+            # actor set.
+            network.validate_partition(dict(self.assign), self.cores)
+        if self.device_assign is not None:
+            network.validate_partition(dict(self.device_assign),
+                                       self.devices, unit="device")
+        if stream_persistent is not None or stream_on_fault is not None:
+            if self.accelerated is None:
+                raise ValueError(
+                    "Program.stream: this plan has no heterogeneous "
+                    "placement; pass ExecutionPlan(accelerated=[...], "
+                    "n_iterations=chunk) so boundary channels become "
+                    "host feed/fetch actors")
+            if stream_persistent and stream_on_fault not in (None, "raise"):
+                raise ValueError(
+                    f"Program.stream: persistent=True runs the whole "
+                    f"stream as one entry and keeps no per-chunk "
+                    f"checkpoints, so on_fault={stream_on_fault!r} has "
+                    "nothing to restore; use on_fault='raise' or the "
+                    "chunked loop")
+        return self
 
 
 @dataclasses.dataclass(frozen=True)
@@ -417,6 +532,16 @@ class ProgramStats:
     (the partition cut's criterion) and ``partition_fire_counts``
     (firings per core in the last run — the occupancy telemetry of each
     core's bounded firing loop).
+
+    Sharded programs (``plan.devices > 1`` — :mod:`repro.core.shard`)
+    report ``devices`` (always present; 1 when unsharded),
+    ``device_partition_actors`` (actor names per mesh device, visit
+    order), ``collective_bytes_per_sweep`` (bytes every sweep-barrier
+    exchange moves: each crossing channel's ring + rd/wr cursor pair,
+    plus the quiescence flag — the collective analogue of the grid's
+    ``shared_scratch_bytes`` polling surface) and
+    ``quiescence_allreduces`` (barrier rounds of the last run, one
+    progress all-reduce each).
     """
 
     mode: str
@@ -449,11 +574,20 @@ class ProgramStats:
     last_stream_persistent: Optional[bool] = None
     last_stream_staged_bytes_per_chunk: Optional[int] = None
     last_stream_total_staged_bytes: Optional[int] = None
+    devices: int = 1
+    device_partition_actors: Optional[Tuple[Tuple[str, ...], ...]] = None
+    collective_bytes_per_sweep: Optional[int] = None
+    quiescence_allreduces: Optional[int] = None
 
     #: Version of the :meth:`to_json` schema.  Bump ONLY when a field is
     #: renamed/removed or its meaning changes; adding optional fields is
-    #: backward-compatible and keeps the version.
-    SCHEMA_VERSION = 1
+    #: backward-compatible and keeps the version.  v2 (multi-device
+    #: sharding): added ``devices`` (now always present, 1 when
+    #: unsharded — the semantic change behind the bump) plus the
+    #: sharding telemetry ``device_partition_actors`` /
+    #: ``collective_bytes_per_sweep`` / ``quiescence_allreduces``;
+    #: every v1 field survives unchanged, so v1 consumers keep parsing.
+    SCHEMA_VERSION = 2
 
     def to_json(self) -> Dict[str, Any]:
         """The stats as a ``json.dump``-able dict (committed schema).
@@ -499,12 +633,10 @@ class Program:
         self._persistent_progs: Dict[int, "Program"] = {}
         self._feed_by_fifo: Dict[str, str] = {}
         self._fetch_by_fifo: Dict[str, str] = {}
+        # THE cross-field rule book: every plan x network combination is
+        # judged here (and only here) before anything is built.
+        plan.validate(network)
         if plan.accelerated is not None:
-            unknown = set(plan.accelerated) - set(network.actors)
-            if unknown:
-                raise ValueError(
-                    f"ExecutionPlan.accelerated names unknown actors "
-                    f"{sorted(unknown)}; known: {sorted(network.actors)}")
             sub, feeds, fetches = heterogeneous_split(
                 network, list(plan.accelerated), plan.n_iterations)
             self.network = sub
@@ -515,6 +647,8 @@ class Program:
         self.donate = self._resolve_donate(plan, self.network)
         self._layout = None
         self._partition = None
+        self._shard_layout = None
+        self._shard_partition = None
         if plan.mode == "megakernel":
             from repro.core.megakernel import lower_network, partition_layout
             self._layout = lower_network(self.network)
@@ -525,16 +659,33 @@ class Program:
                 forward_transients=plan.specialize,
                 profile=({k: dict(v) for k, v in plan.profile}
                          if plan.profile is not None else None))
+        if plan.devices > 1:
+            if jax.device_count() < plan.devices:
+                raise RuntimeError(
+                    f"ExecutionPlan(devices={plan.devices}): only "
+                    f"{jax.device_count()} JAX device(s) visible; on a CPU "
+                    "host force a bigger mesh with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={plan.devices} "
+                    "(set before jax initializes)")
+            from repro.core.shard import build_device_partition
+            self._shard_layout, self._shard_partition = \
+                build_device_partition(
+                    self.network, plan.devices,
+                    device_assign=(dict(plan.device_assign)
+                                   if plan.device_assign is not None
+                                   else None),
+                    cut_objective=plan.cut_objective)
         # donate="auto" must never consume a state the *caller* passed in
         # (donated inputs are invalidated; callers legitimately reuse
         # states across runs), so auto donation applies only to run(None),
         # where the program donates its own private copy.  Two runners are
         # built for that case; jit tracing is lazy, so an unused variant
         # costs nothing.
-        if plan.mode == "megakernel":
-            # Donation is meaningless here (buffers are staged through
-            # kernel scratch): one runner serves both donate paths and
-            # no private copy is ever made (_resolve_donate -> False).
+        if plan.mode == "megakernel" or plan.devices > 1:
+            # Donation is meaningless here (megakernel buffers are staged
+            # through kernel scratch; sharded state is replicated across
+            # the mesh): one runner serves both donate paths and no
+            # private copy is ever made (_resolve_donate -> False).
             runner = self._make_runner(False)
             self._runners = {False: runner, True: runner}
         elif isinstance(plan.donate, bool):
@@ -555,6 +706,13 @@ class Program:
                 order=order, donate=donate, specialize=plan.specialize,
                 unroll_bound=plan.unroll_bound)
         if plan.mode == "dynamic":
+            if plan.devices > 1:
+                from repro.core.shard import compile_sharded
+                return compile_sharded(
+                    self.network, self._shard_layout, self._shard_partition,
+                    plan.max_sweeps, mode=plan.runtime_mode,
+                    multi_firing=plan.multi_firing, guards=plan.guards,
+                    trace_capacity=trace_cap)
             return _compile_dynamic(
                 self.network, plan.max_sweeps, mode=plan.runtime_mode,
                 multi_firing=plan.multi_firing, donate=donate,
@@ -585,6 +743,10 @@ class Program:
         """
         if plan.mode == "megakernel":
             return False    # even explicit donate=True: nothing to donate
+        if plan.devices > 1:
+            # The sharded runner keeps the state replicated across the
+            # mesh and merges a fresh copy out — nothing to alias.
+            return False
         if isinstance(plan.donate, bool):
             return plan.donate
         # register_fifos leave their ring buffers untouched ONLY under the
@@ -655,15 +817,24 @@ class Program:
                 # per-event clock (none exists inside one jitted sweep
                 # loop).
                 dt = time.perf_counter() - t0
-                cores = None
-                part = self._partition
-                if part is not None and part.n_cores > 1:
-                    names = tuple(self.network.actors)
-                    cores = {names[i]: c
-                             for c, rows in enumerate(part.core_rows)
-                             for i in rows}
-                trace = decode_trace(self.network, trc, wall_time_s=dt,
-                                     actor_cores=cores)
+                if self.plan.devices > 1:
+                    # Sharded runs return one per-device trace ring each
+                    # (all-gathered); decode and merge, with actor_cores
+                    # recording the mesh device instead of a grid core.
+                    from repro.core.shard import decode_device_trace
+                    trace = decode_device_trace(
+                        self.network, trc, self._shard_partition,
+                        wall_time_s=dt)
+                else:
+                    cores = None
+                    part = self._partition
+                    if part is not None and part.n_cores > 1:
+                        names = tuple(self.network.actors)
+                        cores = {names[i]: c
+                                 for c, rows in enumerate(part.core_rows)
+                                 for i in rows}
+                    trace = decode_trace(self.network, trc, wall_time_s=dt,
+                                         actor_cores=cores)
             diag = decode_health(self.network, health, stalled_b,
                                  final if stalled_b else None)
             result = RunResult(final, fire_counts=counts, sweeps=sweeps,
@@ -802,21 +973,14 @@ class Program:
 
         Returns ``{outbound_channel: (total_windows, r, *token_shape)}``.
         """
-        if self.plan.accelerated is None:
-            raise ValueError(
-                "Program.stream: this plan has no heterogeneous placement; "
-                "pass ExecutionPlan(accelerated=[...], n_iterations=chunk) "
-                "so boundary channels become host feed/fetch actors")
         if on_fault not in ("raise", "resume", "skip"):
             raise ValueError(
                 f"Program.stream: on_fault must be 'raise', 'resume' or "
                 f"'skip', got {on_fault!r}")
-        if persistent and on_fault != "raise":
-            raise ValueError(
-                f"Program.stream: persistent=True runs the whole stream as "
-                f"one entry and keeps no per-chunk checkpoints, so "
-                f"on_fault={on_fault!r} has nothing to restore; use "
-                "on_fault='raise' or the chunked loop")
+        # Stream-context cross-field rules (heterogeneous placement,
+        # persistent x on_fault) live in the one plan rule book.
+        self.plan.validate(self.source_network, stream_persistent=persistent,
+                           stream_on_fault=on_fault)
         if not isinstance(max_retries, int) or isinstance(max_retries, bool) \
                 or max_retries < 0:
             raise ValueError(
@@ -1093,6 +1257,17 @@ class Program:
                     part_counts = tuple(
                         sum(int(last.fire_counts[names[i]]) for i in rows)
                         for rows in part.core_rows)
+        dev_actors = coll_bytes = allreduces = None
+        if self._shard_partition is not None:
+            from repro.core.shard import collective_bytes_per_sweep
+            names = tuple(net.actors)
+            dev_actors = tuple(
+                tuple(names[i] for i in rows)
+                for rows in self._shard_partition.core_rows)
+            coll_bytes = collective_bytes_per_sweep(
+                self._shard_layout, self._shard_partition)
+            if last is not None and last.sweeps is not None:
+                allreduces = int(last.sweeps)
         return ProgramStats(
             mode=self.plan.mode,
             n_actors=len(net.actors),
@@ -1133,4 +1308,8 @@ class Program:
             last_stream_total_staged_bytes=(
                 self._last_stream["total_staged_bytes"]
                 if self._last_stream else None),
+            devices=self.plan.devices,
+            device_partition_actors=dev_actors,
+            collective_bytes_per_sweep=coll_bytes,
+            quiescence_allreduces=allreduces,
         )

@@ -401,7 +401,11 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
         b.actor(spec)
     tbl_shape, tok_i32 = (B, W), jnp.int32
     # The delay-token feedback FIFO carrying the per-slot decode state;
-    # its initial token is the empty slot table.
+    # its initial token is the empty slot table.  delay (1) >= rate (1),
+    # so the loop-carry channel may legally cross a partition boundary —
+    # grid cores or mesh devices (ExecutionPlan(devices=k), see
+    # repro.core.shard) — and the whole serving graph shards without a
+    # device_assign constraint.
     b.connect("merge.fb", "admission.fb", token_shape=tbl_shape,
               dtype=tok_i32, delay=1,
               initial_token=jnp.zeros(tbl_shape, jnp.int32), name="fb")

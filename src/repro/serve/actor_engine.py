@@ -3,7 +3,12 @@
 Drop-in counterpart to :class:`repro.serve.Engine` that runs the
 admission/decode/retire actor network of :mod:`repro.graphs.serving`
 under any dynamic-capable :class:`ExecutionPlan` (host-dynamic by
-default, megakernel via ``plan=ExecutionPlan(mode="megakernel")``).
+default, megakernel via ``plan=ExecutionPlan(mode="megakernel")``, or
+sharded across a device mesh via ``plan=ExecutionPlan(mode="dynamic",
+devices=k)`` — the serving network's slot-table feedback channel
+carries ``delay >= rate``, so it may legally cross devices and the
+engine's greedy tokens stay identical at every device count; see
+:mod:`repro.core.shard`).
 
 Where the legacy engine groups requests into fixed batches and burns a
 ``decode_step`` on every slot until the *batch* finishes, the actor
@@ -56,6 +61,10 @@ class ActorEngine:
         #: Decoded firing trace of the last generate() call (None unless
         #: the plan says trace=True).
         self.last_trace = None
+        #: Sharding telemetry of the last generate() call (None unless
+        #: the plan says devices > 1): bytes each sweep-barrier exchange
+        #: moves across the mesh, from Program.stats().
+        self.last_collective_bytes_per_sweep: Optional[int] = None
 
     # ------------------------------------------------------------------ #
     def build_network(self, requests: Sequence[Request],
@@ -102,6 +111,9 @@ class ActorEngine:
             self.last_sweeps = (int(res.sweeps)
                                 if res.sweeps is not None else None)
             self.last_trace = res.trace
+            self.last_collective_bytes_per_sweep = (
+                prog.stats().collective_bytes_per_sweep
+                if self.plan.devices > 1 else None)
             sink = prog.collect("retire", res.state)
             done = np.asarray(sink["done"])
             if not done.all():

@@ -154,10 +154,14 @@ def test_stall_unguarded_warns_not_silent(dpd, backend):
 
 
 def test_guards_rejected_on_sweepless_modes(dpd):
+    # Cross-field (guards-vs-mode) rules live in ExecutionPlan.validate,
+    # invoked at compile time — the record itself constructs fine.
     with pytest.raises(ValueError, match="guards"):
-        ExecutionPlan(mode="static", n_iterations=4, guards=True)
+        dpd.compile(ExecutionPlan(mode="static", n_iterations=4,
+                                  guards=True))
     with pytest.raises(ValueError, match="guards"):
-        ExecutionPlan(mode="interpreted", n_iterations=4, guards=True)
+        dpd.compile(ExecutionPlan(mode="interpreted", n_iterations=4,
+                                  guards=True))
 
 
 # --------------------------------------------------------------------------- #

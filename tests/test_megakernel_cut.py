@@ -72,8 +72,10 @@ def test_crossing_cut_is_default_and_validated(dpd):
         .cut_objective == "crossing"
     with pytest.raises(ValueError, match="cut_objective"):
         ExecutionPlan(mode=MEGAKERNEL, cut_objective="min-cut")
+    # Cross-field (knob-vs-mode) rules live in ExecutionPlan.validate,
+    # so the misuse surfaces at compile time, not construction.
     with pytest.raises(ValueError, match="grid-partition knobs"):
-        ExecutionPlan(mode="dynamic", cut_objective="flops")
+        net.compile(ExecutionPlan(mode="dynamic", cut_objective="flops"))
     layout = lower_network(net)
     with pytest.raises(ValueError, match="objective"):
         partition_layout(net, layout, cores=2, objective="bogus")

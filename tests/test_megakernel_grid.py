@@ -199,10 +199,14 @@ def test_partition_rejects_more_cores_than_units():
 
 
 def test_plan_rejects_grid_knobs_off_megakernel():
+    # Mode-vs-knob rules moved to ExecutionPlan.validate (compile time);
+    # pure value checks like cores=0 stay at construction.
+    net, _ = GRAPHS["moe_as_actors"]()
     with pytest.raises(ValueError, match="grid-partition knobs"):
-        ExecutionPlan(mode="dynamic", cores=2)
+        net.compile(ExecutionPlan(mode="dynamic", cores=2))
     with pytest.raises(ValueError, match="grid-partition knobs"):
-        ExecutionPlan(mode="static", n_iterations=4, assign={"a": 0})
+        net.compile(ExecutionPlan(mode="static", n_iterations=4,
+                                  assign={"a": 0}))
     with pytest.raises(ValueError, match="cores must be"):
         ExecutionPlan(mode=MEGAKERNEL, cores=0)
 

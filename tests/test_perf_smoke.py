@@ -143,6 +143,36 @@ def test_bench_serving_fast(tmp_path):
             < by_name["serve_stream_chunked"]["staged_bytes_per_chunk"])
 
 
+def test_bench_shard_fast(tmp_path):
+    from benchmarks.bench_shard import bench_shard
+    json_path = str(tmp_path / "BENCH_shard.json")
+    rows = bench_shard(fast=True, json_path=json_path)
+    check_rows(rows)
+    # The sharding acceptance claim at tiny sizes: every device count
+    # stays bit-identical to the single-device dynamic executor.
+    idents = [d for n, _, d in rows if "bit-identical" in d]
+    assert idents and all("bit-identical: True" in d for d in idents)
+    with open(json_path) as f:
+        records = json.load(f)
+    by_name = {r["name"]: r for r in records}
+    for g in ("dpd", "moe"):
+        for k in (1, 2, 4):
+            rec = by_name[f"shard_{g}_dev{k}"]
+            assert rec["devices"] == k and rec["rounds"] >= 1, rec
+            assert rec["us_per_call"] > 0 and rec["tokens_per_s"] > 0
+            assert rec["bit_identical"] is True, rec
+            if k > 1:
+                # Crossing rings + cursor pairs + the quiescence flag
+                # move every barrier round — never free at k > 1.
+                assert rec["collective_bytes_per_sweep"] > 0, rec
+            else:
+                assert "collective_bytes_per_sweep" not in rec
+        # More devices -> more crossing channels on these contiguous
+        # cuts: the exchange bill grows with the cut count.
+        assert (by_name[f"shard_{g}_dev4"]["collective_bytes_per_sweep"]
+                >= by_name[f"shard_{g}_dev2"]["collective_bytes_per_sweep"])
+
+
 def test_check_regression_compare_logic():
     """The gate's verdict logic, on synthetic records (no bench run)."""
     from benchmarks.check_regression import _merge, compare

@@ -198,17 +198,23 @@ def test_profile_cut_valid_and_bit_identical(dpd, cores):
 
 
 def test_profile_plan_validation(dpd):
+    # Cross-field rules (trace-vs-mode, trace_capacity-vs-trace,
+    # profile-vs-cut_objective) are judged by ExecutionPlan.validate at
+    # compile time; only value checks (trace_capacity=0) stay at
+    # construction.
     with pytest.raises(ValueError, match="trace"):
-        ExecutionPlan(mode="static", n_iterations=4, trace=True)
+        dpd.compile(ExecutionPlan(mode="static", n_iterations=4,
+                                  trace=True))
     with pytest.raises(ValueError, match="trace_capacity"):
-        ExecutionPlan(mode="dynamic", trace_capacity=64)
+        dpd.compile(ExecutionPlan(mode="dynamic", trace_capacity=64))
     with pytest.raises(ValueError, match="trace_capacity"):
         ExecutionPlan(mode="dynamic", trace=True, trace_capacity=0)
     with pytest.raises(ValueError, match="profile"):
-        ExecutionPlan(mode="megakernel", cores=2, cut_objective="profile")
+        dpd.compile(ExecutionPlan(mode="megakernel", cores=2,
+                                  cut_objective="profile"))
     with pytest.raises(ValueError, match="profile"):
-        ExecutionPlan(mode="megakernel", cores=2,
-                      profile={"actors": {"a": 1}})
+        dpd.compile(ExecutionPlan(mode="megakernel", cores=2,
+                                  profile={"actors": {"a": 1}}))
     # A mapping form works, and the frozen plan survives replace().
     plan = ExecutionPlan(mode="megakernel", cores=2,
                          cut_objective="profile",
@@ -313,10 +319,37 @@ def test_stats_to_json_roundtrip(dpd):
     prog = dpd.compile(_plan("grid2", trace=True))
     prog.run()
     doc = prog.stats().to_json()
-    assert doc["schema_version"] == 1
+    # v2 bumped for the sharding fields; v1 consumers keep working
+    # because every v1 key survives unchanged (checked below).
+    assert doc["schema_version"] == 2
     field_names = {f.name for f in dataclasses.fields(prog.stats())}
     assert field_names <= set(doc)
     # Grid fields exercised (tuples lowered to lists) and JSON-stable.
     assert doc["grid_cores"] == 2
     assert isinstance(doc["partition_actors"], list)
+    assert json.loads(json.dumps(doc)) == doc
+
+
+_STATS_V1_KEYS = {
+    "schema_version", "mode", "grid_cores", "partition_actors",
+    "cut_objective",
+}
+
+
+def test_stats_schema_v2_superset_of_v1(dpd):
+    """Schema v2 adds the sharding telemetry without renaming or
+    removing anything a v1 reader consumed — and the single-device
+    defaults are inert (devices=1, collectives None)."""
+    prog = dpd.compile(_plan("dynamic"))
+    prog.run()
+    doc = prog.stats().to_json()
+    assert doc["schema_version"] == 2
+    assert _STATS_V1_KEYS <= set(doc)
+    assert {"devices", "device_partition_actors",
+            "collective_bytes_per_sweep",
+            "quiescence_allreduces"} <= set(doc)
+    assert doc["devices"] == 1
+    assert doc["device_partition_actors"] is None
+    assert doc["collective_bytes_per_sweep"] is None
+    assert doc["quiescence_allreduces"] is None
     assert json.loads(json.dumps(doc)) == doc
