@@ -57,7 +57,8 @@ if __package__ in (None, ""):   # script invocation: PYTHONPATH=src is enough
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SUITES = ("BENCH_executors.json", "BENCH_megakernel.json",
-          "BENCH_serving.json", "BENCH_shard.json")
+          "BENCH_resilience.json", "BENCH_serving.json",
+          "BENCH_shard.json")
 TIMING_FIELDS = ("us_per_call", "tokens_per_s")
 
 
@@ -70,12 +71,14 @@ def _fresh_run(fast: bool, out_dir: str) -> Dict[str, Dict[str, dict]]:
     """Run both bench suites into ``out_dir``; returns suite -> records."""
     from benchmarks.bench_executors import bench_executors
     from benchmarks.bench_megakernel import bench_megakernel
+    from benchmarks.bench_resilience import bench_resilience
     from benchmarks.bench_serving import bench_serving
     from benchmarks.bench_shard import bench_shard
 
     paths = {s: os.path.join(out_dir, s) for s in SUITES}
     bench_executors(fast=fast, json_path=paths["BENCH_executors.json"])
     bench_megakernel(fast=fast, json_path=paths["BENCH_megakernel.json"])
+    bench_resilience(fast=fast, json_path=paths["BENCH_resilience.json"])
     bench_serving(fast=fast, json_path=paths["BENCH_serving.json"])
     bench_shard(fast=fast, json_path=paths["BENCH_shard.json"])
     return {s: _load(p) for s, p in paths.items()}

@@ -1,3 +1,10 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import (Checkpointer,
+                                           CheckpointIntegrityError,
+                                           STREAM_CKPT_VERSION,
+                                           load_stream_checkpoint,
+                                           save_stream_checkpoint,
+                                           stream_checkpoint_steps)
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CheckpointIntegrityError", "STREAM_CKPT_VERSION",
+           "load_stream_checkpoint", "save_stream_checkpoint",
+           "stream_checkpoint_steps"]

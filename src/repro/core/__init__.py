@@ -15,13 +15,14 @@ from repro.core.network import (Edge, Network, NetworkState,
                                 repetition_vector)
 from repro.core.builder import (BoundsReport, ChannelBounds, NetworkBuilder,
                                 derive_matched_rates)
-from repro.core.health import (CURSOR_INVALID, NONFINITE, OVERFLOW, STALL,
-                               UNDERFLOW, ChannelFault, Diagnostics,
+from repro.core.health import (CURSOR_INVALID, DOMAIN, NONFINITE, OVERFLOW,
+                               STALL, UNDERFLOW, ChannelFault, Diagnostics,
                                HealthState, NetworkFaultError, StallReport,
                                decode_health, diagnose_stall, fault_names,
                                init_health)
-from repro.core.faultinject import (corrupt_cursor, inject_overflow,
-                                    inject_underflow, poison_tokens,
+from repro.core.faultinject import (corrupt_cursor, expire_deadline,
+                                    inject_overflow, inject_underflow,
+                                    poison_request, poison_tokens,
                                     truncate_feed)
 from repro.core.executor import (
     RuntimeMode,
@@ -81,11 +82,12 @@ __all__ = [
     "name_index_map", "repetition_vector",
     "NetworkBuilder", "derive_matched_rates", "BoundsReport", "ChannelBounds",
     "OVERFLOW", "UNDERFLOW", "CURSOR_INVALID", "NONFINITE", "STALL",
+    "DOMAIN",
     "ChannelFault", "Diagnostics", "HealthState", "NetworkFaultError",
     "StallReport", "decode_health", "diagnose_stall", "fault_names",
     "init_health",
     "corrupt_cursor", "inject_overflow", "inject_underflow", "poison_tokens",
-    "truncate_feed",
+    "poison_request", "expire_deadline", "truncate_feed",
     "ExecutionPlan", "MEGAKERNEL", "Mode", "Program", "ProgramStats",
     "RunResult",
     "TRACE_CAPACITY_DEFAULT", "Profile", "Trace", "TraceState",

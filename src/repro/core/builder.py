@@ -365,10 +365,19 @@ class NetworkBuilder:
                 control: Optional[bool] = None,
                 name: Optional[str] = None,
                 matched_rates: Optional[bool] = None,
-                initial_token: Optional[Any] = None) -> str:
+                initial_token: Optional[Any] = None,
+                domain: Optional[Tuple[float, float]] = None,
+                row_id_col: Optional[int] = None) -> str:
         """Declare one channel ``src("actor.port") -> dst("actor.port")``.
 
         * ``name`` defaults to ``"src.port->dst.port"``;
+        * ``domain=(lo, hi)`` declares the valid value range of every
+          token element: guarded runs flag out-of-range enabled windows
+          with the ``DOMAIN`` fault bit (:mod:`repro.core.health`) and
+          ``Program.stream`` validates staged feeds against it host-side;
+        * ``row_id_col`` names the record-id column of record-row tokens
+          (>= 2-D token shapes) so fault and feed-validation reports can
+          name the offending record, not just the channel;
         * ``control`` (whether this is a rate-1 control channel) is
           inferred from the destination port being the consuming actor's
           control port — pass it only to assert your expectation;
@@ -454,7 +463,8 @@ class NetworkBuilder:
 
         spec = FifoSpec(name, rate, tuple(token_shape), dtype, delay=delay,
                         is_control=is_control,
-                        matched_rates=bool(matched_rates))
+                        matched_rates=bool(matched_rates),
+                        domain=domain, row_id_col=row_id_col)
         if capacity is not None and capacity != spec.capacity_tokens:
             raise ValueError(
                 f"connect({src!r}, {dst!r}): capacity={capacity} contradicts "

@@ -28,10 +28,19 @@ The injectors model the *mechanism*, not just the symptom:
     test discriminates the data-health guard from the cursor guards.
   * :func:`truncate_feed` drops trailing windows from a host stream —
     the feed-validation satellite's error path in ``Program.stream``.
+  * :func:`poison_request` / :func:`expire_deadline` model the two
+    *serving-level* fault classes (PR 10): a request whose staged prompt
+    row carries out-of-domain garbage (tripping the slot-table channels'
+    ``DOMAIN`` write guard the moment admission writes it), and a request
+    whose deadline has already passed at arrival (shed as a
+    ``STATUS_TIMEOUT`` rate-0 admission firing).  They corrupt the
+    :class:`~repro.graphs.serving.ServingWorkload` rather than a ring —
+    the serving faults are *input* faults, which is what makes them
+    quarantinable per request.
 
-Injectors never touch the network definition, only a state; they are
-pure (input state unmodified) and jit-free, so tests can inject between
-runs at will.
+Injectors never touch the network definition, only a state (or staged
+workload); they are pure (input unmodified) and jit-free, so tests can
+inject between runs at will.
 """
 from __future__ import annotations
 
@@ -163,3 +172,60 @@ def truncate_feed(feeds: Mapping[str, Any], fifo: str,
             f"truncate_feed: cannot drop {drop} of {arr.shape[0]} windows")
     out[fifo] = arr[:arr.shape[0] - drop]
     return out
+
+
+# --------------------------------------------------------------------- #
+# Serving-level injectors: corrupt the staged workload, not a ring.
+# --------------------------------------------------------------------- #
+POISON_VALUE = -(2 ** 20)
+
+
+def _check_slot(workload, slot: int) -> int:
+    n = int(np.asarray(workload.prompts).shape[0])
+    if not (0 <= slot < n):
+        raise ValueError(
+            f"request slot {slot} out of range for a workload of {n} "
+            "requests")
+    return slot
+
+
+def poison_request(workload, slot: int,
+                   value: int = POISON_VALUE):
+    """Poison one staged request's prompt row with an out-of-domain value.
+
+    Models a corrupted/adversarial input request: every slot-table
+    channel declares ``SLOT_DOMAIN`` (non-negative i32), so the moment
+    admission writes the poisoned row a guarded run flags ``DOMAIN`` on
+    the write — the integer-channel analogue of ``poison_tokens``'s
+    NaN.  ``faulted_requests`` maps the fault back to exactly this slot,
+    which is what the ``ActorEngine`` quarantine path retires with
+    ``status="fault"``.
+    """
+    from repro.graphs.serving import SLOT_DOMAIN
+    _check_slot(workload, slot)
+    lo, hi = SLOT_DOMAIN
+    if lo <= value <= hi:
+        raise ValueError(
+            f"poison_request: value {value} is inside SLOT_DOMAIN "
+            f"{SLOT_DOMAIN}; an in-domain value is not a poison")
+    prompts = np.array(workload.prompts, np.int32, copy=True)
+    prompts[slot, :] = value
+    return dataclasses.replace(workload, prompts=prompts)
+
+
+def expire_deadline(workload, slot: int, at: int = 0):
+    """Give one staged request a deadline already in the past.
+
+    ``at`` is the absolute step the deadline is set *before* (default 0:
+    expired before the network's first firing).  Admission sheds the
+    request as a ``STATUS_TIMEOUT`` rate-0 firing the first step it is
+    both arrived and expired — no fault is raised; deadline expiry is a
+    *policy* outcome, not a health event.
+    """
+    _check_slot(workload, slot)
+    deadlines = (np.array(workload.deadlines, np.int32, copy=True)
+                 if workload.deadlines is not None
+                 else np.full((np.asarray(workload.prompts).shape[0],),
+                              2 ** 30 - 1, np.int32))
+    deadlines[slot] = at - 1
+    return dataclasses.replace(workload, deadlines=deadlines)

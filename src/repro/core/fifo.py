@@ -71,6 +71,20 @@ class FifoSpec:
     # Control channels must have rate 1 (paper §2.2). Marked so the network
     # validator can enforce it.
     is_control: bool = False
+    # Optional declared value domain ``(lo, hi)`` of every token element.
+    # The health layer's guards (repro.core.health) flag an enabled window
+    # carrying values outside [lo, hi] with the DOMAIN fault bit — the
+    # integer-channel analogue of the NONFINITE guard (a slot-table row
+    # full of garbage is as much a poisoned token as a NaN activation),
+    # and Program.stream validates staged feed windows against it host-
+    # side before anything runs.  None (default) disables the check.
+    domain: Optional[Tuple[float, float]] = None
+    # For channels whose tokens are stacks of record rows (axis 0 of the
+    # token indexes the record): the column holding each record's id, so
+    # fault reports and feed-validation errors can name the offending
+    # record (e.g. the serving slot table's request-id column) instead of
+    # just the channel.  Requires a >= 2-D token shape.
+    row_id_col: Optional[int] = None
     # Declares that the producing and consuming ports are always enabled
     # together (their control functions derive the same 0/r decision, as in
     # DPD where one configuration value drives both ends of every branch
@@ -107,6 +121,23 @@ class FifoSpec:
             raise ValueError(
                 f"fifo {self.name}: control channels cannot carry delay tokens"
             )
+        if self.domain is not None:
+            lo, hi = self.domain
+            if not (float(lo) <= float(hi)):
+                raise ValueError(
+                    f"fifo {self.name}: domain=({lo}, {hi}) is empty; "
+                    "declare (lo, hi) with lo <= hi")
+            object.__setattr__(self, "domain", (float(lo), float(hi)))
+        if self.row_id_col is not None:
+            if len(self.token_shape) < 2:
+                raise ValueError(
+                    f"fifo {self.name}: row_id_col names a column of "
+                    "record-row tokens, so the token shape must be >= 2-D, "
+                    f"got {self.token_shape}")
+            if not (0 <= int(self.row_id_col) < self.token_shape[-1]):
+                raise ValueError(
+                    f"fifo {self.name}: row_id_col={self.row_id_col} is "
+                    f"outside the token row width {self.token_shape[-1]}")
 
     # ------------------------------------------------------------------ #
     # Capacity law — paper Eq. 1.                                          #

@@ -12,7 +12,10 @@ see :mod:`repro.core.builder`), and detect violations at run time with
 
   * a packed per-channel **fault word** (:data:`OVERFLOW`,
     :data:`UNDERFLOW`, :data:`CURSOR_INVALID`, :data:`NONFINITE`,
-    :data:`STALL`) plus per-channel **high-water occupancy marks**,
+    :data:`STALL`, :data:`DOMAIN` — values outside a channel's declared
+    ``FifoSpec.domain``, the integer-channel analogue of NONFINITE that
+    the serving graph uses to catch poisoned request rows) plus
+    per-channel **high-water occupancy marks**,
     carried as extra loop state through the dynamic executor's sweep loop
     and the megakernel's in-kernel ``while_loop`` (:class:`HealthState`);
   * the pure guard-bit predicates the executors evaluate next to every
@@ -52,6 +55,7 @@ UNDERFLOW = 2       # enabled read from a channel with < rate true tokens
 CURSOR_INVALID = 4  # occ counter disagrees with delay + (wr - rd) * rate
 NONFINITE = 8       # NaN/Inf in an enabled window (float channels only)
 STALL = 16          # sweep loop exhausted max_sweeps with work remaining
+DOMAIN = 32         # enabled window outside the channel's declared domain
 
 FAULT_NAMES = {
     OVERFLOW: "OVERFLOW",
@@ -59,6 +63,7 @@ FAULT_NAMES = {
     CURSOR_INVALID: "CURSOR_INVALID",
     NONFINITE: "NONFINITE",
     STALL: "STALL",
+    DOMAIN: "DOMAIN",
 }
 
 
@@ -92,6 +97,23 @@ def _nonfinite_bit(spec, values: jax.Array, enabled: jax.Array) -> jax.Array:
                      jnp.int32(NONFINITE), jnp.int32(0))
 
 
+def _domain_bit(spec, values: jax.Array, enabled: jax.Array) -> jax.Array:
+    """DOMAIN fault of one enabled window against the spec's declared
+    value domain — the integer-channel analogue of NONFINITE (NaN
+    comparisons are False, so non-finite floats fall to that guard, not
+    this one).  Channels without a declared domain contribute nothing,
+    keeping the guards-on HLO of undeclared networks unchanged."""
+    if getattr(spec, "domain", None) is None:
+        return jnp.int32(0)
+    lo, hi = spec.domain
+    lo = jnp.asarray(lo, values.dtype)
+    hi = jnp.asarray(hi, values.dtype)
+    bad = jnp.logical_not(jnp.all(jnp.logical_and(values >= lo,
+                                                  values <= hi)))
+    return jnp.where(jnp.logical_and(enabled, bad),
+                     jnp.int32(DOMAIN), jnp.int32(0))
+
+
 def read_guard_bits(spec, rd: jax.Array, wr: jax.Array, occ: jax.Array,
                     enabled: jax.Array, window: jax.Array) -> jax.Array:
     """Fault bits of one (possibly masked) read, from the pre-op state.
@@ -105,7 +127,8 @@ def read_guard_bits(spec, rd: jax.Array, wr: jax.Array, occ: jax.Array,
     starved = true_occ < spec.rate
     bits = bits | jnp.where(jnp.logical_and(enabled, starved),
                             jnp.int32(UNDERFLOW), jnp.int32(0))
-    return bits | _nonfinite_bit(spec, window, enabled)
+    return (bits | _nonfinite_bit(spec, window, enabled)
+            | _domain_bit(spec, window, enabled))
 
 
 def write_guard_bits(spec, rd: jax.Array, wr: jax.Array, occ: jax.Array,
@@ -116,7 +139,8 @@ def write_guard_bits(spec, rd: jax.Array, wr: jax.Array, occ: jax.Array,
     over = true_occ + spec.rate > spec.writable_occupancy_bound
     bits = bits | jnp.where(jnp.logical_and(enabled, over),
                             jnp.int32(OVERFLOW), jnp.int32(0))
-    return bits | _nonfinite_bit(spec, tokens, enabled)
+    return (bits | _nonfinite_bit(spec, tokens, enabled)
+            | _domain_bit(spec, tokens, enabled))
 
 
 # ----------------------------------------------------------------------- #

@@ -36,10 +36,14 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint import (CheckpointIntegrityError,
+                              load_stream_checkpoint, save_stream_checkpoint)
 from repro.core.executor import (RuntimeMode, _compile_dynamic,
                                  _compile_static, _run_interpreted,
                                  collect_sink)
+from repro.core.fifo import FifoState
 from repro.core.health import (Diagnostics, NetworkFaultError, decode_health)
 from repro.core.mapping import heterogeneous_split
 from repro.core.network import (Network, NetworkState, iteration_token_flops)
@@ -347,7 +351,9 @@ class ExecutionPlan:
 
     def validate(self, network: "Network", *,
                  stream_persistent: Optional[bool] = None,
-                 stream_on_fault: Optional[str] = None) -> "ExecutionPlan":
+                 stream_on_fault: Optional[str] = None,
+                 stream_checkpoint_dir: Optional[str] = None
+                 ) -> "ExecutionPlan":
         """Judge the plan as a whole against ``network`` — THE cross-field
         rule book, called by ``Network.compile`` (via ``Program``) before
         anything is built and by ``Program.stream`` before a stream runs.
@@ -450,20 +456,26 @@ class ExecutionPlan:
         if self.device_assign is not None:
             network.validate_partition(dict(self.device_assign),
                                        self.devices, unit="device")
-        if stream_persistent is not None or stream_on_fault is not None:
+        if (stream_persistent is not None or stream_on_fault is not None
+                or stream_checkpoint_dir is not None):
             if self.accelerated is None:
                 raise ValueError(
                     "Program.stream: this plan has no heterogeneous "
                     "placement; pass ExecutionPlan(accelerated=[...], "
                     "n_iterations=chunk) so boundary channels become "
                     "host feed/fetch actors")
-            if stream_persistent and stream_on_fault not in (None, "raise"):
+            # persistent x on_fault="resume"/"skip" is legal since PR 10:
+            # a faulting persistent entry falls back to the chunked loop,
+            # whose per-chunk checkpoints make the policy meaningful.
+            # What persistent mode still cannot do is DURABLE cadence —
+            # one entry has no chunk boundaries to snapshot at.
+            if stream_persistent and stream_checkpoint_dir is not None:
                 raise ValueError(
-                    f"Program.stream: persistent=True runs the whole "
-                    f"stream as one entry and keeps no per-chunk "
-                    f"checkpoints, so on_fault={stream_on_fault!r} has "
-                    "nothing to restore; use on_fault='raise' or the "
-                    "chunked loop")
+                    "Program.stream: persistent=True runs the whole "
+                    "stream as one kernel entry with no chunk boundaries "
+                    "to snapshot at, so checkpoint_dir= has no cadence; "
+                    "use the chunked loop (persistent=False) for durable "
+                    "checkpoints")
         return self
 
 
@@ -609,6 +621,39 @@ class ProgramStats:
         return doc
 
 
+# ---------------------------------------------------------------------- #
+# Durable-checkpoint payload helpers (PR 10): Trace and NetworkState go
+# through plain containers so repro.checkpoint's skeleton serializer can
+# round-trip them across a process boundary.
+# ---------------------------------------------------------------------- #
+def _trace_to_payload(t: Trace) -> Dict[str, Any]:
+    return {"actor_names": list(t.actor_names),
+            "fifo_names": list(t.fifo_names),
+            "events": np.asarray(t.events, np.int32),
+            "capacity": int(t.capacity),
+            "dropped": int(t.dropped),
+            "wall_time_s": (None if t.wall_time_s is None
+                            else float(t.wall_time_s)),
+            "actor_flops": [int(x) for x in t.actor_flops],
+            "fifo_token_bytes": [int(x) for x in t.fifo_token_bytes],
+            "actor_cores": (None if t.actor_cores is None
+                            else [int(x) for x in t.actor_cores])}
+
+
+def _trace_from_payload(d: Mapping[str, Any]) -> Trace:
+    return Trace(actor_names=tuple(d["actor_names"]),
+                 fifo_names=tuple(d["fifo_names"]),
+                 events=np.asarray(d["events"], np.int32),
+                 capacity=int(d["capacity"]),
+                 dropped=int(d["dropped"]),
+                 wall_time_s=d["wall_time_s"],
+                 actor_flops=tuple(int(x) for x in d["actor_flops"]),
+                 fifo_token_bytes=tuple(int(x)
+                                        for x in d["fifo_token_bytes"]),
+                 actor_cores=(None if d["actor_cores"] is None
+                              else tuple(int(x) for x in d["actor_cores"])))
+
+
 class Program:
     """A network compiled under a plan; run with :meth:`run` or
     :meth:`stream`.  Built via :meth:`repro.core.network.Network.compile`.
@@ -628,9 +673,19 @@ class Program:
         #: Merged :class:`repro.core.trace.Trace` across the last
         #: :meth:`stream` call's chunks (None unless ``plan.trace``).
         self.last_stream_trace: Optional[Trace] = None
+        #: Accumulated per-actor fire counts across the last
+        #: :meth:`stream` / :meth:`resume_stream` call's chunks (None for
+        #: modes without counts); a resumed stream's totals equal the
+        #: uninterrupted run's — the counts ride the durable checkpoint.
+        self.last_stream_fire_counts: Optional[Dict[str, int]] = None
+        #: Accumulated sweeps across the last stream call's chunks.
+        self.last_stream_sweeps: Optional[int] = None
         #: Full-length programs built lazily by persistent-feed streams,
         #: keyed by total window count (reused across stream() calls).
         self._persistent_progs: Dict[int, "Program"] = {}
+        #: Bounded-sweep twin programs built lazily by
+        #: :meth:`run_checkpointed`, keyed by segment sweep budget.
+        self._segment_progs: Dict[int, "Program"] = {}
         self._feed_by_fifo: Dict[str, str] = {}
         self._fetch_by_fifo: Dict[str, str] = {}
         # THE cross-field rule book: every plan x network combination is
@@ -919,7 +974,9 @@ class Program:
 
     def stream(self, feeds: Mapping[str, Any], on_fault: str = "raise",
                max_retries: int = 2,
-               persistent: bool = False) -> Dict[str, jax.Array]:
+               persistent: bool = False,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 1) -> Dict[str, jax.Array]:
         """Stream host data through the accelerated subnetwork in chunks.
 
         ``feeds`` maps each *inbound boundary channel* name to its full
@@ -944,11 +1001,25 @@ class Program:
         slabs once, and runs to completion in a single entry; rings stay
         resident across what used to be chunk boundaries.  Outputs are
         bit-identical to the chunked loop (the concatenation invariant
-        above).  The cost: no per-chunk checkpoints exist, so
-        ``on_fault`` must stay ``"raise"``, and ``last_stream_report``
-        cannot log per-chunk recoveries.  The staging savings are
-        reported by :meth:`stats` (``last_stream_staged_bytes_per_chunk``
-        / ``last_stream_total_staged_bytes``).
+        above).  With ``on_fault="resume"``/``"skip"`` a faulting
+        persistent entry *falls back to the chunked loop* — the only
+        place per-chunk checkpoints exist to restore — logged in
+        ``last_stream_report`` as ``action="fallback-chunked"``; the
+        healthy path keeps the single-entry staging savings, reported by
+        :meth:`stats` (``last_stream_staged_bytes_per_chunk`` /
+        ``last_stream_total_staged_bytes``).  Durable snapshots are the
+        one thing persistent mode cannot do (no chunk boundaries), so
+        ``checkpoint_dir=`` requires ``persistent=False``.
+
+        ``checkpoint_dir=`` makes the chunked loop *durable*: every
+        ``checkpoint_every`` chunks (and at the final chunk) the full
+        progress — NetworkState rings + cursors, fetched output slabs,
+        accumulated fire counts/sweeps, per-chunk trace rings — is
+        written as a CRC'd, atomically-committed, versioned snapshot
+        (:mod:`repro.checkpoint`).  After a process kill,
+        :meth:`resume_stream` on a freshly compiled program continues
+        from the newest intact snapshot bit-identically to the
+        uninterrupted run.
 
         The loop checkpoints the :class:`NetworkState` before each chunk;
         ``on_fault`` decides what a :class:`NetworkFaultError` from a
@@ -973,19 +1044,55 @@ class Program:
 
         Returns ``{outbound_channel: (total_windows, r, *token_shape)}``.
         """
+        arrays, total, chunk, n_chunks, slab_bytes, ring_bytes = \
+            self._prepare_stream(feeds, on_fault, max_retries, persistent,
+                                 checkpoint_dir, checkpoint_every)
+        report: List[Dict[str, Any]] = []
+        self.last_stream_report = report
+        if persistent:
+            try:
+                return self._stream_persistent(arrays, total, chunk,
+                                               n_chunks, slab_bytes,
+                                               ring_bytes)
+            except NetworkFaultError as err:
+                if on_fault == "raise":
+                    raise
+                # The checkpointed chunk loop is the only surface with
+                # something to restore; re-run the stream there (its
+                # outputs are bit-identical by the concatenation
+                # invariant, so the fallback changes recovery, not data).
+                report.append({"chunk": None, "attempts": 1,
+                               "action": "fallback-chunked",
+                               "fault": str(err)})
+        return self._stream_chunked(arrays, total, chunk, n_chunks, on_fault,
+                                    max_retries, slab_bytes, ring_bytes,
+                                    report, checkpoint_dir, checkpoint_every)
+
+    def _prepare_stream(self, feeds: Mapping[str, Any], on_fault: str,
+                        max_retries: int, persistent: bool,
+                        checkpoint_dir: Optional[str],
+                        checkpoint_every: int):
+        """Shared stream validation + feed normalization (stream and
+        resume_stream enter the chunk loop through the same checks)."""
         if on_fault not in ("raise", "resume", "skip"):
             raise ValueError(
                 f"Program.stream: on_fault must be 'raise', 'resume' or "
                 f"'skip', got {on_fault!r}")
         # Stream-context cross-field rules (heterogeneous placement,
-        # persistent x on_fault) live in the one plan rule book.
+        # persistent x checkpoint_dir) live in the one plan rule book.
         self.plan.validate(self.source_network, stream_persistent=persistent,
-                           stream_on_fault=on_fault)
+                           stream_on_fault=on_fault,
+                           stream_checkpoint_dir=checkpoint_dir)
         if not isinstance(max_retries, int) or isinstance(max_retries, bool) \
                 or max_retries < 0:
             raise ValueError(
                 f"Program.stream: max_retries must be an int >= 0, got "
                 f"{max_retries!r}")
+        if not isinstance(checkpoint_every, int) \
+                or isinstance(checkpoint_every, bool) or checkpoint_every < 1:
+            raise ValueError(
+                f"Program.stream: checkpoint_every must be an int >= 1, "
+                f"got {checkpoint_every!r}")
         chunk = self.plan.n_iterations
         if self.plan.mode == "static" and self.plan.specialize:
             # The specialized static executor requires phase-aligned input
@@ -1095,42 +1202,106 @@ class Program:
             ring_bytes = entry_staging_bytes(self._layout, self._partition)
         else:
             ring_bytes = 0
-        report: List[Dict[str, Any]] = []
-        self.last_stream_report = report
-        if persistent:
-            # One full-length program over the SAME source network: by the
-            # concatenation invariant its single run is bit-identical to
-            # the chunked loop, and the feed slabs (sized total instead of
-            # chunk) are staged exactly once.
-            prog = self._persistent_progs.get(total)
-            if prog is None:
-                prog = Program(
-                    self.source_network,
-                    dataclasses.replace(self.plan, n_iterations=total))
-                self._persistent_progs[total] = prog
-            base = prog.init_state()
-            for fifo, arr in arrays.items():
-                base = prog._set_actor(base, prog._feed_by_fifo[fifo],
-                                       (arr, jnp.int32(0)))
-            result = prog.run(base)
-            # collect() stays guarded: the implicit state belongs to the
-            # full-length twin program, not this chunk-length one.
-            self._last = result
-            self._last_is_stream_chunk = True
-            self.last_stream_trace = result.trace
-            self._last_stream = {
-                "chunks": n_chunks, "persistent": True,
-                "staged_bytes_per_chunk": slab_bytes,
-                "total_staged_bytes": ring_bytes + n_chunks * slab_bytes,
-            }
-            return {f: result.state.actor(prog._fetch_by_fifo[f])[0]
-                    for f in self._fetch_by_fifo}
-        state = self.init_state()
-        outs: Dict[str, list] = {f: [] for f in self._fetch_by_fifo}
-        chunk_traces: List[Trace] = []
+        self._check_feed_domains(arrays, chunk)
+        return arrays, total, chunk, n_chunks, slab_bytes, ring_bytes
+
+    def _check_feed_domains(self, arrays: Mapping[str, jax.Array],
+                            chunk: int) -> None:
+        """Reject out-of-domain feed windows before any chunk runs.
+
+        A staged value outside a channel's declared ``domain`` would trip
+        the DOMAIN write guard mid-stream, blaming the run instead of the
+        input.  The error names the chunk index the bad window lands in
+        and — when the channel declares ``row_id_col`` — the request id
+        carried by the offending row, so serving callers can quarantine
+        the request without replaying the stream.
+        """
+        for fifo, arr in arrays.items():
+            spec = self.source_network.fifos[fifo]
+            if spec.domain is None:
+                continue
+            lo, hi = spec.domain
+            a = np.asarray(arr)
+            bad = (a < lo) | (a > hi) | ~np.isfinite(a.astype(np.float64))
+            if not bad.any():
+                continue
+            idx = tuple(int(x) for x in np.argwhere(bad)[0])
+            w = idx[0]
+            detail = ""
+            if spec.row_id_col is not None and len(idx) >= 2:
+                rid = int(a[idx[:-1] + (int(spec.row_id_col),)])
+                detail = f", request id {rid}"
+            raise ValueError(
+                f"Program.stream: feed {fifo!r} window {w} (chunk "
+                f"{w // chunk}) carries value {a[idx]!r} outside the "
+                f"channel domain [{lo}, {hi}]{detail}; drop or repair the "
+                "request before streaming")
+
+    def _stream_persistent(self, arrays: Mapping[str, jax.Array], total: int,
+                           chunk: int, n_chunks: int, slab_bytes: int,
+                           ring_bytes: int) -> Dict[str, jax.Array]:
+        # One full-length program over the SAME source network: by the
+        # concatenation invariant its single run is bit-identical to
+        # the chunked loop, and the feed slabs (sized total instead of
+        # chunk) are staged exactly once.
+        prog = self._persistent_progs.get(total)
+        if prog is None:
+            prog = Program(
+                self.source_network,
+                dataclasses.replace(self.plan, n_iterations=total))
+            self._persistent_progs[total] = prog
+        base = prog.init_state()
+        for fifo, arr in arrays.items():
+            base = prog._set_actor(base, prog._feed_by_fifo[fifo],
+                                   (arr, jnp.int32(0)))
+        result = prog.run(base)
+        # collect() stays guarded: the implicit state belongs to the
+        # full-length twin program, not this chunk-length one.
+        self._last = result
+        self._last_is_stream_chunk = True
+        self.last_stream_trace = result.trace
+        self.last_stream_fire_counts = (
+            {k: int(v) for k, v in result.fire_counts.items()}
+            if result.fire_counts is not None else None)
+        self.last_stream_sweeps = (int(result.sweeps)
+                                   if result.sweeps is not None else None)
+        self._last_stream = {
+            "chunks": n_chunks, "persistent": True,
+            "staged_bytes_per_chunk": slab_bytes,
+            "total_staged_bytes": ring_bytes + n_chunks * slab_bytes,
+        }
+        return {f: result.state.actor(prog._fetch_by_fifo[f])[0]
+                for f in self._fetch_by_fifo}
+
+    def _stream_chunked(self, arrays: Mapping[str, jax.Array], total: int,
+                        chunk: int, n_chunks: int, on_fault: str,
+                        max_retries: int, slab_bytes: int, ring_bytes: int,
+                        report: List[Dict[str, Any]],
+                        checkpoint_dir: Optional[str],
+                        checkpoint_every: int,
+                        start_chunk: int = 0,
+                        state: Optional[NetworkState] = None,
+                        outs: Optional[Dict[str, list]] = None,
+                        traces: Optional[List[Trace]] = None,
+                        counts: Optional[Dict[str, int]] = None,
+                        sweeps: int = 0) -> Dict[str, jax.Array]:
+        """The chunked stream loop, resumable at any chunk boundary.
+
+        ``stream`` enters it at chunk 0 with fresh accumulators;
+        ``resume_stream`` enters it at the first chunk after the newest
+        intact snapshot, with every accumulator restored — the loop body
+        cannot tell the difference, which is the bit-identity argument.
+        """
+        if state is None:
+            state = self.init_state()
+        if outs is None:
+            outs = {f: [] for f in self._fetch_by_fifo}
+        chunk_traces: List[Trace] = [] if traces is None else traces
+        acc_counts = counts
+        acc_sweeps = int(sweeps)
         self.last_stream_trace = None
         retrying = on_fault in ("resume", "skip")
-        for c in range(n_chunks):
+        for c in range(start_chunk, n_chunks):
             # The per-chunk checkpoint: the last good NetworkState, before
             # this chunk's feeds are staged.  Restoring it re-runs (or
             # skips) the chunk with actor/FIFO history intact.
@@ -1156,6 +1327,13 @@ class Program:
                 try:
                     chunk_res = self.run(base)
                     state = chunk_res.state
+                    if chunk_res.fire_counts is not None:
+                        if acc_counts is None:
+                            acc_counts = {}
+                        for k, v in chunk_res.fire_counts.items():
+                            acc_counts[k] = acc_counts.get(k, 0) + int(v)
+                    if chunk_res.sweeps is not None:
+                        acc_sweeps += int(chunk_res.sweeps)
                     if chunk_res.trace is not None:
                         chunk_traces.append(chunk_res.trace)
                     # Guard collect() immediately (not after the loop): the
@@ -1187,6 +1365,20 @@ class Program:
                                 f"failed after {attempts} attempt(s): "
                                 f"{err.args[0]}",)
                     raise
+            if checkpoint_dir is not None and (
+                    (c + 1) % checkpoint_every == 0 or c + 1 == n_chunks):
+                # Snapshot AFTER the chunk commits: the payload is the
+                # full progress (state, fetched windows, fire counts,
+                # sweeps, trace ring) and the manifest's step is the count
+                # of chunks durably done.  A kill between snapshots loses
+                # at most checkpoint_every chunks of work, never data
+                # integrity (the writer commits by atomic rename).
+                self._save_stream_snapshot(
+                    checkpoint_dir, c + 1, n_chunks, chunk, total, state,
+                    outs, acc_counts, acc_sweeps, chunk_traces)
+        self.last_stream_fire_counts = (dict(acc_counts)
+                                        if acc_counts is not None else None)
+        self.last_stream_sweeps = acc_sweeps
         self._last_stream = {
             "chunks": n_chunks, "persistent": False,
             "staged_bytes_per_chunk": ring_bytes + slab_bytes,
@@ -1197,6 +1389,316 @@ class Program:
         # and occupancy series read as a single run.
         self.last_stream_trace = merge_traces(chunk_traces)
         return {f: jnp.concatenate(ws, axis=0) for f, ws in outs.items()}
+
+    # ------------------------------------------------------------------ #
+    # Durable snapshots: payload <-> plain-container serialization.
+    # ------------------------------------------------------------------ #
+    def _save_stream_snapshot(self, directory: str, done_chunks: int,
+                              n_chunks: int, chunk: int, total: int,
+                              state: NetworkState, outs: Dict[str, list],
+                              counts: Optional[Dict[str, int]], sweeps: int,
+                              traces: List[Trace]) -> None:
+        payload = {
+            "state": self._state_payload(state),
+            "outs": {f: [np.asarray(w) for w in ws]
+                     for f, ws in outs.items()},
+            "fire_counts": dict(counts) if counts is not None else None,
+            "sweeps": int(sweeps),
+            "traces": [_trace_to_payload(t) for t in traces],
+        }
+        meta = {
+            "kind": "stream", "chunk": int(done_chunks),
+            "n_chunks": int(n_chunks), "chunk_windows": int(chunk),
+            "total_windows": int(total), "mode": self.plan.mode,
+            "devices": int(self.plan.devices),
+            "feed_fifos": sorted(self._feed_by_fifo),
+            "fetch_fifos": sorted(self._fetch_by_fifo),
+        }
+        save_stream_checkpoint(directory, int(done_chunks), payload, meta)
+
+    def _state_payload(self, state: NetworkState) -> Dict[str, Any]:
+        """NetworkState -> plain containers of arrays (name-keyed, so the
+        snapshot survives pytree-registration details of actor states)."""
+        fifos = {name: {"buf": np.asarray(fs.buf), "rd": np.asarray(fs.rd),
+                        "wr": np.asarray(fs.wr), "occ": np.asarray(fs.occ)}
+                 for name, fs in zip(state.fifo_names, state.fifos)}
+        actors = {name: [np.asarray(leaf) for leaf in jax.tree.leaves(a)]
+                  for name, a in zip(state.actor_names, state.actors)}
+        return {"fifos": fifos, "actors": actors}
+
+    def _state_from_payload(self, payload: Mapping[str, Any]) -> NetworkState:
+        """Rebuild a NetworkState on this program's network from a
+        snapshot payload, validating names/shapes and restoring each
+        actor's pytree structure from the template init state."""
+        template = self.network.init_state()
+        fifos = []
+        for name, fs in zip(template.fifo_names, template.fifos):
+            if name not in payload["fifos"]:
+                raise CheckpointIntegrityError(
+                    f"snapshot has no channel {name!r}; it was taken on a "
+                    "different network")
+            d = payload["fifos"][name]
+            buf = jnp.asarray(np.asarray(d["buf"]), fs.buf.dtype)
+            if buf.shape != fs.buf.shape:
+                raise CheckpointIntegrityError(
+                    f"snapshot channel {name!r} ring has shape "
+                    f"{tuple(np.asarray(d['buf']).shape)}, this network "
+                    f"allocates {tuple(fs.buf.shape)}; capacities (Eq. 1) "
+                    "or token shapes differ")
+            fifos.append(FifoState(
+                buf=buf, rd=jnp.asarray(np.asarray(d["rd"]), jnp.int32),
+                wr=jnp.asarray(np.asarray(d["wr"]), jnp.int32),
+                occ=jnp.asarray(np.asarray(d["occ"]), jnp.int32)))
+        actors = []
+        for name, a in zip(template.actor_names, template.actors):
+            if name not in payload["actors"]:
+                raise CheckpointIntegrityError(
+                    f"snapshot has no actor {name!r}; it was taken on a "
+                    "different network")
+            tmpl_leaves, treedef = jax.tree.flatten(a)
+            saved = payload["actors"][name]
+            if len(saved) != len(tmpl_leaves):
+                raise CheckpointIntegrityError(
+                    f"snapshot actor {name!r} carries {len(saved)} state "
+                    f"leaves, this network expects {len(tmpl_leaves)}")
+            leaves = []
+            for tl, sl in zip(tmpl_leaves, saved):
+                arr = jnp.asarray(np.asarray(sl), jnp.asarray(tl).dtype)
+                if arr.shape != jnp.asarray(tl).shape:
+                    raise CheckpointIntegrityError(
+                        f"snapshot actor {name!r} leaf has shape "
+                        f"{tuple(arr.shape)}, expected "
+                        f"{tuple(jnp.asarray(tl).shape)}")
+                leaves.append(arr)
+            actors.append(jax.tree.unflatten(treedef, leaves))
+        return dataclasses.replace(template, fifos=tuple(fifos),
+                                   actors=tuple(actors))
+
+    def resume_stream(self, checkpoint_dir: str, feeds: Mapping[str, Any],
+                      on_fault: str = "raise", max_retries: int = 2,
+                      checkpoint_every: int = 1) -> Dict[str, jax.Array]:
+        """Continue an interrupted ``stream(checkpoint_dir=...)`` run.
+
+        Call it on a freshly compiled program over the same network with
+        the SAME feeds: the newest intact snapshot under
+        ``checkpoint_dir`` restores the network state, fetched windows,
+        fire counts, sweep total and trace ring, and the chunk loop
+        continues at the first unfinished chunk.  The returned windows —
+        and every piece of telemetry — are bit-identical to the
+        uninterrupted run (Kahn determinism: each chunk is a pure
+        function of the restored state and its feed slice).  Snapshots
+        that fail their CRC (torn by the kill) are skipped in favor of
+        the next-newest intact one.
+        """
+        arrays, total, chunk, n_chunks, slab_bytes, ring_bytes = \
+            self._prepare_stream(feeds, on_fault, max_retries, False,
+                                 checkpoint_dir, checkpoint_every)
+        payload, meta, step = load_stream_checkpoint(checkpoint_dir)
+        if meta.get("kind") != "stream":
+            raise ValueError(
+                f"resume_stream: {checkpoint_dir!r} holds a "
+                f"{meta.get('kind')!r} checkpoint; those resume via "
+                "Program.resume_run")
+        if (int(meta["chunk_windows"]) != chunk
+                or int(meta["total_windows"]) != total):
+            raise ValueError(
+                f"resume_stream: snapshot covers chunks of "
+                f"{meta['chunk_windows']} windows over a "
+                f"{meta['total_windows']}-window stream, but this program "
+                f"streams {chunk}-window chunks over {total} windows; "
+                "resume with the original plan and feeds")
+        state = self._state_from_payload(payload["state"])
+        outs: Dict[str, list] = {
+            f: [jnp.asarray(w) for w in payload["outs"].get(f, [])]
+            for f in self._fetch_by_fifo}
+        counts = (dict(payload["fire_counts"])
+                  if payload.get("fire_counts") is not None else None)
+        traces = [_trace_from_payload(d) for d in payload.get("traces", [])]
+        report: List[Dict[str, Any]] = []
+        self.last_stream_report = report
+        return self._stream_chunked(
+            arrays, total, chunk, n_chunks, on_fault, max_retries,
+            slab_bytes, ring_bytes, report, checkpoint_dir, checkpoint_every,
+            start_chunk=int(meta["chunk"]), state=state, outs=outs,
+            traces=traces, counts=counts, sweeps=int(payload.get("sweeps", 0)))
+
+    # ------------------------------------------------------------------ #
+    # Durable segmented runs: run() for quiescence graphs, checkpointed
+    # every N sweeps so a killed process resumes bit-identically.
+    # ------------------------------------------------------------------ #
+    def _segment_program(self, every_sweeps: int) -> "Program":
+        seg = self._segment_progs.get(every_sweeps)
+        if seg is None:
+            seg = Program(self.source_network,
+                          dataclasses.replace(self.plan,
+                                              max_sweeps=every_sweeps))
+            self._segment_progs[every_sweeps] = seg
+        return seg
+
+    def _run_one_segment(self, seg_prog: "Program",
+                         state: Any) -> Tuple[RunResult, bool]:
+        """Run one bounded segment; returns (result, stalled).
+
+        A segment that exhausts its sweep budget without quiescing is the
+        NORMAL case mid-run, so the stall diagnostics a plain ``run()``
+        would raise/warn about are re-read as "segment boundary" — but a
+        segment that stalls with real fault flags set still raises.
+        """
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                res = seg_prog.run(state)
+        except NetworkFaultError as err:
+            diag = err.diagnostics
+            if (diag is not None and diag.stalled and not diag.faults
+                    and getattr(err, "result", None) is not None):
+                return err.result, True
+            raise
+        return res, bool(res.diagnostics.stalled
+                         if res.diagnostics is not None else False)
+
+    def run_checkpointed(self, checkpoint_dir: str, every_sweeps: int,
+                         state: Optional[Any] = None,
+                         keep: int = 3) -> RunResult:
+        """``run()`` with durable progress snapshots every ``every_sweeps``.
+
+        The run is split into bounded segments (a twin program with
+        ``max_sweeps=every_sweeps``); after each segment the full
+        :class:`NetworkState`, accumulated fire counts, sweep total and
+        trace ring are committed to ``checkpoint_dir`` as a CRC'd,
+        atomically-renamed snapshot.  After a process kill,
+        :meth:`resume_run` continues from the newest intact snapshot and
+        the final :class:`RunResult` is bit-identical to the
+        uninterrupted run — each sweep is a deterministic function of the
+        state, so cutting the run at sweep boundaries changes nothing but
+        wall time.  Works at any ``devices=`` count (the sharded runner
+        takes and returns host exit-merged states).
+
+        Only modes that run to data-dependent quiescence segment
+        meaningfully (``dynamic``, ``megakernel``); heterogeneous plans
+        checkpoint through ``stream(checkpoint_dir=...)`` instead.
+        """
+        if self.plan.mode not in ("dynamic", "megakernel"):
+            raise ValueError(
+                f"Program.run_checkpointed: mode {self.plan.mode!r} runs a "
+                "fixed iteration count, not to quiescence; checkpoint "
+                "streams via stream(checkpoint_dir=...) instead")
+        if self.plan.accelerated is not None:
+            raise ValueError(
+                "Program.run_checkpointed: heterogeneous plans execute via "
+                "stream(); use stream(checkpoint_dir=...) for durability")
+        if not isinstance(every_sweeps, int) or isinstance(every_sweeps, bool) \
+                or every_sweeps < 1:
+            raise ValueError(
+                f"Program.run_checkpointed: every_sweeps must be an int "
+                f">= 1, got {every_sweeps!r}")
+        st = self.init_state() if state is None else state
+        return self._run_segments(self._segment_program(every_sweeps), st,
+                                  counts=None, sweeps_total=0, traces=[],
+                                  segment=0, checkpoint_dir=checkpoint_dir,
+                                  every_sweeps=every_sweeps, keep=keep)
+
+    def _run_segments(self, seg_prog: "Program", st: Any,
+                      counts: Optional[Dict[str, int]], sweeps_total: int,
+                      traces: List[Trace], segment: int, checkpoint_dir: str,
+                      every_sweeps: int, keep: int) -> RunResult:
+        while True:
+            res, stalled = self._run_one_segment(seg_prog, st)
+            st = res.state
+            if res.fire_counts is not None:
+                if counts is None:
+                    counts = {}
+                for k, v in res.fire_counts.items():
+                    counts[k] = counts.get(k, 0) + int(v)
+            if res.sweeps is not None:
+                sweeps_total += int(res.sweeps)
+            if res.trace is not None:
+                traces.append(res.trace)
+            segment += 1
+            done = not stalled
+            over_budget = stalled and sweeps_total >= self.plan.max_sweeps
+            payload = {
+                "state": self._state_payload(
+                    st if isinstance(st, NetworkState)
+                    else self.network.state_from_dict(st)),
+                "outs": {},
+                "fire_counts": dict(counts) if counts is not None else None,
+                "sweeps": int(sweeps_total),
+                "traces": [_trace_to_payload(t) for t in traces],
+            }
+            meta = {"kind": "run", "segment": int(segment),
+                    "every_sweeps": int(every_sweeps),
+                    "done": bool(done or over_budget),
+                    "mode": self.plan.mode,
+                    "devices": int(self.plan.devices)}
+            save_stream_checkpoint(checkpoint_dir, segment, payload, meta,
+                                   keep=keep)
+            if over_budget:
+                # Mirror run()'s budget-exhausted contract on the FULL
+                # budget (the segment budget is an implementation detail).
+                if self.plan.guards and res.diagnostics is not None:
+                    err = NetworkFaultError(res.diagnostics)
+                    err.result = self._final_run_result(
+                        st, counts, sweeps_total, traces, res)
+                    raise err
+                warnings.warn(
+                    f"Program.run_checkpointed: stalled after "
+                    f"{sweeps_total} sweeps (max_sweeps="
+                    f"{self.plan.max_sweeps}) without quiescing",
+                    RuntimeWarning, stacklevel=2)
+                done = True
+            if done:
+                final = self._final_run_result(st, counts, sweeps_total,
+                                               traces, res)
+                self._last = final
+                self._last_is_stream_chunk = False
+                return final
+
+    def _final_run_result(self, st: Any, counts: Optional[Dict[str, int]],
+                          sweeps_total: int, traces: List[Trace],
+                          res: RunResult) -> RunResult:
+        return RunResult(
+            state=st,
+            fire_counts=dict(counts) if counts is not None else None,
+            sweeps=sweeps_total if res.sweeps is not None else None,
+            diagnostics=res.diagnostics,
+            trace=merge_traces(traces) if traces else None)
+
+    def resume_run(self, checkpoint_dir: str, keep: int = 3) -> RunResult:
+        """Continue (or recover the result of) a ``run_checkpointed``.
+
+        Loads the newest intact snapshot under ``checkpoint_dir``: if the
+        run had already quiesced (``done``), the final
+        :class:`RunResult` is reconstructed from the snapshot; otherwise
+        the segment loop continues until quiescence.  Either way the
+        result is bit-identical to the uninterrupted run.
+        """
+        payload, meta, step = load_stream_checkpoint(checkpoint_dir)
+        if meta.get("kind") != "run":
+            raise ValueError(
+                f"resume_run: {checkpoint_dir!r} holds a "
+                f"{meta.get('kind')!r} checkpoint; those resume via "
+                "Program.resume_stream")
+        st = self._state_from_payload(payload["state"])
+        counts = (dict(payload["fire_counts"])
+                  if payload.get("fire_counts") is not None else None)
+        sweeps_total = int(payload.get("sweeps", 0))
+        traces = [_trace_from_payload(d) for d in payload.get("traces", [])]
+        if meta.get("done"):
+            final = RunResult(
+                state=st,
+                fire_counts=dict(counts) if counts is not None else None,
+                sweeps=sweeps_total if sweeps_total else None,
+                diagnostics=None,
+                trace=merge_traces(traces) if traces else None)
+            self._last = final
+            self._last_is_stream_chunk = False
+            return final
+        return self._run_segments(
+            self._segment_program(int(meta["every_sweeps"])), st,
+            counts=counts, sweeps_total=sweeps_total, traces=traces,
+            segment=int(meta["segment"]), checkpoint_dir=checkpoint_dir,
+            every_sweeps=int(meta["every_sweeps"]), keep=keep)
 
     # ------------------------------------------------------------------ #
     def stats(self) -> ProgramStats:

@@ -43,6 +43,14 @@ cross devices (``Network.validate_partition``, same Fig. 2 copy-back
 race) — the copy-back executes on the producer, whose ring replica is
 authoritative and is what the barrier ships.
 
+The exit-merge is also what makes the PR 10 durability layer free at
+``devices=k``: the runner takes a *host* replicated NetworkState and
+returns one, so ``Program.run_checkpointed`` can cut a sharded run at
+any sweep boundary, snapshot the merged state, and resume on a fresh
+process/mesh — the restored state re-enters through the same
+``in_specs=(P(),)`` replication, and Kahn determinism makes the resumed
+run bit-identical to the uninterrupted one.
+
 Everything here is testable on a CPU host via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (see
 ``tests/test_shard.py``); no TPU is needed to pin the semantics.

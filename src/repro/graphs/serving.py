@@ -90,7 +90,23 @@ C_FIN = 5       # finished last step (freed + collected next firing)
 C_LAST = 6      # last produced token (decode_step input)
 C_NEW = 7       # admitted this firing (decode runs prefill for the row)
 C_LAT = 8       # scratch: completion latency in steps (finish extraction)
-HEADER = 9
+C_STATUS = 9    # retirement status code (STATUS_*)
+C_DEADLINE = 10  # absolute retire-by step (NO_DEADLINE = unconstrained)
+C_AGE = 11      # decode steps survived in a slot (admission resets to 0)
+HEADER = 12
+
+# Retirement status codes carried in C_STATUS and collected per request
+# by the retire sink.
+STATUS_OK = 0        # finished normally (EOS or budget)
+STATUS_TIMEOUT = 1   # deadline expired (in flight or while waiting)
+STATUS_SHED = 2      # shed by admission under queue overflow
+STATUS_FAULT = 3     # quarantined after a guarded-run fault
+
+# Every slot-table value — token ids, positions, counters, deadlines —
+# is a non-negative i32 below 2**30; the channels declare this as their
+# guard domain, so a poisoned row trips the DOMAIN fault bit on write.
+NO_DEADLINE = 2**30 - 1
+SLOT_DOMAIN = (0.0, float(2**30))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +117,9 @@ class ServingWorkload:
     prompt_lens: np.ndarray   # (R,) i32
     budgets: np.ndarray       # (R,) i32 per-request max_new (>= 1)
     arrivals: np.ndarray      # (R,) i32 arrival step, ascending
+    # Absolute retire-by step per request; None = no deadlines
+    # (every entry NO_DEADLINE).
+    deadlines: Optional[np.ndarray] = None
 
 
 # --------------------------------------------------------------------- #
@@ -177,10 +196,18 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
                           batch_size: int, max_prompt: int, max_new: int,
                           eos_id: Optional[int] = None,
                           kernel_impl: str = "xla",
+                          queue_depth: Optional[int] = None,
                           check_bounds: bool = True,
                           return_bounds: bool = False) -> Network:
     """Build the admission/gate/decode/merge/retire serving network with
     ``workload`` staged as the host-fed arrival queue.
+
+    ``queue_depth`` bounds the waiting queue: arrived requests that would
+    queue deeper than ``queue_depth`` behind this firing's admissions are
+    shed (``STATUS_SHED``); ``None`` queues without bound.  Requests whose
+    deadline passes — waiting or in flight — retire as ``STATUS_TIMEOUT``.
+    Both are rate-0 outcomes of the same admission firing: shedding is
+    backpressure expressed as a dynamic rate, not an error path.
 
     ``return_bounds=True`` returns ``(network, BoundsReport)`` so callers
     can pin the per-channel verdicts the build proved."""
@@ -198,40 +225,109 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
             f"serving: per-request budgets must be in 1..max_new={N}")
     if (np.diff(workload.arrivals) < 0).any():
         raise ValueError("serving: arrival trace must be ascending")
+    if queue_depth is not None and queue_depth < 0:
+        raise ValueError(f"serving: queue_depth={queue_depth} must be >= 0")
+    deadlines_np = (np.full((R,), NO_DEADLINE, np.int32)
+                    if workload.deadlines is None
+                    else np.asarray(workload.deadlines, np.int32))
+    if deadlines_np.shape != (R,):
+        raise ValueError(
+            f"serving: deadlines shape {deadlines_np.shape} != ({R},)")
     eos = jnp.int32(-1 if eos_id is None else eos_id)
     cache_len = P + N
 
     prompts = jnp.asarray(workload.prompts, jnp.int32)
     budgets = jnp.asarray(workload.budgets, jnp.int32)
     arrivals = jnp.asarray(workload.arrivals, jnp.int32)
+    deadlines = jnp.asarray(deadlines_np, jnp.int32)
+    qd = jnp.int32(B + R if queue_depth is None else queue_depth)
 
     # -- admission: static loop head -------------------------------------
     def admission_init():
-        return {"next": jnp.int32(0), "t": jnp.int32(0),
+        return {"taken": jnp.zeros((R,), jnp.int32), "t": jnp.int32(0),
                 "retired": jnp.int32(0)}
 
     def admission_fire(st, ins, rates):
         del rates
+        t = st["t"]
+        idx = jnp.arange(R, dtype=jnp.int32)
         tbl = ins["fb"][0]
+        # In-flight deadline expiry retires the slot exactly like an EOS:
+        # FIN=1 with TIMEOUT status, freed and collected this firing.
+        expired_slot = (tbl[:, C_ACTIVE] > 0) & (tbl[:, C_DEADLINE] < t)
+        tbl = tbl.at[:, C_FIN].set(
+            jnp.where(expired_slot, 1, tbl[:, C_FIN]))
+        tbl = tbl.at[:, C_STATUS].set(
+            jnp.where(expired_slot, STATUS_TIMEOUT, tbl[:, C_STATUS]))
         fin_mask = tbl[:, C_FIN] > 0
         n_fin = jnp.sum(fin_mask.astype(jnp.int32))
         # Completion latency: the finishing token was produced at step
         # t-1; the request waited since its (open-loop) arrival step.
         req = jnp.clip(tbl[:, C_REQ], 0, R - 1)
-        lat = (st["t"] - 1) - arrivals[req]
+        lat = (t - 1) - arrivals[req]
         fin_rows = jnp.where(fin_mask[:, None],
                              tbl.at[:, C_LAT].set(lat), 0)
         tbl = jnp.where(fin_mask[:, None], 0, tbl)          # free the slots
         free = tbl[:, C_ACTIVE] == 0
-        idx = jnp.arange(R, dtype=jnp.int32)
-        waiting = (idx >= st["next"]) & (arrivals <= st["t"])
-        n_wait = jnp.sum(waiting.astype(jnp.int32))
+
+        # The waiting queue is the arrived-but-unserved request set; the
+        # ``taken`` vector (not a scalar pointer) lets sheds punch holes
+        # in arrival order.
+        waiting = (st["taken"] == 0) & (arrivals <= t)
+        expired_wait = waiting & (deadlines < t)
+        admissible = waiting & ~expired_wait
+        adm_rank = jnp.cumsum(admissible.astype(jnp.int32)) - 1
         n_free = jnp.sum(free.astype(jnp.int32))
-        k = jnp.minimum(n_wait, n_free)
-        # j-th free slot takes the j-th waiting request (arrival order).
+        k = jnp.minimum(jnp.sum(admissible.astype(jnp.int32)), n_free)
+        admit_req = admissible & (adm_rank < k)
+        # Queue overflow: admissible requests that would sit deeper than
+        # queue_depth behind this firing's k admissions are shed.
+        overflow = admissible & (adm_rank >= k + qd)
+
+        # Shed/timeout records ride the free rows of the fin output —
+        # at most B - n_fin per firing, the rest stay queued (graceful
+        # backlog, never silent drops).
+        to_shed = expired_wait | overflow
+        shed_status = jnp.where(expired_wait, STATUS_TIMEOUT, STATUS_SHED)
+        shed_rank = jnp.cumsum(to_shed.astype(jnp.int32)) - 1
+        n_room = B - n_fin
+        emit = to_shed & (shed_rank < n_room)
+        n_shed = jnp.sum(emit.astype(jnp.int32))
+        # Scatter-by-rank: j-th emitted shed lands in the j-th fin-free
+        # row (out-of-range indices drop, so ranks >= B are inert).
+        req_by_rank = jnp.zeros((B,), jnp.int32).at[
+            jnp.where(emit, shed_rank, B)].set(idx, mode="drop")
+        room = ~fin_mask
+        room_rank = jnp.cumsum(room.astype(jnp.int32)) - 1
+        take = room & (room_rank < n_shed)
+        sreq = req_by_rank[jnp.clip(room_rank, 0, B - 1)]
+        shed_header = jnp.stack([
+            jnp.zeros((B,), jnp.int32),           # ACTIVE
+            sreq,                                 # REQ
+            jnp.zeros((B,), jnp.int32),           # POS
+            jnp.zeros((B,), jnp.int32),           # PROD
+            budgets[sreq],                        # BUDGET
+            jnp.ones((B,), jnp.int32),            # FIN (collected by retire)
+            jnp.zeros((B,), jnp.int32),           # LAST
+            jnp.zeros((B,), jnp.int32),           # NEW
+            t - arrivals[sreq],                   # LAT: age at shed
+            shed_status[jnp.clip(sreq, 0, R - 1)],  # STATUS
+            deadlines[sreq],                      # DEADLINE
+            jnp.zeros((B,), jnp.int32),           # AGE
+        ], axis=1)
+        shed_rows = jnp.concatenate(
+            [shed_header, jnp.zeros((B, P + N), jnp.int32)], axis=1)
+        fin_rows = jnp.where(take[:, None], shed_rows, fin_rows)
+
+        # j-th free slot takes the j-th admissible request (arrival
+        # order; with no deadlines and unbounded queue this reduces to
+        # the PR 7 contiguous-pointer admission bit-for-bit).
         free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
         admit = free & (free_rank < k)
-        newreq = jnp.clip(st["next"] + free_rank, 0, R - 1)
+        req_by_arank = jnp.zeros((B,), jnp.int32).at[
+            jnp.where(admit_req, adm_rank, B)].set(idx, mode="drop")
+        newreq = jnp.clip(req_by_arank[jnp.clip(free_rank, 0, B - 1)],
+                          0, R - 1)
         header = jnp.stack([
             jnp.ones((B,), jnp.int32),            # ACTIVE
             newreq,                               # REQ
@@ -242,17 +338,22 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
             jnp.zeros((B,), jnp.int32),           # LAST
             jnp.ones((B,), jnp.int32),            # NEW
             jnp.zeros((B,), jnp.int32),           # LAT
+            jnp.full((B,), STATUS_OK, jnp.int32),  # STATUS
+            deadlines[newreq],                    # DEADLINE
+            jnp.zeros((B,), jnp.int32),           # AGE
         ], axis=1)
         new_rows = jnp.concatenate(
             [header, prompts[newreq], jnp.zeros((B, N), jnp.int32)], axis=1)
         tbl = jnp.where(admit[:, None], new_rows, tbl)
         n_active = jnp.sum((tbl[:, C_ACTIVE] > 0).astype(jnp.int32))
+        n_out = n_fin + n_shed
         # ONE broadcast token: every control port gets the same traced
         # value, which is what lets the builder prove the feeder ports
         # equal and mark the xa/y/fina channels matched.
-        ctl = jnp.stack([n_active, n_fin, k])
-        st = {"next": st["next"] + k, "t": st["t"] + 1,
-              "retired": st["retired"] + n_fin}
+        ctl = jnp.stack([n_active, n_out, k])
+        taken = jnp.where(admit_req | emit, 1, st["taken"])
+        st = {"taken": taken, "t": t + 1,
+              "retired": st["retired"] + n_out}
         return st, {"table": tbl, "x": tbl, "fin": fin_rows,
                     "c_gate": ctl, "c_dec": ctl, "c_merge": ctl,
                     "c_ret": ctl}
@@ -360,6 +461,9 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
             jnp.where(active, y, tbl[:, C_LAST]),                 # LAST
             jnp.zeros((B,), jnp.int32),                           # NEW
             tbl[:, C_LAT],
+            tbl[:, C_STATUS],                       # STATUS (OK on EOS fin)
+            tbl[:, C_DEADLINE],
+            tbl[:, C_AGE] + active.astype(jnp.int32),             # AGE
         ], axis=1)
         fb = jnp.concatenate([header, tbl[:, HEADER:HEADER + P], gen],
                              axis=1)
@@ -373,6 +477,7 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
         return {"gen": jnp.zeros((R, N), jnp.int32),
                 "lens": jnp.zeros((R,), jnp.int32),
                 "lat": jnp.zeros((R,), jnp.int32),
+                "status": jnp.zeros((R,), jnp.int32),
                 "done": jnp.zeros((R,), jnp.int32)}
 
     def retire_control(tok):
@@ -388,6 +493,8 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
             "gen": st["gen"].at[req].set(gen, mode="drop"),
             "lens": st["lens"].at[req].set(rows[:, C_PROD], mode="drop"),
             "lat": st["lat"].at[req].set(rows[:, C_LAT], mode="drop"),
+            "status": st["status"].at[req].set(rows[:, C_STATUS],
+                                               mode="drop"),
             "done": st["done"].at[req].set(1, mode="drop"),
         }, {}
 
@@ -406,21 +513,22 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
     # grid cores or mesh devices (ExecutionPlan(devices=k), see
     # repro.core.shard) — and the whole serving graph shards without a
     # device_assign constraint.
-    b.connect("merge.fb", "admission.fb", token_shape=tbl_shape,
-              dtype=tok_i32, delay=1,
-              initial_token=jnp.zeros(tbl_shape, jnp.int32), name="fb")
-    b.connect("admission.table", "merge.table", token_shape=tbl_shape,
-              dtype=tok_i32, name="table")
-    b.connect("admission.x", "gate.x", token_shape=tbl_shape,
-              dtype=tok_i32, name="x")
-    b.connect("admission.fin", "gate.fin", token_shape=tbl_shape,
-              dtype=tok_i32, name="fin")
-    b.connect("gate.xa", "decode.x", token_shape=tbl_shape,
-              dtype=tok_i32, name="xa")
+    # Slot-table channels declare SLOT_DOMAIN + the request-id column:
+    # guarded runs flag a poisoned row with the DOMAIN fault bit the
+    # moment admission writes it, and row_id_col lets fault / feed
+    # reports name the offending request, not just the channel.
+    slot_kw = dict(token_shape=tbl_shape, dtype=tok_i32,
+                   domain=SLOT_DOMAIN, row_id_col=C_REQ)
+    b.connect("merge.fb", "admission.fb", delay=1,
+              initial_token=jnp.zeros(tbl_shape, jnp.int32), name="fb",
+              **slot_kw)
+    b.connect("admission.table", "merge.table", name="table", **slot_kw)
+    b.connect("admission.x", "gate.x", name="x", **slot_kw)
+    b.connect("admission.fin", "gate.fin", name="fin", **slot_kw)
+    b.connect("gate.xa", "decode.x", name="xa", **slot_kw)
     b.connect("decode.y", "merge.y", token_shape=(B,), dtype=tok_i32,
-              name="y")
-    b.connect("gate.fina", "retire.fin", token_shape=tbl_shape,
-              dtype=tok_i32, name="fina")
+              domain=SLOT_DOMAIN, name="y")
+    b.connect("gate.fina", "retire.fin", name="fina", **slot_kw)
     for ctl_port, actor in (("c_gate", "gate"), ("c_dec", "decode"),
                             ("c_merge", "merge"), ("c_ret", "retire")):
         b.connect(f"admission.{ctl_port}", f"{actor}.c", token_shape=(3,),
@@ -438,3 +546,64 @@ def build_serving_network(cfg: ArchConfig, params: PyTree,
     if return_bounds:
         return net, (b.bounds_report if check_bounds else b.check_bounds())
     return net
+
+
+# --------------------------------------------------------------------- #
+# Fault -> request mapping (the quarantine half of the resilience layer).
+# --------------------------------------------------------------------- #
+def faulted_requests(network: Network, err: Exception,
+                     workload: ServingWorkload) -> List[int]:
+    """Map a guarded serving fault back to the offending request ids.
+
+    Only ``DOMAIN`` faults are mappable — they mean a slot-table row held
+    values outside ``SLOT_DOMAIN``, which (for the fault classes the
+    serving layer models, see ``faultinject.poison_request``) can only
+    have entered through the staged workload.  Two mapping passes:
+
+    * **primary** — scan the staged slabs themselves.  The guarded
+      executor runs to quiescence before raising, so the poisoned row may
+      have transited (and left) several rings; the workload is the one
+      place the culprit is guaranteed to still be visible.
+    * **secondary** — if partial state survived (``err.result.state``),
+      scan the resident windows of each DOMAIN-faulting channel that
+      declared a ``row_id_col``: out-of-domain rows vote with their
+      request-id column.  Catches corruption injected *after* staging
+      (e.g. ``faultinject.poison_tokens`` on a live ring).
+
+    Returns sorted unique request ids; empty when the fault carries no
+    DOMAIN bit (non-request faults — overflow, stall — are not a
+    request's fault and must not quarantine anyone).
+    """
+    diag = getattr(err, "diagnostics", None)
+    faults = diag.faults if diag is not None else ()
+    dom = [f for f in faults if "DOMAIN" in f.faults]
+    if not dom:
+        return []
+    lo, hi = SLOT_DOMAIN
+    R = int(workload.prompts.shape[0])
+    culprits: set = set()
+
+    prompts = np.asarray(workload.prompts)
+    bad_rows = np.any((prompts < lo) | (prompts > hi), axis=1)
+    culprits.update(int(i) for i in np.nonzero(bad_rows)[0])
+    for slab in (workload.budgets, workload.arrivals):
+        vals = np.asarray(slab)
+        bad = (vals < lo) | (vals > hi)
+        culprits.update(int(i) for i in np.nonzero(bad)[0])
+
+    state = getattr(getattr(err, "result", None), "state", None)
+    if state is not None:
+        for f in dom:
+            spec = network.fifos.get(f.fifo)
+            if spec is None or spec.row_id_col is None:
+                continue
+            buf = np.asarray(state.fifo(f.fifo).buf)
+            if buf.ndim < 2:
+                continue
+            rows = buf.reshape(-1, buf.shape[-1])
+            bad = np.any((rows < lo) | (rows > hi), axis=1)
+            for r in np.nonzero(bad)[0]:
+                rid = int(rows[r, spec.row_id_col])
+                if 0 <= rid < R:
+                    culprits.add(rid)
+    return sorted(culprits)

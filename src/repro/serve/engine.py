@@ -47,6 +47,11 @@ class Request:
 class Result:
     tokens: np.ndarray          # generated ids
     prompt_len: int
+    # Retirement status: "ok" | "timeout" | "shed" | "fault".  The legacy
+    # fixed-batch engine always finishes its requests, so only the actor
+    # engine's resilience layer (deadlines, shedding, quarantine) ever
+    # sets a non-"ok" value.
+    status: str = "ok"
 
 
 class Engine:

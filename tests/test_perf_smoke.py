@@ -143,6 +143,41 @@ def test_bench_serving_fast(tmp_path):
             < by_name["serve_stream_chunked"]["staged_bytes_per_chunk"])
 
 
+def test_bench_resilience_fast(tmp_path):
+    from benchmarks.bench_resilience import bench_resilience
+    json_path = str(tmp_path / "BENCH_resilience.json")
+    rows = bench_resilience(fast=True, json_path=json_path)
+    check_rows(rows)
+    # The resilience acceptance claim at tiny sizes: goodput degrades
+    # proportionally to the shed rate — shedding costs the shed work,
+    # not the survivors'.
+    prop = [d for n, _, d in rows if n == "resil_goodput_proportional"]
+    assert len(prop) == 1 and "proportionally: True" in prop[0], prop
+    with open(json_path) as f:
+        records = json.load(f)
+    by_name = {r["name"]: r for r in records}
+    for name in ("resil_baseline", "resil_deadline_light",
+                 "resil_deadline_tight", "resil_quarantine",
+                 "resil_ckpt_off", "resil_ckpt_every_2",
+                 "resil_ckpt_every_8"):
+        assert name in by_name, sorted(by_name)
+        assert by_name[name]["us_per_call"] > 0
+        assert by_name[name]["tokens_per_s"] > 0
+    # Status counts are deterministic structure: the baseline sheds
+    # nothing, the tight deadline sheds at least one request, and the
+    # quarantine cell retires exactly the poisoned request as a fault.
+    assert by_name["resil_baseline"]["n_timeout"] == 0
+    assert by_name["resil_baseline"]["n_shed"] == 0
+    tight = by_name["resil_deadline_tight"]
+    assert tight["n_timeout"] + tight["n_shed"] >= 1
+    assert tight["goodput_fraction"] < 1.0
+    assert by_name["resil_quarantine"]["n_fault"] == 1
+    assert by_name["resil_quarantine"]["retries"] == 1
+    # Checkpoint cadence shows up as segment counts, not lost work.
+    assert (by_name["resil_ckpt_every_2"]["segments"]
+            > by_name["resil_ckpt_every_8"]["segments"])
+
+
 def test_bench_shard_fast(tmp_path):
     from benchmarks.bench_shard import bench_shard
     json_path = str(tmp_path / "BENCH_shard.json")

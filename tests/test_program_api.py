@@ -347,9 +347,18 @@ def test_stream_persistent_feed_identical_and_stages_less():
             < chunked.last_stream_staged_bytes_per_chunk)
     assert (persistent.last_stream_total_staged_bytes
             < chunked.last_stream_total_staged_bytes)
-    with pytest.raises(ValueError, match="persistent=True"):
+    # PR 10 lifted the persistent x on_fault restriction (a faulting
+    # persistent run now falls back to the chunked loop); the remaining
+    # invalid combo is persistent x checkpoint_dir — a single kernel
+    # entry has no chunk boundaries to snapshot at.
+    outs2 = prog.stream({"f_in": jnp.asarray(wins)}, persistent=True,
+                        on_fault="skip")
+    for name in ref:
+        np.testing.assert_array_equal(np.asarray(ref[name]),
+                                      np.asarray(outs2[name]))
+    with pytest.raises(ValueError, match="persistent=True.*checkpoint_dir"):
         prog.stream({"f_in": jnp.asarray(wins)}, persistent=True,
-                    on_fault="skip")
+                    checkpoint_dir="/tmp/nope")
     # collect() stays guarded after a persistent stream too.
     with pytest.raises(ValueError, match="stream"):
         prog.collect("sink")
